@@ -1,0 +1,38 @@
+"""Paper Fig. 11 — throughput vs GPU-memory budget (slot count sweep).
+
+SiDA's data-aware slots vs the data-unaware PrefetchAll streaming under the
+same budget, plus OnDemand.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, get_system, profile_batches, warmed
+from repro.core.baselines import OnDemandServer, PrefetchAllServer
+from repro.core.engine import SiDAEngine
+
+
+def run() -> List[Row]:
+    rows = []
+    E = 16
+    cfg, params, hp = get_system(E)
+    batches = profile_batches(cfg, "sst2", 4, 8)
+    for slots in (2, 4, 8, 16):
+        for name, ctor in (
+            ("sida", lambda: SiDAEngine(cfg, params, hp, slots_per_layer=slots)),
+            ("prefetchall", lambda: PrefetchAllServer(cfg, params, slots_per_layer=slots)),
+            ("ondemand", lambda: OnDemandServer(cfg, params, slots_per_layer=slots)),
+        ):
+            eng = warmed(ctor(), batches)
+            m = (
+                eng.serve(batches, threaded=True)
+                if isinstance(eng, SiDAEngine)
+                else eng.serve(batches)
+            )
+            rows.append(Row(
+                f"fig11/slots{slots}/{name}",
+                m.wall_s * 1e6 / len(batches),
+                tput_tok_s=round(m.throughput, 1),
+                budget_frac=round(slots / E, 3),
+            ))
+    return rows

@@ -1,0 +1,62 @@
+"""Beyond-paper serving benches: autoregressive decode engine (incremental
+hash prediction), int8 host-store H2D reduction, cache-aware scheduling."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, get_system, profile_batches
+from repro.core.decode_engine import SiDADecodeEngine
+from repro.core.engine import SiDAEngine
+
+
+def decode_rows() -> List[Row]:
+    rows = []
+    E = 8
+    cfg, params, hp = get_system(E)
+    for quant in ("none", "int8"):
+        eng = SiDADecodeEngine(
+            cfg, params, hp, slots_per_layer=E // 4, serve_top_k=1,
+            host_quant=quant,
+        )
+        start = np.arange(4, dtype=np.int32) + 1
+        eng.generate(start, steps=4, cache_len=64)      # warmup/compile
+        eng.store.stats.reset()
+        out, m = eng.generate(start, steps=32, cache_len=64)
+        rows.append(Row(
+            f"decode/quant_{quant}", m.wall_s / max(m.steps, 1) * 1e6,
+            tok_s=round(m.tok_s, 1),
+            loads_first=m.loads_per_step[0],
+            loads_last=m.loads_per_step[-1],
+            h2d_mb=round(eng.store.stats.bytes_h2d / 1e6, 3),
+        ))
+    return rows
+
+
+def scheduling_rows() -> List[Row]:
+    rows = []
+    E = 16
+    cfg, params, hp = get_system(E)
+    rng = np.random.default_rng(0)
+    batches = []
+    for i in range(8):  # alternating domains => cache thrash under FIFO
+        lo, hi = (0, cfg.vocab_size // 2) if i % 2 == 0 else (cfg.vocab_size // 2, cfg.vocab_size)
+        batches.append(rng.integers(lo, hi, (4, 32)).astype(np.int32))
+    for lookahead in (1, 4):
+        eng = SiDAEngine(cfg, params, hp, slots_per_layer=4)
+        eng.serve(batches[:1], threaded=False)          # warmup
+        eng.store.stats.reset()
+        m = eng.serve(batches, threaded=True, lookahead=lookahead)
+        rows.append(Row(
+            f"sched/lookahead{lookahead}", m.wall_s / len(batches) * 1e6,
+            tput_tok_s=round(m.throughput, 1),
+            loads=eng.store.stats.loads,
+            hits=eng.store.stats.hits,
+        ))
+    return rows
+
+
+def run() -> List[Row]:
+    return decode_rows() + scheduling_rows()

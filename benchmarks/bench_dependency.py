@@ -1,0 +1,39 @@
+"""Paper Eq. 2 + Figs 6 & 7 — sparse cross-embedding dependency.
+
+Corruption study on the trained miniature MoE: corrupt a fraction p of the
+other tokens / positions and measure how often token i's expert activation
+changes; invert Eq. 2 to estimate ĉ (the paper finds ĉ ∈ [1, 4]).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import CTX, Row, data_for, get_system
+from repro.core.sparsity import corruption_study, estimate_c, expected_phat
+
+
+def run() -> List[Row]:
+    rows = []
+    cfg, params, hp = get_system(8)
+    data = data_for(cfg, seed=7)
+    toks, _, _ = data.sample(2)
+    ps = [0.1, 0.3, 0.6, 0.9]
+    for mode in ("token", "position"):
+        t0 = time.perf_counter()
+        res = corruption_study(
+            params, cfg, toks, ps, n_positions=4, n_trials=2, mode=mode, ctx=CTX
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        L = toks.shape[1]
+        c_hat = estimate_c(list(res), [res[p] for p in res], L)
+        rows.append(Row(
+            f"fig7/{mode}", us,
+            **{f"phat_p{p}": round(res[p], 4) for p in ps},
+            c_hat=c_hat,
+        ))
+    # Fig. 6: Eq. 2 curve samples (pure math)
+    t0 = time.perf_counter()
+    vals = {f"c{c}_p0.3": round(expected_phat(0.3, c, 512), 4) for c in (1, 2, 4, 8)}
+    rows.append(Row("fig6/eq2", (time.perf_counter() - t0) * 1e6, **vals))
+    return rows

@@ -1,0 +1,52 @@
+"""MoE dispatch-strategy ablation (§Perf evidence, beyond paper).
+
+Compares HLO FLOPs and wall time of the three dispatch strategies on the
+same MoE layer: the one-hot einsum (exact but costs blk·E·C·d MACs), the
+index gather/scatter, and — under a mesh — the shard_map expert-parallel
+path. This is the measurement behind choosing "gather" for the 235B
+dry-runs (EXPERIMENTS.md §Perf pair 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs.base import get_config
+from repro.launch.hlo_analysis import analyse_hlo
+from repro.models.attention import ShardingCtx
+from repro.models.moe import init_moe, moe_layer
+
+CTX = ShardingCtx()
+
+
+def run() -> List[Row]:
+    rows = []
+    cfg = get_config("deepseek-moe-16b").reduced()
+    cfg = dataclasses.replace(
+        cfg,
+        moe=dataclasses.replace(cfg.moe, num_experts=16, top_k=2, d_expert=128),
+    )
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256, cfg.d_model)).astype(cfg.dtype)
+
+    for strat in ("einsum", "gather"):
+        fn = jax.jit(lambda p, x: moe_layer(p, x, cfg, CTX, dispatch=strat)[0])
+        lowered = fn.lower(p, x)
+        hlo = analyse_hlo(lowered.compile().as_text())
+        out = fn(p, x)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn(p, x))
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append(Row(
+            f"dispatch/{strat}", us,
+            hlo_gflops=round(hlo["flops"] / 1e9, 3),
+            hlo_gb=round(hlo["bytes"] / 1e9, 3),
+        ))
+    return rows

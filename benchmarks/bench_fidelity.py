@@ -1,0 +1,64 @@
+"""Paper Tables 3 & 4 — perplexity and task-performance preservation when
+the hash function replaces the router (SiDA vs the model's own routing)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CTX, Row, data_for, get_system
+from repro.core.engine import SiDAEngine
+from repro.models.transformer import forward, lm_loss
+
+
+def _ppl(logits, labels) -> float:
+    return float(jnp.exp(lm_loss(logits, jnp.asarray(labels))))
+
+
+def run() -> List[Row]:
+    rows = []
+    for E in (8, 16):
+        cfg, params, hp = get_system(E)
+        data = data_for(cfg, seed=123)  # held-out stream
+        toks, labels, _ = data.sample(16)
+
+        t0 = time.perf_counter()
+        ref_logits = forward(params, cfg, CTX, jnp.asarray(toks))["logits"]
+        ppl_ref = _ppl(ref_logits, labels)
+
+        eng = SiDAEngine(cfg, params, hp, slots_per_layer=E, serve_top_k=1)
+        table = eng.build_table(0, toks)
+        sida_logits = eng.infer(toks, table)
+        ppl_sida = _ppl(jnp.asarray(np.asarray(sida_logits)), labels)
+        us = (time.perf_counter() - t0) * 1e6
+
+        agree = float(
+            (np.asarray(sida_logits).argmax(-1) == np.asarray(ref_logits).argmax(-1))[
+                np.asarray(labels) >= 0
+            ].mean()
+        )
+        rows.append(Row(
+            f"table3_4/E{E}", us,
+            ppl_router=round(ppl_ref, 3),
+            ppl_sida=round(ppl_sida, 3),
+            top1_agreement=round(agree, 4),
+            fidelity_pct=round(100 * min(ppl_ref / ppl_sida, 1.0), 2),
+        ))
+
+        # quality vs memory budget: the flip side of Fig. 11 — under tight
+        # slot budgets some predicted experts are dropped; measure the ppl
+        # cost of each budget point.
+        for slots in (E // 4, E // 2, E):
+            eng_b = SiDAEngine(cfg, params, hp, slots_per_layer=slots, serve_top_k=1)
+            tb = eng_b.build_table(0, toks)
+            lb = eng_b.infer(toks, tb)
+            rows.append(Row(
+                f"fidelity_budget/E{E}/slots{slots}", 0.0,
+                ppl=round(_ppl(jnp.asarray(np.asarray(lb)), labels), 3),
+                ppl_router=round(ppl_ref, 3),
+                budget_frac=round(slots / E, 3),
+            ))
+    return rows

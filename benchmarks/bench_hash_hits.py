@@ -1,0 +1,33 @@
+"""Paper Table 5 — hash hit rate (top-1 / top-3) per dataset profile."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+
+from benchmarks.common import CTX, Row, get_system, profile_batches
+from repro.core.tkd import evaluate_hash_fn
+from repro.models.transformer import forward
+
+
+def run() -> List[Row]:
+    rows = []
+    for E in (8, 16):
+        cfg, params, hp = get_system(E)
+        for profile in ("sst2", "mrpc", "multirc"):
+            toks = profile_batches(cfg, profile, 1, 16)[0]
+            t0 = time.perf_counter()
+            out = forward(
+                params, cfg, CTX, jnp.asarray(toks), collect_router_logits=True
+            )
+            emb = jnp.take(params["embed"], jnp.asarray(toks), axis=0)
+            m = evaluate_hash_fn(hp, emb, out["router_logits"], top=3)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append(Row(
+                f"table5/E{E}/{profile}", us,
+                top1_hit=round(m["top1_hit"], 4),
+                top3_hit=round(m["top3_hit"], 4),
+                chance=round(1.0 / E, 4),
+            ))
+    return rows

@@ -1,0 +1,94 @@
+"""Paper Fig. 3 (MoE overhead breakdown) + Fig. 10 (latency per engine).
+
+Fig. 3 decomposes Standard-serving time into router/dispatch ("MoE
+overhead") vs expert compute ("ideal"), by timing the model with the MoE
+layers replaced by an oracle lookup (the paper's modified implementation).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CTX, Row, get_system, profile_batches, warmed
+from repro.core.baselines import OnDemandServer, PrefetchAllServer, StandardServer
+from repro.core.engine import SiDAEngine
+from repro.core.hash_table import HashTable
+from repro.models.moe import router_topk
+from repro.models.transformer import forward
+
+
+def fig3_moe_overhead() -> List[Row]:
+    rows = []
+    for E in (4, 8, 16):
+        cfg, params, hp = get_system(E)
+        toks = profile_batches(cfg, "sst2", 1, 8)[0]
+
+        full = jax.jit(lambda p, t: forward(p, cfg, CTX, t)["logits"])
+        # "ideal": routing known in advance (lookup table), router not run
+        out = forward(params, cfg, CTX, jnp.asarray(toks), collect_router_logits=True)
+        rl = out["router_logits"]
+        ids, w = router_topk(rl.reshape(-1, E), cfg.moe.top_k)
+        L = rl.shape[0]
+        ids = jnp.asarray(np.asarray(ids).reshape(L, *toks.shape, -1))
+        w = jnp.asarray(np.asarray(w).reshape(L, *toks.shape, -1))
+        ideal = jax.jit(
+            lambda p, t, i_, w_: forward(
+                p, cfg, CTX, t, routing_override=(i_, w_)
+            )["logits"]
+        )
+        # warmup then time
+        jax.block_until_ready(full(params, jnp.asarray(toks)))
+        jax.block_until_ready(ideal(params, jnp.asarray(toks), ids, w))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(full(params, jnp.asarray(toks)))
+        t_full = (time.perf_counter() - t0) / 3
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(ideal(params, jnp.asarray(toks), ids, w))
+        t_ideal = (time.perf_counter() - t0) / 3
+        rows.append(Row(
+            f"fig3/E{E}", t_full * 1e6,
+            ideal_us=round(t_ideal * 1e6, 1),
+            moe_overhead_pct=round(100 * (1 - t_ideal / t_full), 2),
+        ))
+    return rows
+
+
+def fig10_latency() -> List[Row]:
+    rows = []
+    E = 16
+    cfg, params, hp = get_system(E)
+    slots = 4
+    for profile in ("sst2", "multirc"):
+        batches = profile_batches(cfg, profile, 4, 1)  # paper: batch size 1
+        engines = {
+            "standard": StandardServer(cfg, params),
+            "ondemand": OnDemandServer(cfg, params, slots_per_layer=slots),
+            "prefetchall": PrefetchAllServer(cfg, params, slots_per_layer=slots),
+            "sida": SiDAEngine(cfg, params, hp, slots_per_layer=slots),
+        }
+        base = None
+        for name, eng in engines.items():
+            warmed(eng, batches)
+            m = (
+                eng.serve(batches, threaded=True)
+                if isinstance(eng, SiDAEngine)
+                else eng.serve(batches)
+            )
+            lat = m.mean_latency
+            if name == "standard":
+                base = lat
+            rows.append(Row(
+                f"fig10/{profile}/{name}", lat * 1e6,
+                latency_vs_standard=round(lat / max(base, 1e-9), 3),
+            ))
+    return rows
+
+
+def run() -> List[Row]:
+    return fig3_moe_overhead() + fig10_latency()

@@ -1,0 +1,90 @@
+"""Paper Table 2 + Fig. 2 + Fig. 4 + Fig. 8 — memory accounting & saving.
+
+Table 2 is exact parameter arithmetic on the full-size Switch configs.
+Figs 2/4/8 are measured on the trained miniature systems (activation-driven)
+across the three sentence-length profiles (sst2 / mrpc / multirc).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import CTX, Row, get_system, profile_batches
+from repro.configs.base import get_config
+from repro.core.engine import SiDAEngine
+from repro.core.sparsity import (
+    effective_memory_utilization,
+    routing_ids,
+    sentence_sparsity,
+)
+
+
+def table2_memory_occupation() -> List[Row]:
+    rows = []
+    for e in (8, 64, 128, 256):
+        cfg = get_config(f"switch-base-{e}")
+        t0 = time.perf_counter()
+        c = cfg.param_counts()
+        us = (time.perf_counter() - t0) * 1e6
+        bpp = cfg.bytes_per_param()
+        rows.append(Row(
+            f"table2/switch-base-{e}", us,
+            model_gb=round(c["total"] * bpp / 1e9, 3),
+            moe_gb=round(c["moe"] * bpp / 1e9, 3),
+            moe_pct=round(100 * c["moe"] / c["total"], 2),
+        ))
+    return rows
+
+
+def fig2_fig4_sparsity() -> List[Row]:
+    rows = []
+    for E in (4, 8, 16):
+        cfg, params, hp = get_system(E)
+        for profile in ("sst2", "mrpc", "multirc"):
+            toks = profile_batches(cfg, profile, 1, 16)[0]
+            t0 = time.perf_counter()
+            ids = routing_ids(params, cfg, toks, CTX)
+            idle = sentence_sparsity(ids, E)
+            us = (time.perf_counter() - t0) * 1e6
+            util = effective_memory_utilization(cfg, float(idle.mean()))
+            lens = (toks != 0).sum(1)
+            rows.append(Row(
+                f"fig2_4/E{E}/{profile}", us,
+                idle_expert_ratio=round(float(idle.mean()), 4),
+                effective_util=round(util["effective_utilization"], 4),
+                mean_len=round(float(lens.mean()), 1),
+            ))
+    return rows
+
+
+def fig8_memory_reduction() -> List[Row]:
+    """SiDA device-expert-memory reduction under a data-aware slot budget:
+    slots sized to the measured per-batch active-expert count."""
+    rows = []
+    for E in (8, 16):
+        cfg, params, hp = get_system(E)
+        for profile in ("sst2", "mrpc", "multirc"):
+            batches = profile_batches(cfg, profile, 2, 8)
+            # measure active experts per layer to size the slot pool
+            ids = routing_ids(params, cfg, batches[0], CTX)
+            active = max(
+                len(np.unique(ids[l])) for l in range(ids.shape[0])
+            )
+            eng = SiDAEngine(cfg, params, hp, slots_per_layer=active)
+            t0 = time.perf_counter()
+            eng.serve(batches, threaded=False)
+            us = (time.perf_counter() - t0) * 1e6
+            ms = eng.memory_saving()
+            rows.append(Row(
+                f"fig8/E{E}/{profile}", us,
+                reduction=round(ms["reduction"], 4),
+                resident_slots=active,
+                experts=E,
+            ))
+    return rows
+
+
+def run() -> List[Row]:
+    return table2_memory_occupation() + fig2_fig4_sparsity() + fig8_memory_reduction()

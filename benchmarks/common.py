@@ -1,0 +1,140 @@
+"""Shared benchmark infrastructure.
+
+`get_system(E)` returns a *trained* miniature Switch-family system (model +
+hash function + data stream) with E experts per MoE layer — the scaled-down
+analogue of switch-base-{8,64,128,256} that the paper's figures sweep.
+Training is cached under experiments/cache so the full benchmark suite can
+re-run cheaply.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import lru_cache
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.configs.base import get_config
+from repro.core.hash_fn import init_hash_fn
+from repro.core.tkd import train_hash_fn
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.attention import ShardingCtx
+from repro.models.transformer import forward, init_params, n_moe_layers
+from repro.optim.adamw import adamw_init
+
+CTX = ShardingCtx()
+CACHE = os.path.join(os.path.dirname(__file__), "..", "experiments", "cache")
+SEQ = 48
+VOCAB = 512
+
+
+def bench_cfg(E: int):
+    """Miniature Switch with E experts (analogue of switch-base-E·16).
+
+    d_expert is kept large relative to the backbone so the expert FFNs
+    dominate compute/memory exactly as in the real Switch models (Table 2:
+    89–99% of parameters are experts) — the regime where the paper's
+    effects exist.
+    """
+    cfg = get_config("switch-base-8").reduced()
+    return dataclasses.replace(
+        cfg,
+        n_layers=4,
+        d_ff=128,
+        moe=dataclasses.replace(
+            cfg.moe, num_experts=E, top_k=1, capacity_factor=4.0,
+            d_expert=512,
+        ),
+    )
+
+
+def data_for(cfg, profile=None, seed=0) -> SyntheticLM:
+    return SyntheticLM(
+        SyntheticConfig(
+            vocab_size=cfg.vocab_size, seq_len=SEQ, n_domains=max(4, min(16, cfg.moe.num_experts)),
+            profile=profile,
+        ),
+        seed=seed,
+    )
+
+
+@lru_cache(maxsize=None)
+def get_system(E: int, train_steps: int = 80, hash_steps: int = 150):
+    cfg = bench_cfg(E)
+    ck = os.path.join(CACHE, f"sys_E{E}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg), E, d_h=32
+    )
+    if os.path.exists(os.path.join(ck, "model", "manifest.json")):
+        params, _ = load_checkpoint(os.path.join(ck, "model"), like=params)
+        hp, _ = load_checkpoint(os.path.join(ck, "hash"), like=hp)
+        return cfg, params, hp
+
+    data = data_for(cfg)
+    step = jax.jit(make_train_step(cfg, CTX, lr=2e-3))
+    opt = adamw_init(params)
+    for toks, labels in data.batches(8, train_steps):
+        params, opt, _ = step(params, opt, jnp.asarray(toks), jnp.asarray(labels))
+
+    def batches():
+        while True:
+            toks, _, _ = data.sample(8)
+            out = forward(
+                params, cfg, CTX, jnp.asarray(toks), collect_router_logits=True
+            )
+            emb = jnp.take(params["embed"], jnp.asarray(toks), axis=0)
+            yield emb, out["router_logits"]
+
+    hp, _ = train_hash_fn(
+        hp, batches(), steps=hash_steps, lr=3e-3, T=min(30, E), verbose=False
+    )
+    save_checkpoint(os.path.join(ck, "model"), params)
+    save_checkpoint(os.path.join(ck, "hash"), hp)
+    return cfg, params, hp
+
+
+def profile_batches(cfg, profile: str, n: int, batch: int, seed=0):
+    data = data_for(cfg, profile=profile, seed=seed)
+    return [data.sample(batch)[0] for _ in range(n)]
+
+
+def warmed(engine, batches):
+    """Compile/warm an engine outside the timed region, reset its stats."""
+    from repro.core.engine import SiDAEngine
+
+    if isinstance(engine, SiDAEngine):
+        engine.serve(batches[:1], threaded=False)
+        engine.store.stats.reset()
+    else:
+        engine.serve(batches[:1])
+    return engine
+
+
+class Row:
+    """One CSV row: name,us_per_call,derived."""
+
+    def __init__(self, name: str, us: float, **derived):
+        self.name = name
+        self.us = us
+        self.derived = derived
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us:.1f},{d}"
+
+
+def timed(fn, *args, repeats=1):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+        out, jax.Array
+    ) else None
+    return out, (time.perf_counter() - t0) / repeats * 1e6

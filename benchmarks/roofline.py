@@ -1,0 +1,124 @@
+"""Roofline analysis (deliverable g) — reads the dry-run artifacts.
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs_per_dev / peak_FLOP/s
+    memory term     = HLO_bytes_per_dev / HBM_bw
+    collective term = collective_bytes_per_dev / link_bw
+dominant bottleneck = argmax of the three; plus MODEL_FLOPS = 6·N·D (train)
+or 2·N_active·D (inference) and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs × n_devices).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for the whole step (all devices)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    counts = cfg.param_counts()
+    n_active = counts["active"] - counts["embed"]  # matmul-participating
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def analyse_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n_dev = rec["n_devices"]
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collective_total_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["flops"] * n_dev
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "step_lower_bound_s": max(terms.values()),
+        "mem_per_dev_gb": (
+            rec["argument_size_in_bytes"] + rec["temp_size_in_bytes"]
+            + rec["output_size_in_bytes"] - rec["alias_size_in_bytes"]
+        ) / 1e9,
+    }
+
+
+def load_all(mesh: str = "pod") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        r = analyse_record(rec)
+        if r:
+            out.append(r)
+    return out
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful ratio | mem/dev GB |\n|---|---|---|---|---|---|---|---|\n"
+    )
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+        f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+        f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+        f"{r['mem_per_dev_gb']:.2f} |\n"
+        for r in rows
+    )
+    return hdr + body
+
+
+def run():
+    from benchmarks.common import Row
+
+    rows = []
+    for mesh in ("pod", "multipod"):
+        for r in load_all(mesh):
+            rows.append(Row(
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                r["step_lower_bound_s"] * 1e6,
+                dominant=r["dominant"],
+                compute_s=f"{r['t_compute_s']:.3e}",
+                memory_s=f"{r['t_memory_s']:.3e}",
+                collective_s=f"{r['t_collective_s']:.3e}",
+                useful_ratio=round(r["useful_ratio"], 4),
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh in ("pod", "multipod"):
+        rows = load_all(mesh)
+        if rows:
+            print(f"\n## mesh = {mesh}\n")
+            print(markdown_table(rows))

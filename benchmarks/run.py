@@ -1,0 +1,66 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,table5]
+
+Prints ``name,us_per_call,derived`` CSV and writes the same rows to
+experiments/bench/results.json. Paper-artifact index in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SUITES = [
+    ("memory", "benchmarks.bench_memory"),          # Table 2, Figs 2/4/8
+    ("latency", "benchmarks.bench_latency"),        # Figs 3, 10
+    ("throughput", "benchmarks.bench_throughput"),  # Fig 9
+    ("budget", "benchmarks.bench_budget"),          # Fig 11
+    ("hash_hits", "benchmarks.bench_hash_hits"),    # Table 5
+    ("fidelity", "benchmarks.bench_fidelity"),      # Tables 3/4
+    ("dependency", "benchmarks.bench_dependency"),  # Eq. 2, Figs 6/7
+    ("dispatch", "benchmarks.bench_dispatch"),      # beyond-paper ablation
+    ("decode", "benchmarks.bench_decode"),          # beyond-paper serving
+    ("roofline", "benchmarks.roofline"),            # deliverable (g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        mod = importlib.import_module(module)
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"{name}/ERROR,0.0,error={type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(r.csv())
+            all_rows.append({"name": r.name, "us": r.us, **r.derived})
+        dt = time.perf_counter() - t0
+        print(f"# suite {name} done in {dt:.1f}s", file=sys.stderr)
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "results.json"), "w") as f:
+        json.dump(all_rows, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

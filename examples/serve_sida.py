@@ -1,0 +1,47 @@
+"""Serving scenario: memory-budget sweep (paper Fig. 11 style).
+
+Trains a miniature 16-expert Switch MoE + hash function once (cached), then
+sweeps the device expert budget and reports throughput / latency / residency
+for SiDA vs the data-unaware alternatives.
+
+    PYTHONPATH=src python examples/serve_sida.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import get_system, profile_batches, warmed
+from repro.core.baselines import OnDemandServer, PrefetchAllServer
+from repro.core.engine import SiDAEngine
+
+
+def main():
+    E = 16
+    cfg, params, hp = get_system(E)
+    batches = profile_batches(cfg, "mrpc", 6, 8)
+    print(f"arch={cfg.name} E={E}; sweeping device expert budget\n")
+    print(f"{'budget':>8} {'engine':>12} {'tok/s':>9} {'lat ms':>8} "
+          f"{'loads':>6} {'hits':>6} {'evict':>6}")
+    for slots in (2, 4, 8, 16):
+        for name, ctor in (
+            ("sida", lambda: SiDAEngine(cfg, params, hp, slots_per_layer=slots)),
+            ("ondemand", lambda: OnDemandServer(cfg, params, slots_per_layer=slots)),
+            ("prefetchall", lambda: PrefetchAllServer(cfg, params, slots_per_layer=slots)),
+        ):
+            eng = warmed(ctor(), batches)
+            m = (
+                eng.serve(batches, threaded=True)
+                if isinstance(eng, SiDAEngine)
+                else eng.serve(batches)
+            )
+            st = eng.store.stats
+            print(f"{slots:>5}/{E:<2} {name:>12} {m.throughput:9.0f} "
+                  f"{1e3*m.mean_latency:8.1f} {st.loads:6d} {st.hits:6d} "
+                  f"{st.evictions:6d}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Pytree checkpointing: npz shards + JSON manifest. Host-gathered, atomic."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't store bf16: upcast
+            arr = arr.astype(np.float32)  # (lossless; manifest keeps dtype)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, params, step: int = 0, extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    orig_dtypes = {}
+    for tree_path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in tree_path)
+        orig_dtypes[key] = str(np.asarray(leaf).dtype)
+    flat = _flatten(params)
+    manifest = {
+        "step": step,
+        "keys": {
+            k: {"shape": list(v.shape), "dtype": orig_dtypes[k]}
+            for k, v in flat.items()
+        },
+        "extra": extra or {},
+    }
+    # atomic: write temp then rename (np.savez appends .npz if missing)
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp, os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, like=None):
+    """Restore. If `like` pytree given, restore into its structure/dtypes."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k: data[k] for k in data.files}
+    if like is None:
+        return flat, manifest
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    paths, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for path, leaf in leaves_with_path[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        assert list(arr.shape) == list(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], out), manifest

@@ -1,0 +1,186 @@
+"""The SiDA hash function: a 2-layer LSTM with SparseMax attention.
+
+Architecture (paper §3.4.2):
+  compress FC (d_model -> d_h)
+  2-layer LSTM (captures sequential information, lightweight)
+  self-attention over LSTM outputs with **SparseMax** weights (sparse
+  cross-embedding dependency: ĉ ∈ [1,4] critical tokens — §3.4.1)
+  residual connection from the current token's features
+  per-MoE-layer linear heads -> expert logits [L_moe, E]
+
+The predictor runs in the hash-building thread, independent of model
+inference, and its argmax/top-k + softmax-α outputs populate the HashTable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# SparseMax (Martins & Astudillo, 2016) — pure-jnp reference; the Pallas
+# kernel in repro/kernels/sparsemax.py mirrors this.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _sparsemax_last(z: Array) -> Array:
+    K = z.shape[-1]
+    z_sorted = jnp.sort(z, axis=-1)[..., ::-1]
+    z_cum = jnp.cumsum(z_sorted, axis=-1)
+    ks = jnp.arange(1, K + 1, dtype=z.dtype)
+    support = z_sorted * ks > (z_cum - 1.0)
+    k_z = jnp.sum(support, axis=-1, keepdims=True).astype(z.dtype)
+    # support set is a prefix of the sorted sequence (gather-free sum)
+    sum_support = jnp.sum(z_sorted * support, axis=-1, keepdims=True)
+    tau = (sum_support - 1.0) / k_z
+    return jnp.maximum(z - tau, 0.0)
+
+
+def _sparsemax_fwd(z):
+    out = _sparsemax_last(z)
+    return out, out
+
+
+def _sparsemax_bwd(out, g):
+    # Jacobian of the simplex projection: J = diag(s) - s s^T / |S|
+    # with s the support indicator (Martins & Astudillo, Prop. 2).
+    s = (out > 0).astype(g.dtype)
+    k = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1.0)
+    v = jnp.sum(g * s, axis=-1, keepdims=True) / k
+    return ((g - v) * s,)
+
+
+_sparsemax_last.defvjp(_sparsemax_fwd, _sparsemax_bwd)
+
+
+def sparsemax(z: Array, axis: int = -1) -> Array:
+    """Euclidean projection of z onto the probability simplex (exact VJP)."""
+    z = jnp.moveaxis(z, axis, -1)
+    out = _sparsemax_last(z)
+    return jnp.moveaxis(out, -1, axis)
+
+
+# ---------------------------------------------------------------------------
+# LSTM
+# ---------------------------------------------------------------------------
+
+
+def _init_lstm_layer(key, d_in: int, d_h: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": dense_init(k1, d_in, 4 * d_h, jnp.float32),
+        "wh": dense_init(k2, d_h, 4 * d_h, jnp.float32),
+        "b": jnp.zeros((4 * d_h,), jnp.float32).at[d_h : 2 * d_h].set(1.0),  # forget bias
+    }
+
+
+def _lstm_layer(p: dict, x: Array) -> Array:
+    """x: [B, S, d_in] -> [B, S, d_h]."""
+    B, S, _ = x.shape
+    d_h = p["wh"].shape[0]
+    xg = x @ p["wx"] + p["b"]
+
+    def step(carry, xg_t):
+        h, c = carry
+        g = xg_t + h @ p["wh"]
+        i, f, gg, o = jnp.split(g, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(gg)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, d_h), x.dtype)
+    (_, _), hs = jax.lax.scan(step, (h0, h0), xg.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# hash function
+# ---------------------------------------------------------------------------
+
+
+def init_hash_fn(
+    key, d_model: int, n_moe_layers: int, num_experts: int, d_h: int = 256
+) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "compress": dense_init(ks[0], d_model, d_h, jnp.float32),
+        "lstm1": _init_lstm_layer(ks[1], d_h, d_h),
+        "lstm2": _init_lstm_layer(ks[2], d_h, d_h),
+        "attn_q": dense_init(ks[3], d_h, d_h, jnp.float32),
+        "heads": dense_init(ks[4], d_h, n_moe_layers * num_experts, jnp.float32),
+    }
+
+
+def hash_fn_apply(params: dict, emb: Array, num_experts: int,
+                  use_pallas: bool = False, causal: bool = False) -> Array:
+    """emb: [B, S, d_model] token embeddings -> logits [B, S, L_moe, E].
+
+    causal=True masks the SparseMax attention to the past — train with it
+    when the predictor will run incrementally at decode time
+    (core/decode_engine.py); the default bidirectional form is the paper's
+    full-batch look-ahead setting.
+    """
+    E = num_experts
+    L = params["heads"].shape[-1] // E
+    x = jnp.tanh(emb.astype(jnp.float32) @ params["compress"])   # [B,S,dh]
+    h = _lstm_layer(params["lstm1"], x)
+    h = _lstm_layer(params["lstm2"], h)
+    # sparse attention: q=k=v=h (paper: all set to LSTM output sequence)
+    q = h @ params["attn_q"]
+    scores = jnp.einsum("bqd,bkd->bqk", q, h) / math.sqrt(h.shape[-1])
+    if causal:
+        S = scores.shape[-1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None], scores, -1e30)
+    if use_pallas:
+        from repro.kernels.ops import sparsemax as sm_op
+
+        w = sm_op(scores)
+    else:
+        w = sparsemax(scores, axis=-1)
+    a = jnp.einsum("bqk,bkd->bqd", w, h)
+    # residual: the current token is always the most crucial (paper §3.4.2)
+    z = a + h
+    logits = z @ params["heads"]
+    return logits.reshape(*emb.shape[:2], L, E)
+
+
+def hash_fn_param_count(params: dict) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def predict_topk(
+    logits: Array, k: int
+) -> Tuple[Array, Array]:
+    """logits [B,S,L,E] -> (ids [L,B,S,k], α [L,B,S,k]).
+
+    α approximates the router's softmax scaling factor (Eq. 1), renormalised
+    over the predicted top-k — exactly how SiDA consumes the hash table.
+    """
+    vals, ids = jax.lax.top_k(logits, k)                  # [B,S,L,k]
+    alpha = jax.nn.softmax(vals, axis=-1)
+    ids = jnp.moveaxis(ids, 2, 0)                         # [L,B,S,k]
+    alpha = jnp.moveaxis(alpha, 2, 0)
+    return ids.astype(jnp.int32), alpha.astype(jnp.float32)
+
+
+def hash_hit_rate(
+    pred_logits: Array, teacher_ids: Array, top: int = 3
+) -> Array:
+    """Top-`top` hit rate (Table 5): is the teacher's expert among our top-k?
+
+    pred_logits: [B,S,L,E]; teacher_ids: [L,B,S] (the router's argmax).
+    """
+    _, pred = jax.lax.top_k(pred_logits, top)             # [B,S,L,top]
+    pred = jnp.moveaxis(pred, 2, 0)                       # [L,B,S,top]
+    hit = (pred == teacher_ids[..., None]).any(-1)
+    return hit.mean()

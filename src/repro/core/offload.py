@@ -1,0 +1,271 @@
+"""Expert offloading: host-resident expert store + device slot cache.
+
+This is the TPU-native adaptation of SiDA's CPU↔GPU expert offloading
+(DESIGN.md §2). The full expert stacks live in host memory (numpy). On
+device, each MoE layer owns a fixed pool of `slots` (static shape
+[G, S, d, f] so jit never retraces). `prepare(hash_table)` loads exactly the
+experts the hash function predicts will activate — FIFO-evicting under the
+memory budget — and produces per-layer expert→slot translation tables so the
+routing override can address slots directly.
+
+Routers are offloaded entirely: the serving params pytree contains no router
+matrix (the hash table replaces it — paper §3.1 "all routers are offloaded
+to the main memory and do not participate in the forward pass").
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.hash_table import HashTable
+from repro.models.transformer import n_moe_layers, period, sub_kind
+
+Array = jax.Array
+
+EXPERT_TENSORS = ("w_in", "w_gate", "w_out")
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _slot_write(buf: Array, g: Array, slots: Array, w: Array) -> Array:
+    """buf [G,S,...] <- w [n,...] at (g[n], slots[n]); donated => in-place."""
+    return buf.at[g, slots].set(w)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _slot_write_q(buf: Array, g: Array, slots: Array, q: Array, scale: Array) -> Array:
+    """int8 variant: dequantisation happens ON DEVICE, so the host->device
+    transfer moves int8 + per-channel scales (2x fewer bytes than bf16,
+    4x fewer than f32) — SiDA's critical path is exactly these transfers."""
+    w = (q.astype(jnp.float32) * scale).astype(buf.dtype)
+    return buf.at[g, slots].set(w)
+
+
+def quantize_expert(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-output-channel int8 quantisation. w: [..., d_in, d_out]."""
+    absmax = np.abs(w).max(axis=-2, keepdims=True).astype(np.float32)
+    scale = np.maximum(absmax, 1e-8) / 127.0
+    q = np.clip(np.round(w.astype(np.float32) / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+@dataclass
+class TransferStats:
+    bytes_h2d: int = 0
+    loads: int = 0
+    evictions: int = 0
+    hits: int = 0
+    prepare_time: float = 0.0
+
+    def reset(self):
+        self.bytes_h2d = self.loads = self.evictions = self.hits = 0
+        self.prepare_time = 0.0
+
+
+class ExpertStore:
+    """Host store + device slot cache for every MoE layer of a model.
+
+    host_quant="int8" stores experts quantised on host and dequantises on
+    device at load (beyond-paper; the paper notes quantisation is orthogonal
+    — here it composes directly with the offloading path, halving H2D
+    bytes vs bf16). spill_dir enables the paper's §6 hierarchical tier:
+    host arrays live in disk-backed memmaps instead of RAM.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        slots_per_layer: int,
+        host_quant: str = "none",      # "none" | "int8"
+        spill_dir: Optional[str] = None,
+    ):
+        assert cfg.moe.enabled, "ExpertStore requires an MoE config"
+        self.cfg = cfg
+        self.per = period(cfg)
+        self.n_groups = cfg.n_layers // self.per
+        self.moe_subs = [s for s in range(self.per) if sub_kind(cfg, s).get("moe")]
+        self.L = n_moe_layers(cfg)
+        self.E = cfg.moe.num_experts
+        self.S = min(slots_per_layer, self.E)
+        self.quant = host_quant
+        self.stats = TransferStats()
+
+        def _spill(name: str, arr: np.ndarray) -> np.ndarray:
+            if spill_dir is None:
+                return arr
+            import os
+
+            os.makedirs(spill_dir, exist_ok=True)
+            path = os.path.join(spill_dir, f"{name}.npy")
+            mm = np.lib.format.open_memmap(path, mode="w+", dtype=arr.dtype,
+                                           shape=arr.shape)
+            mm[...] = arr
+            mm.flush()
+            return np.lib.format.open_memmap(path, mode="r")
+
+        # --- split params: experts + routers -> host; rest stays on device
+        self.host: Dict[str, Dict[str, np.ndarray]] = {}
+        self.host_scale: Dict[str, Dict[str, np.ndarray]] = {}
+        serve_params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+        for s in self.moe_subs:
+            moe_p = serve_params["blocks"][f"sub{s}"]["moe"]
+            self.host[f"sub{s}"] = {}
+            self.host_scale[f"sub{s}"] = {}
+            for t in EXPERT_TENSORS:
+                w = np.asarray(moe_p[t])
+                if host_quant == "int8":
+                    q, scale = quantize_expert(w)
+                    self.host[f"sub{s}"][t] = _spill(f"sub{s}_{t}", q)
+                    self.host_scale[f"sub{s}"][t] = scale
+                else:
+                    self.host[f"sub{s}"][t] = _spill(f"sub{s}_{t}", w)
+            for t in EXPERT_TENSORS:
+                full = moe_p[t]
+                G, E = full.shape[:2]
+                moe_p[t] = jnp.zeros((G, self.S, *full.shape[2:]), full.dtype)
+            moe_p.pop("router", None)  # routers never participate in forward
+        self.serve_params = serve_params
+
+        # --- cache state per (group, sub): expert->slot, FIFO order
+        self.resident: Dict[Tuple[int, int], Dict[int, int]] = {}
+        self.fifo: Dict[Tuple[int, int], collections.deque] = {}
+        self.free: Dict[Tuple[int, int], List[int]] = {}
+        for g in range(self.n_groups):
+            for s in self.moe_subs:
+                self.resident[(g, s)] = {}
+                self.fifo[(g, s)] = collections.deque()
+                self.free[(g, s)] = list(range(self.S))
+
+    # -- layer indexing: moe layer l = g * len(moe_subs) + j ----------------
+    def layer_to_gs(self, l: int) -> Tuple[int, int]:
+        j = l % len(self.moe_subs)
+        return l // len(self.moe_subs), self.moe_subs[j]
+
+    # ------------------------------------------------------------------
+    def device_bytes(self) -> int:
+        """Bytes of expert weights resident on device (the paper's metric)."""
+        tot = 0
+        for s in self.moe_subs:
+            for t in EXPERT_TENSORS:
+                tot += self.serve_params["blocks"][f"sub{s}"]["moe"][t].nbytes
+        return tot
+
+    def full_expert_bytes(self) -> int:
+        return sum(
+            arr.nbytes for sub in self.host.values() for arr in sub.values()
+        )
+
+    # ------------------------------------------------------------------
+    def plan_layer(self, l: int, needed: np.ndarray) -> List[Tuple[int, int, int]]:
+        """Cache bookkeeping for one layer; returns pending (g, slot, e) loads."""
+        g, s = self.layer_to_gs(l)
+        res = self.resident[(g, s)]
+        fifo = self.fifo[(g, s)]
+        free = self.free[(g, s)]
+        needed_set = set(int(e) for e in needed)
+        pending: List[Tuple[int, int, int]] = []
+        for e in needed:
+            e = int(e)
+            if e in res:
+                self.stats.hits += 1
+                continue
+            if free:
+                slot = free.pop()
+            else:
+                # FIFO eviction — never evict an expert needed right now
+                slot = None
+                for _ in range(len(fifo)):
+                    victim = fifo.popleft()
+                    if victim in needed_set:
+                        fifo.append(victim)   # recycle, try next
+                        continue
+                    slot = res.pop(victim)
+                    self.stats.evictions += 1
+                    break
+                if slot is None:  # everything resident is needed => drop
+                    continue
+            res[e] = slot
+            fifo.append(e)
+            pending.append((g, slot, e))
+            self.stats.loads += 1
+        return pending
+
+    def commit_loads(self, s: int, items: List[Tuple[int, int, int]]) -> None:
+        """Batched host->device writes for sub-slot `s` (one per tensor)."""
+        if not items:
+            return
+        gs = np.array([i[0] for i in items], np.int32)
+        sl = np.array([i[1] for i in items], np.int32)
+        es = np.array([i[2] for i in items], np.int32)
+        moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
+        for t in EXPERT_TENSORS:
+            w_host = self.host[f"sub{s}"][t][gs, es]              # [n, d, f]
+            if self.quant == "int8":
+                scale = self.host_scale[f"sub{s}"][t][gs, es]
+                self.stats.bytes_h2d += w_host.nbytes + scale.nbytes
+                moe_p[t] = _slot_write_q(
+                    moe_p[t], jnp.asarray(gs), jnp.asarray(sl),
+                    jnp.asarray(w_host), jnp.asarray(scale),
+                )
+            else:
+                self.stats.bytes_h2d += w_host.nbytes
+                moe_p[t] = _slot_write(
+                    moe_p[t], jnp.asarray(gs), jnp.asarray(sl), jnp.asarray(w_host)
+                )
+
+    def trans_row(self, l: int) -> np.ndarray:
+        g, s = self.layer_to_gs(l)
+        row = np.full((self.E,), -1, np.int32)
+        for e, slot in self.resident[(g, s)].items():
+            row[e] = slot
+        return row
+
+    def prepare_layer(self, l: int, needed: np.ndarray) -> np.ndarray:
+        """Synchronously load `needed` experts for one layer (OnDemand path)."""
+        t0 = time.perf_counter()
+        if len(needed) > self.S:
+            needed = needed[: self.S]
+        _, s = self.layer_to_gs(l)
+        self.commit_loads(s, self.plan_layer(l, np.asarray(needed)))
+        row = self.trans_row(l)
+        self.stats.prepare_time += time.perf_counter() - t0
+        return row
+
+    def prepare(self, table: HashTable) -> np.ndarray:
+        """Load predicted experts for a whole batch (SiDA look-ahead path).
+
+        Returns the translation table [L, E] expert->slot (-1 = not resident).
+        """
+        t0 = time.perf_counter()
+        trans = np.full((self.L, self.E), -1, np.int32)
+        pending: Dict[int, List[Tuple[int, int, int]]] = {s: [] for s in self.moe_subs}
+        for l in range(self.L):
+            needed = table.active_experts(l)
+            if len(needed) > self.S:
+                # tighter budget than the active set: keep the highest-α-mass
+                mass = table.activation_mass(l, self.E)
+                needed = needed[np.argsort(-mass[needed])][: self.S]
+            _, s = self.layer_to_gs(l)
+            pending[s].extend(self.plan_layer(l, needed))
+            trans[l] = self.trans_row(l)
+        for s, items in pending.items():
+            self.commit_loads(s, items)
+        self.stats.prepare_time += time.perf_counter() - t0
+        return trans
+
+    # ------------------------------------------------------------------
+    def translate(self, table: HashTable, trans: np.ndarray):
+        """(slot_ids [L,B,S,k] int32, weights [L,B,S,k] f32) — misses zeroed."""
+        L, B, S, k = table.expert_ids.shape
+        flat = table.expert_ids.reshape(L, -1)
+        slots = np.take_along_axis(trans, flat, axis=1).reshape(L, B, S, k)
+        w = table.weights * (slots >= 0)
+        return np.maximum(slots, 0).astype(np.int32), w.astype(np.float32)

@@ -1,0 +1,111 @@
+"""Truncated Knowledge Distillation (paper §3.5) + hash-function training.
+
+Objective:  λ·L_CE + L_TKD(T)
+
+L_TKD only matches the teacher router's **top-T** softmax logits — the
+2-layer-LSTM student cannot model the full E-way distribution; truncation
+focuses capacity on the experts that can actually be activated. L_CE (teacher
+argmax as hard label) guarantees prediction accuracy (the hash hit rate).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hash_fn import hash_fn_apply, hash_hit_rate
+
+Array = jax.Array
+
+
+def tkd_loss(
+    student_logits: Array,   # [B, S, L, E]
+    teacher_logits: Array,   # [L, B, S, E] (router logits from the MoE model)
+    T: int = 30,
+    lam: float = 0.005,
+    tau: float = 1.0,
+) -> Tuple[Array, Dict[str, Array]]:
+    t = jnp.moveaxis(teacher_logits, 0, 2).astype(jnp.float32)   # [B,S,L,E]
+    s = student_logits.astype(jnp.float32)
+    E = t.shape[-1]
+    T = min(T, E)
+
+    # --- truncated KD over teacher top-T ---------------------------------
+    # (mask-based rather than gathers: softmax restricted to the teacher's
+    # top-T slots; -inf elsewhere)
+    t_top, _ = jax.lax.top_k(t, T)                                # [B,S,L,T]
+    thresh = t_top[..., -1:]                                      # T-th logit
+    mask = t >= thresh                                            # [B,S,L,E]
+    neg = jnp.float32(-1e30)
+    p = jax.nn.softmax(jnp.where(mask, t / tau, neg), axis=-1)
+    logq = jax.nn.log_softmax(jnp.where(mask, s / tau, neg), axis=-1)
+    kd = -(p * jnp.where(mask, logq, 0.0)).sum(-1).mean() * tau**2
+
+    # --- CE on the teacher argmax (hash-hit accuracy) ---------------------
+    labels = jnp.argmax(t, axis=-1)                               # [B,S,L]
+    onehot = jax.nn.one_hot(labels, E)
+    ce = -(jax.nn.log_softmax(s, axis=-1) * onehot).sum(-1).mean()
+
+    loss = lam * ce + kd
+    acc = (jnp.argmax(s, -1) == labels).mean()
+    return loss, {"kd": kd, "ce": ce, "acc": acc}
+
+
+@partial(jax.jit, static_argnames=("T", "lam", "opt_update"))
+def _train_step(params, opt_state, emb, teacher_logits, T, lam, opt_update):
+    E = teacher_logits.shape[-1]
+
+    def loss_fn(p):
+        s = hash_fn_apply(p, emb, num_experts=E)
+        return tkd_loss(s, teacher_logits, T=T, lam=lam)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state = opt_update(grads, params, opt_state)
+    metrics["loss"] = loss
+    return params, opt_state, metrics
+
+
+def train_hash_fn(
+    params: dict,
+    batches: Iterator[Tuple[Array, Array]],  # (embeddings, teacher router logits)
+    steps: int,
+    lr: float = 5e-5,
+    T: int = 30,
+    lam: float = 0.005,
+    log_every: int = 50,
+    verbose: bool = True,
+):
+    """Offline hash-function training (paper: AdamW, lr 5e-5, λ 0.005, T 30)."""
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    opt_state = adamw_init(params)
+    update = partial(adamw_update, lr=lr, weight_decay=0.01)
+    history = []
+    for step in range(steps):
+        emb, teacher = next(batches)
+        params, opt_state, m = _train_step(
+            params, opt_state, emb, teacher, T, lam, update
+        )
+        if step % log_every == 0 or step == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = step
+            history.append(rec)
+            if verbose:
+                print(
+                    f"  hash-fn step {step:4d}  loss={rec['loss']:.4f} "
+                    f"kd={rec['kd']:.4f} ce={rec['ce']:.4f} acc={rec['acc']:.3f}"
+                )
+    return params, history
+
+
+def evaluate_hash_fn(params, emb, teacher_logits, top: int = 3) -> Dict[str, float]:
+    s = hash_fn_apply(params, emb, num_experts=teacher_logits.shape[-1])
+    labels = jnp.argmax(jnp.moveaxis(teacher_logits, 0, 2), axis=-1)
+    labels = jnp.moveaxis(labels, 2, 0)  # [L,B,S]
+    return {
+        "top1_hit": float(hash_hit_rate(s, labels, top=1)),
+        f"top{top}_hit": float(hash_hit_rate(s, labels, top=top)),
+    }

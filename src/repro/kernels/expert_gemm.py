@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: slot-stacked expert (G)LU FFN — SiDA's serving hot spot.
+
+The inference thread's MoE compute is a batched per-expert FFN over the
+compacted slot buffer: xe [E, C, d] -> act(xe@w_gate) * (xe@w_in) @ w_out.
+On GPU the paper relies on per-expert kernel launches; on TPU we instead
+tile the whole slot stack through one systolic-friendly kernel:
+
+  grid = (E, C/bc, F/bf)   — the f-axis innermost so the [bc, d] output
+                             block accumulates in VMEM across f-tiles
+  VMEM working set per step: x [bc,d] + w_in/w_gate [d,bf] + w_out [bf,d]
+  + out [bc,d] ≈ 10 MB at (bc, bf) = (128, 128), d = 4096 — fits v5e's
+  16 MB VMEM with MXU-aligned (multiples of 128) matmul dims.
+
+Weights stream expert-by-expert from HBM; compute per expert scales with
+its occupied capacity — the TPU analogue of "only invoke activated experts".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _act(h, act: str):
+    if act == "silu":
+        return h * jax.nn.sigmoid(h)
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    return jnp.maximum(h, 0.0)
+
+
+def _ffn_kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str, glu: bool):
+    j = pl.program_id(2)  # f-tile index (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                  # [bc, d]
+    h = jnp.dot(x, wi_ref[0], preferred_element_type=jnp.float32)   # [bc, bf]
+    if glu:
+        g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        h = _act(g, act) * h
+    else:
+        h = _act(h, act)
+    o_ref[...] += jnp.dot(
+        h.astype(x.dtype), wo_ref[0], preferred_element_type=jnp.float32
+    )[None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "glu", "bc", "bf", "interpret")
+)
+def expert_ffn(
+    xe: Array,                  # [E, C, d]
+    w_in: Array,                # [E, d, F]
+    w_gate: Optional[Array],    # [E, d, F] (None => non-gated)
+    w_out: Array,               # [E, F, d]
+    act: str = "silu",
+    bc: int = 128,
+    bf: int = 128,
+    interpret: bool = False,
+    glu: Optional[bool] = None,
+) -> Array:
+    E, C, d = xe.shape
+    F = w_in.shape[-1]
+    glu = (w_gate is not None) if glu is None else glu
+    bc = min(bc, C)
+    bf = min(bf, F)
+    assert C % bc == 0 and F % bf == 0, (C, bc, F, bf)
+    if w_gate is None:
+        w_gate = w_in  # placeholder operand (never read when glu=False)
+
+    grid = (E, C // bc, F // bf)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, act=act, glu=glu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, bf, d), lambda e, i, j: (e, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), xe.dtype),
+        interpret=interpret,
+    )(xe, w_in, w_gate, w_out)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: single-token flash-decode attention over a KV cache.
+
+The serving-path hot spot once experts are resident: one query token
+against a long (possibly ring-buffer) cache. Online-softmax accumulation
+over sequence tiles — running (m, l, acc) live in VMEM scratch; K/V stream
+tile-by-tile from HBM so the cache never occupies VMEM.
+
+  grid = (B, K, S/bs)  — seq tiles innermost
+  scratch: m,l [G, 128], acc [G, D]
+  block: k/v [bs, D], q [G, D]
+
+This kernel is the per-shard "local" computation of the distributed
+flash-decode in models/attention.py (the cross-shard merge stays in
+shard_map); its oracle is kernels/ref.py::flash_decode_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG = -1e30
+
+
+def _decode_kernel(
+    q_ref,        # [1, 1, G, D]
+    k_ref,        # [1, bs, 1, D]
+    v_ref,        # [1, bs, 1, D]
+    sp_ref,       # [1, bs]  slot positions
+    pos_ref,      # [1]      current decode position
+    o_ref,        # [1, 1, G, D]
+    m_ref, l_ref, acc_ref,   # scratch: [G,1], [G,1], [G,D]
+    *, window: int, cap: float, scale: float, n_s: int,
+):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)                   # [bs, D]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    sp = sp_ref[0]                                           # [bs]
+    pos = pos_ref[0]
+    valid = (sp >= 0) & (sp <= pos)
+    if window:
+        valid &= sp > pos - window
+    logits = jnp.where(valid[None, :], logits, NEG)          # [G, bs]
+
+    m_prev = m_ref[...]                                      # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                              # [G, bs]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)                   # [bs, D]
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "bs", "interpret"))
+def flash_decode(
+    q: Array,         # [B, H, D]
+    k: Array,         # [B, S, K, D]
+    v: Array,         # [B, S, K, D]
+    slot_pos: Array,  # [B, S] int32
+    pos: Array,       # [B] int32
+    window: int = 0,
+    cap: float = 0.0,
+    bs: int = 512,
+    interpret: bool = False,
+) -> Array:
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    qg = q.reshape(B, K, G, D)
+    grid = (B, K, S // bs)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel,
+            window=window, cap=cap, scale=1.0 / math.sqrt(D), n_s=S // bs,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, slot_pos, pos)
+    return out.reshape(B, H, D)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: causal flash attention for prefill/training.
+
+Online-softmax over KV tiles with (m, l, acc) scratch in VMEM — the
+standard flash forward, plus the repo's attention dialect: GQA (grouped
+query heads), sliding windows (gemma2/hymba local layers) and logit
+softcaps. Tiles are MXU-aligned; the KV tile loop is the innermost grid
+dim so each (batch, kv-head, q-tile) block accumulates in VMEM.
+
+Oracle: kernels/ref.py::flash_prefill_ref (== models/attention._attend_chunk).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG = -1e30
+
+
+def _prefill_kernel(
+    q_ref,        # [1, 1, G, bq, D]
+    k_ref,        # [1, bs, 1, D]
+    v_ref,        # [1, bs, 1, D]
+    o_ref,        # [1, 1, G, bq, D]
+    m_ref, l_ref, acc_ref,  # scratch [G*bq, 1], [G*bq, 1], [G*bq, D]
+    *, window: int, cap: float, scale: float, causal: bool,
+    bq: int, bs: int, n_s: int,
+):
+    s = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G, D = q_ref.shape[2], q_ref.shape[4]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(G * bq, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                  # [bs, D]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (G, bq), 1).reshape(
+        G * bq
+    )
+    k_pos = s * bs + jax.lax.iota(jnp.int32, bs)
+    mask = jnp.ones((G * bq, bs), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask, logits, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # fully-masked tiles: exp(NEG - NEG) would be 1 — zero them via the mask
+    p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(G, bq, D).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "cap", "causal", "bq", "bs", "interpret")
+)
+def flash_prefill(
+    q: Array,       # [B, S, H, D]
+    k: Array,       # [B, S, K, D]
+    v: Array,       # [B, S, K, D]
+    window: int = 0,
+    cap: float = 0.0,
+    causal: bool = True,
+    bq: int = 256,
+    bs: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """Full-sequence GQA flash attention. Returns [B, S, H, D]."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    bq, bs = min(bq, S), min(bs, S)
+    assert S % bq == 0 and S % bs == 0, (S, bq, bs)
+    qg = q.reshape(B, S, K, G, D).transpose(0, 2, 3, 1, 4)   # [B, K, G, S, D]
+    grid = (B, K, S // bq, S // bs)
+    out = pl.pallas_call(
+        functools.partial(
+            _prefill_kernel,
+            window=window, cap=cap, scale=1.0 / math.sqrt(D), causal=causal,
+            bq=bq, bs=bs, n_s=S // bs,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, s: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, i, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, i, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, s: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, S // bq * bq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, 1), jnp.float32),
+            pltpu.VMEM((G * bq, 1), jnp.float32),
+            pltpu.VMEM((G * bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)

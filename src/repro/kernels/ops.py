@@ -1,0 +1,49 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (Pallas-TPU can't
+lower to CPU); on a real TPU set REPRO_PALLAS_INTERPRET=0 (the default when
+a TPU backend is detected).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import expert_gemm as _eg
+from repro.kernels import flash_decode as _fd
+from repro.kernels import sparsemax as _sm
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def expert_ffn(xe, w_in, w_gate, w_out, act: str = "silu", **kw):
+    return _eg.expert_ffn(
+        xe, w_in, w_gate, w_out, act=act, interpret=_interpret(), **kw
+    )
+
+
+def sparsemax(z, **kw):
+    return _sm.sparsemax(z, interpret=_interpret(), **kw)
+
+
+def flash_decode(q, k, v, slot_pos, pos, window: int = 0, cap: float = 0.0, **kw):
+    return _fd.flash_decode(
+        q, k, v, slot_pos, pos, window=window, cap=cap, interpret=_interpret(), **kw
+    )
+
+
+def flash_prefill(q, k, v, window: int = 0, cap: float = 0.0,
+                  causal: bool = True, **kw):
+    from repro.kernels import flash_prefill as _fp
+
+    return _fp.flash_prefill(
+        q, k, v, window=window, cap=cap, causal=causal,
+        interpret=_interpret(), **kw
+    )

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle with
+interpret=True on CPU; on TPU the same oracles validate the compiled
+kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def expert_ffn_ref(
+    xe: Array,      # [E, C, d]
+    w_in: Array,    # [E, d, F]
+    w_gate: Array,  # [E, d, F] or None
+    w_out: Array,   # [E, F, d]
+    act: str = "silu",
+) -> Array:
+    """Per-expert (G)LU FFN over the capacity buffer."""
+    f = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    h = jnp.einsum("ecd,edf->ecf", xe, w_in)
+    if w_gate is not None:
+        h = f(jnp.einsum("ecd,edf->ecf", xe, w_gate)) * h
+    else:
+        h = f(h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def sparsemax_ref(z: Array) -> Array:
+    """Row-wise Euclidean projection onto the simplex (Martins & Astudillo)."""
+    K = z.shape[-1]
+    z_sorted = jnp.sort(z, axis=-1)[..., ::-1]
+    z_cum = jnp.cumsum(z_sorted, axis=-1)
+    ks = jnp.arange(1, K + 1, dtype=z.dtype)
+    support = z_sorted * ks > (z_cum - 1.0)
+    k_z = jnp.sum(support, axis=-1, keepdims=True)
+    tau = (jnp.take_along_axis(z_cum, k_z - 1, axis=-1) - 1.0) / k_z.astype(z.dtype)
+    return jnp.maximum(z - tau, 0.0)
+
+
+def flash_prefill_ref(
+    q: Array,       # [B, S, H, D]
+    k: Array,       # [B, S, K, D]
+    v: Array,       # [B, S, K, D]
+    window: int = 0,
+    cap: float = 0.0,
+    causal: bool = True,
+) -> Array:
+    """Full-sequence GQA attention with windows/softcaps (exact softmax)."""
+    import math
+
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    logits = logits / math.sqrt(D)
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D)
+
+
+def flash_decode_ref(
+    q: Array,         # [B, H, D]
+    k: Array,         # [B, S, K, D]
+    v: Array,         # [B, S, K, D]
+    slot_pos: Array,  # [B, S] int32 (-1 = invalid)
+    pos: Array,       # [B] int32
+    window: int = 0,
+    cap: float = 0.0,
+) -> Array:
+    """One-token attention over a (ring-buffer) KV cache with masking."""
+    import math
+
+    B, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) / math.sqrt(D)
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window:
+        valid &= slot_pos > (pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, D)

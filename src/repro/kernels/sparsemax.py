@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: row-wise SparseMax (hash-function sparse attention).
+
+The reference algorithm sorts each row — sorting maps poorly onto the TPU's
+vector unit, so the kernel instead finds the simplex threshold τ by
+**bisection** on the monotone function  g(τ) = Σ max(z-τ, 0) − 1
+(g is piecewise-linear and strictly decreasing on [max(z)−1, max(z)]):
+~60 elementwise iterations, fully vectorised over rows, no data movement.
+Validated bit-tight against the sort-based oracle in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_ITERS = 60  # bisection halves the bracket each step: 2^-60 ≈ exact in f32
+
+
+def _sparsemax_kernel(z_ref, o_ref):
+    z = z_ref[...].astype(jnp.float32)            # [br, L]
+    z_max = jnp.max(z, axis=-1, keepdims=True)
+    lo = z_max - 1.0
+    hi = z_max
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        g = jnp.sum(jnp.maximum(z - mid, 0.0), axis=-1, keepdims=True) - 1.0
+        lo = jnp.where(g > 0, mid, lo)
+        hi = jnp.where(g > 0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, _ITERS, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    o_ref[...] = jnp.maximum(z - tau, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def sparsemax(z: Array, br: int = 256, interpret: bool = False) -> Array:
+    """z: [..., L] -> simplex projection along the last axis."""
+    shape = z.shape
+    L = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    z2 = z.reshape(rows, L)
+    br = min(br, rows)
+    pad = (-rows) % br
+    if pad:
+        z2 = jnp.pad(z2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _sparsemax_kernel,
+        grid=((rows + pad) // br,),
+        in_specs=[pl.BlockSpec((br, L), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, L), z.dtype),
+        interpret=interpret,
+    )(z2)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh and dump roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+
+Per combination this produces experiments/dryrun/<arch>__<shape>__<mesh>.json
+with: HLO FLOPs, bytes accessed, per-device memory stats, per-collective
+byte counts parsed from the compiled HLO, and wall times. Failures here are
+bugs in the sharding policy, not in the harness.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, get_config, list_configs, shape_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import AUDIO_ENC_FRAMES, input_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.transformer import init_params
+from repro.optim.adamw import adamw_init
+from repro.sharding import policy
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+# ---------------------------------------------------------------------------
+
+
+def build_lowering(cfg: ModelConfig, shape_name, mesh, donate: bool = True):
+    """Returns (lowered, meta) for the right step function.
+
+    `shape_name` may be a key of INPUT_SHAPES or an InputShape (tests use
+    reduced shapes on small fake-device meshes).
+    """
+    shape = INPUT_SHAPES[shape_name] if isinstance(shape_name, str) else shape_name
+    ctx = policy.make_ctx(mesh)
+    pspecs = policy.param_specs(cfg, mesh)
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(partial(init_params, cfg=cfg), key)
+    ins = input_specs(cfg, shape)
+    B = shape.global_batch
+    tok_spec = policy.token_specs(mesh, B)
+
+    def nshard(spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    if shape.kind == "train":
+        # bf16 optimizer moments at production scale (§Perf iteration 5)
+        o_shapes = jax.eval_shape(
+            partial(adamw_init, moment_dtype=jnp.bfloat16), p_shapes
+        )
+        ospecs = policy.opt_specs(cfg, mesh, pspecs)
+        step = make_train_step(cfg, ctx, param_pspecs=pspecs)
+        args = [p_shapes, o_shapes, ins["tokens"], ins["labels"]]
+        in_shardings = [nshard(pspecs), nshard(ospecs), nshard(tok_spec), nshard(tok_spec)]
+        if cfg.enc_dec:
+            args.append(ins["enc_input"])
+            in_shardings.append(
+                NamedSharding(mesh, P(policy.batch_axes_for(mesh, B), None, None))
+            )
+        jitted = jax.jit(
+            step,
+            in_shardings=tuple(in_shardings),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        return jitted.lower(*args), {"ctx": ctx}
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx)
+        args = [p_shapes, ins["tokens"]]
+        in_shardings = [nshard(pspecs), nshard(tok_spec)]
+        if cfg.enc_dec:
+            args.append(ins["enc_input"])
+            in_shardings.append(
+                NamedSharding(mesh, P(policy.batch_axes_for(mesh, B), None, None))
+            )
+        jitted = jax.jit(step, in_shardings=tuple(in_shardings))
+        return jitted.lower(*args), {"ctx": ctx}
+
+    # decode
+    b_ax, seq_axes = policy.decode_plan(mesh, B)
+    ctx = dataclasses.replace(ctx, decode_seq_axis=seq_axes)
+    cspecs = policy.cache_specs(
+        cfg, mesh, B, shape.seq_len, AUDIO_ENC_FRAMES if cfg.enc_dec else 0
+    )
+    step = make_serve_step(cfg, ctx)
+    jitted = jax.jit(
+        step,
+        in_shardings=(nshard(pspecs), nshard(cspecs), NamedSharding(mesh, P(b_ax))),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted.lower(p_shapes, ins["cache"], ins["tokens"]), {"ctx": ctx}
+
+
+def analyse(cfg: ModelConfig, shape_name: str, mesh_kind: str, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    shape = INPUT_SHAPES[shape_name]
+    rec = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "status": "ok",
+    }
+    t0 = time.perf_counter()
+    try:
+        lowered, _ = build_lowering(cfg, shape_name, mesh)
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+        ca = compiled.cost_analysis() or {}
+        # NB: XLA's cost_analysis visits while bodies once — kept for
+        # reference only; the roofline uses the trip-count-aware numbers.
+        rec["xla_flops_loopbody_once"] = float(ca.get("flops", 0.0))
+        rec["xla_bytes_loopbody_once"] = float(ca.get("bytes accessed", 0.0))
+        ma = compiled.memory_analysis()
+        for f in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            rec[f] = int(getattr(ma, f, 0))
+        txt = compiled.as_text()
+        from repro.launch.hlo_analysis import analyse_hlo
+
+        hlo = analyse_hlo(txt)
+        rec["flops"] = hlo["flops"]                       # per device
+        rec["bytes_accessed"] = hlo["bytes"]              # per device (writes proxy)
+        rec["collectives"] = {
+            "bytes": hlo["collective_bytes"],
+            "counts": hlo["collective_counts"],
+        }
+        rec["collective_total_bytes"] = hlo["collective_total_bytes"]
+        rec["hlo_lines"] = txt.count("\n")
+        if verbose:
+            dev_gb = (rec["argument_size_in_bytes"] + rec["temp_size_in_bytes"]
+                      + rec["output_size_in_bytes"] - rec["alias_size_in_bytes"]) / 1e9
+            print(
+                f"  OK   lower {rec['lower_s']:.1f}s compile {rec['compile_s']:.1f}s "
+                f"flops/dev {rec['flops']:.3e} bytes/dev {rec['bytes_accessed']:.3e} "
+                f"mem/dev ~{dev_gb:.2f} GB "
+                f"coll/dev {rec['collective_total_bytes']/1e9:.3f} GB"
+            )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"  FAIL {type(e).__name__}: {str(e)[:200]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            ok, why = shape_supported(cfg, INPUT_SHAPES[shape_name])
+            if not ok:
+                print(f"{arch} × {shape_name}: SKIP ({why})")
+                continue
+            for mesh_kind in meshes:
+                print(f"{arch} × {shape_name} × {mesh_kind}:")
+                rec = analyse(cfg, shape_name, mesh_kind)
+                failures += rec["status"] != "ok"
+                fname = f"{arch}__{shape_name}__{mesh_kind}.json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=2)
+    print(f"\ndry-run complete; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Serving launcher: SiDA engine vs baselines on a (reduced) MoE arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch switch-base-8 \
+        --engine sida --slots 2 --batches 8 --batch 4 --seq 32
+
+Trains nothing: random weights + untrained hash function (use
+examples/serve_sida.py for the full train->distill->serve pipeline).
+Prints throughput / latency / device-memory for the chosen engine.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.baselines import OnDemandServer, PrefetchAllServer, StandardServer
+from repro.core.engine import SiDAEngine
+from repro.core.hash_fn import init_hash_fn
+from repro.models.transformer import init_params, n_moe_layers
+
+
+def build_engine(engine: str, cfg, params, slots: int):
+    if engine == "standard":
+        return StandardServer(cfg, params)
+    if engine == "ondemand":
+        return OnDemandServer(cfg, params, slots_per_layer=slots)
+    if engine == "prefetchall":
+        return PrefetchAllServer(cfg, params, slots_per_layer=slots)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=64,
+    )
+    return SiDAEngine(cfg, params, hp, slots_per_layer=slots)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="switch-base-8")
+    ap.add_argument("--engine", default="sida",
+                    choices=["sida", "standard", "ondemand", "prefetchall"])
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--full", action="store_true", help="full-size config")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    assert cfg.moe.enabled, "serving engines target MoE architectures"
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batches = [
+        rng.integers(0, cfg.vocab_size, (args.batch, args.seq)).astype(np.int32)
+        for _ in range(args.batches)
+    ]
+    srv = build_engine(args.engine, cfg, params, args.slots)
+    metrics = srv.serve(batches)
+    print(f"engine={args.engine} slots={args.slots}")
+    for k, v in metrics.summary().items():
+        print(f"  {k:20s} {v:.4f}")
+    print(f"  device_mem_mb        {srv.device_memory_bytes()/1e6:.2f}")
+    if isinstance(srv, SiDAEngine):
+        for k, v in srv.memory_saving().items():
+            print(f"  {k:20s} {v:.4f}")
+        st = srv.store.stats
+        print(f"  loads={st.loads} hits={st.hits} evictions={st.evictions} "
+              f"h2d_mb={st.bytes_h2d/1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

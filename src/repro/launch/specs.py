@@ -1,0 +1,52 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch × input shape) — weak-type-correct, shardable, no device allocation.
+
+Shapes (assigned):
+  train_4k     seq 4096,   batch 256  -> train_step(params, opt, tokens, labels)
+  prefill_32k  seq 32768,  batch 32   -> prefill_step(params, tokens)
+  decode_32k   seq 32768,  batch 128  -> serve_step(params, cache, tokens)
+  long_500k    seq 524288, batch 1    -> serve_step (sub-quadratic archs only)
+
+[audio]/[vlm] carve-out: the modality frontend is a stub — `enc_input` is a
+precomputed frame-embedding tensor of the right shape (audio), and VLM image
+tokens are ordinary vocabulary ids (early fusion).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.transformer import init_cache
+
+AUDIO_ENC_FRAMES = 1536  # ~30 s of 20 ms frames (stub conv frontend output)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for the given input shape (excluding params/opt/cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        if cfg.enc_dec:
+            out["enc_input"] = sds((B, AUDIO_ENC_FRAMES, cfg.d_model), cfg.dtype)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            out["enc_input"] = sds((B, AUDIO_ENC_FRAMES, cfg.d_model), cfg.dtype)
+        return out
+    # decode: one new token vs a seq_len cache
+    cache = jax.eval_shape(
+        partial(init_cache, cfg, B, S, AUDIO_ENC_FRAMES if cfg.enc_dec else 0)
+    )
+    return {"tokens": sds((B,), jnp.int32), "cache": cache}

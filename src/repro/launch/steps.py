@@ -1,0 +1,76 @@
+"""Jittable step functions: train_step / prefill_step / serve_step.
+
+These are what the launcher jits, what the dry-run lowers, and what the
+roofline reads — one definition for every architecture.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import ShardingCtx
+from repro.models.transformer import decode_step, forward, lm_loss
+from repro.optim.adamw import adamw_update
+
+
+def make_train_step(cfg: ModelConfig, ctx: ShardingCtx, lr: float = 1e-4,
+                    grad_clip: float = 1.0, param_pspecs=None):
+    def train_step(params, opt_state, tokens, labels, enc_input=None,
+                   lr_runtime=None):
+        """`lr_runtime` (traced scalar) overrides the baked-in lr so LR
+        schedules don't retrace the step."""
+        def loss_fn(p):
+            out = forward(
+                p, cfg, ctx, tokens, enc_input=enc_input,
+                scan_mode="assoc", remat=True,
+            )
+            loss = lm_loss(out["logits"], labels)
+            total = (
+                loss
+                + cfg.moe.router_aux_coef * out["aux_loss"]
+                + cfg.moe.router_z_coef * out["z_loss"]
+            )
+            return total, {"lm_loss": loss, "aux_loss": out["aux_loss"]}
+
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if param_pspecs is not None and ctx.mesh is not None:
+            # §Perf iteration 4: pin gradients to the parameter sharding so
+            # the data-axis gradient sync lowers as reduce-scatter rather
+            # than all-reduce (remat boundaries block GSPMD's own inference)
+            from jax.sharding import NamedSharding
+
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(ctx.mesh, s)
+                ),
+                grads, param_pspecs,
+            )
+        params, opt_state = adamw_update(
+            grads, params, opt_state,
+            lr=lr if lr_runtime is None else lr_runtime,
+            weight_decay=0.01, grad_clip=grad_clip,
+        )
+        metrics["total_loss"] = total
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardingCtx):
+    def prefill_step(params, tokens, enc_input=None):
+        out = forward(params, cfg, ctx, tokens, enc_input=enc_input, scan_mode="assoc")
+        return out["logits"][:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ShardingCtx):
+    def serve_step(params, cache, tokens):
+        logits, cache = decode_step(params, cache, tokens, cfg, ctx)
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,365 @@
+"""GQA attention: full (train/prefill, flash-style chunked) and decode paths.
+
+Decode supports a mesh-sharded KV cache (seq dim sharded over the `model`
+axis) via a shard_map partial-softmax merge (flash-decode) — see
+DESIGN.md §5. All paths are pure jnp so they lower on any backend; the
+Pallas TPU kernels in repro/kernels mirror `decode_attention_local`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
+
+Array = jax.Array
+
+NEG_INF = -1e30
+Q_CHUNK = 1024  # flash-style query chunking for long prefill
+
+
+# ---------------------------------------------------------------------------
+# Sharding context threaded through the model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Names of mesh axes used by the model; all-None => single device."""
+
+    mesh: Optional[jax.sharding.Mesh] = None
+    batch_axes: Optional[Tuple[str, ...]] = None   # e.g. ("pod", "data")
+    model_axis: Optional[str] = None               # e.g. "model"
+    # axes the decode KV-cache seq dim is sharded over (flash-decode merge)
+    decode_seq_axis: Optional[Tuple[str, ...]] = None
+
+    def constrain(self, x: Array, spec: P) -> Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+    def batch_spec(self, batch: int) -> Optional[Tuple[str, ...]]:
+        """batch axes if the batch is divisible by the mesh extent."""
+        if self.mesh is None or not self.batch_axes:
+            return None
+        ext = 1
+        for a in self.batch_axes:
+            ext *= self.mesh.shape[a]
+        return self.batch_axes if batch % ext == 0 else None
+
+    def act_constrain(self, x: Array) -> Array:
+        """Residual-stream constraint: batch -> data axes, d_model -> model.
+
+        Sharding the carried activation over the model axis keeps the
+        per-device live set of the layer scan (and its remat checkpoints)
+        small enough for 10B+ configs at 4k sequence length. For small-d
+        architectures the trade inverts (§Perf iteration on seamless/xlstm):
+        a 48-64-element d-shard makes every matmul re-gather the stream, so
+        the model axis is only used when each shard keeps >=256 features.
+        """
+        if self.mesh is None:
+            return x
+        d_ax = None
+        if self.model_axis:
+            ext = self.mesh.shape[self.model_axis]
+            if x.shape[-1] % ext == 0 and x.shape[-1] // ext >= 256:
+                d_ax = self.model_axis
+        mid = [None] * (x.ndim - 2)
+        return self.constrain(x, P(self.batch_spec(x.shape[0]), *mid, d_ax))
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.attn.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.attn.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _project_q(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(*x.shape[:-1], cfg.n_heads, cfg.hd)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    return q
+
+
+def _project_kv(p: dict, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.hd)
+    if "k_norm" in p:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# full attention (train / prefill) — chunked over queries
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunk(
+    q: Array,           # [B, Tq, H, D] (rope applied)
+    k: Array,           # [B, S, K, D]
+    v: Array,           # [B, S, K, D]
+    q_pos: Array,       # [Tq]
+    k_pos: Array,       # [S]
+    window: int,
+    cap: float,
+    causal: bool,
+) -> Array:
+    B, Tq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Tq, K, G, D)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if cap:
+        logits = softcap(logits, cap)
+    mask = jnp.ones((Tq, k_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return out.reshape(B, Tq, H, D)
+
+
+def attend_full(
+    params: dict,
+    x: Array,                 # [B, S, d]
+    cfg: ModelConfig,
+    layer: int,
+    ctx: ShardingCtx,
+    positions: Optional[Array] = None,
+    causal: bool = True,
+    kv_from: Optional[Array] = None,   # cross-attention source (enc output)
+    return_kv: bool = False,
+):
+    B, S, _ = x.shape
+    window = cfg.layer_window(layer) if causal else 0
+    q = _project_q(params, x, cfg)
+    src = kv_from if kv_from is not None else x
+    k, v = _project_kv(params, src, cfg)
+    Skv = src.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    kv_pos = jnp.arange(Skv)
+    if kv_from is None:  # self-attention => rope
+        q = apply_rope(q, positions, cfg.attn.rope_theta)
+        k = apply_rope(k, kv_pos, cfg.attn.rope_theta)
+    if ctx.model_axis:
+        # heads sharded over model axis when divisible
+        spec_q = P(ctx.batch_spec(B), None, ctx.model_axis if cfg.n_heads % ctx.mesh.shape[ctx.model_axis] == 0 else None, None)
+        q = ctx.constrain(q, spec_q)
+
+    cap = cfg.attn.logit_softcap
+    if S <= Q_CHUNK:
+        out = _attend_chunk(q, k, v, positions, kv_pos, window, cap, causal)
+    else:
+        nchunk = math.ceil(S / Q_CHUNK)
+        pad = nchunk * Q_CHUNK - S
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qc = qp.reshape(B, nchunk, Q_CHUNK, *q.shape[2:]).swapaxes(0, 1)
+
+        # positions derive from the loop counter (a chunk-indexed position
+        # table would be hoisted out of the while loop as a giant stacked
+        # constant together with the masks), and the body is checkpointed so
+        # the backward pass recomputes each chunk's softmax instead of
+        # stacking [nchunk, ..., S] f32 residuals.
+        #
+        # windowed layers slice K/V to the window-reachable band per chunk
+        # (§Perf: sliding-window banding) — logits go from [chunk, S] to
+        # [chunk, window+chunk], a 10x+ cut for local layers at 32k.
+        span = window + Q_CHUNK
+        banded = bool(window) and causal and S > span
+
+        @jax.checkpoint
+        def body(i, qi):
+            pi = i * Q_CHUNK + jnp.arange(Q_CHUNK)
+            if banded:
+                start = jnp.clip(i * Q_CHUNK + Q_CHUNK - span, 0, S - span)
+                kw = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+                vw = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+                kp = start + jnp.arange(span)
+                return i + 1, _attend_chunk(qi, kw, vw, pi, kp, window, cap, causal)
+            return i + 1, _attend_chunk(qi, k, v, pi, kv_pos, window, cap, causal)
+
+        _, oc = jax.lax.scan(body, jnp.zeros((), jnp.int32), qc)
+        out = oc.swapaxes(0, 1).reshape(B, nchunk * Q_CHUNK, cfg.n_heads, cfg.hd)[:, :S]
+    y = out.reshape(B, S, cfg.n_heads * cfg.hd) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# decode attention — one token vs a (possibly seq-sharded) KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_local(
+    q: Array,        # [B, H, D] (rope applied)
+    k: Array,        # [B, S, K, D]
+    v: Array,        # [B, S, K, D]
+    slot_pos: Array, # [B, S] global position stored in each cache slot (-1 invalid)
+    pos: Array,      # [B] current decode position
+    window: int,
+    cap: float,
+) -> Tuple[Array, Array, Array]:
+    """Returns partial (out*l, l, m) for safe-softmax merging across shards."""
+    B, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if cap:
+        logits = softcap(logits, cap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window:
+        valid &= slot_pos > (pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                        # [B,K,G]
+    e = jnp.exp(logits - m[..., None])
+    l = jnp.sum(e, axis=-1)                             # [B,K,G]
+    o = jnp.einsum("bkgs,bskd->bkgd", e, v.astype(jnp.float32))
+    return o.reshape(B, H, D), l.reshape(B, H), m.reshape(B, H)
+
+
+def _merge_partials(o, l, m, axes: Tuple[str, ...]):
+    """Merge flash-decode partials across mesh axes inside shard_map."""
+    m_g = jax.lax.pmax(m, axes)
+    scale = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * scale, axes)
+    o_g = jax.lax.psum(o * scale[..., None], axes)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def decode_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    slot_pos: Array,
+    pos: Array,
+    window: int,
+    cap: float,
+    ctx: ShardingCtx,
+) -> Array:
+    """[B,H,D] attention of one token over the cache; shard-aware."""
+    seq_div = True
+    if ctx.mesh is not None and ctx.decode_seq_axis is not None:
+        ext = 1
+        for a in ctx.decode_seq_axis:
+            ext *= ctx.mesh.shape[a]
+        seq_div = k.shape[1] % ext == 0
+    if ctx.mesh is None or ctx.decode_seq_axis is None or not seq_div:
+        o, l, m = decode_attention_local(q, k, v, slot_pos, pos, window, cap)
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    ax = tuple(ctx.decode_seq_axis)
+    b_ax = ctx.batch_spec(q.shape[0])
+
+    def inner(q, k, v, slot_pos, pos):
+        o, l, m = decode_attention_local(q, k, v, slot_pos, pos, window, cap)
+        return _merge_partials(o, l, m, ax).astype(q.dtype)
+
+    return jax.shard_map(
+        inner,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(b_ax, None, None),
+            P(b_ax, ax, None, None),
+            P(b_ax, ax, None, None),
+            P(b_ax, ax),
+            P(b_ax),
+        ),
+        out_specs=P(b_ax, None, None),
+    )(q, k, v, slot_pos, pos)
+
+
+def attend_decode(
+    params: dict,
+    x_tok: Array,            # [B, d] current-token activations
+    cache_k: Array,          # [B, Sc, K, D]
+    cache_v: Array,
+    pos: Array,              # [B] decode position
+    cfg: ModelConfig,
+    layer: int,
+    ctx: ShardingCtx,
+    cross: bool = False,
+    cross_len: Optional[Array] = None,
+):
+    """One decode step. Returns (y [B,d], new_k, new_v).
+
+    Self-attention writes the new token's K/V into slot ``pos % Sc`` (ring
+    buffer — Sc equals the full seq budget for dense archs, or the sliding
+    window for windowed archs). Cross-attention reads a fixed cache.
+    """
+    B = x_tok.shape[0]
+    Sc = cache_k.shape[1]
+    q = _project_q(params, x_tok[:, None, :], cfg)[:, 0]  # [B, H, D]
+    if cross:
+        # cross-attn: cache holds encoder K/V; all slots < cross_len valid
+        slot_pos = jnp.where(
+            jnp.arange(Sc)[None, :] < cross_len[:, None], 0, -1
+        )
+        o = decode_attention(
+            q, cache_k, cache_v, slot_pos,
+            jnp.zeros((B,), jnp.int32), 0, cfg.attn.logit_softcap, ctx,
+        )
+        y = o.reshape(B, cfg.n_heads * cfg.hd) @ params["wo"]
+        return y, cache_k, cache_v
+
+    window = cfg.layer_window(layer)
+    q = apply_rope(q[:, None], pos[:, None], cfg.attn.rope_theta)[:, 0]
+    k_new, v_new = _project_kv(params, x_tok[:, None, :], cfg)
+    k_new = apply_rope(k_new, pos[:, None], cfg.attn.rope_theta)
+    slot = pos % Sc
+    bidx = jnp.arange(B)
+    new_k = cache_k.at[bidx, slot].set(k_new[:, 0].astype(cache_k.dtype))
+    new_v = cache_v.at[bidx, slot].set(v_new[:, 0].astype(cache_v.dtype))
+    # global position held by each slot s: largest p <= pos with p % Sc == s
+    s_idx = jnp.arange(Sc)[None, :]
+    slot_pos = pos[:, None] - ((pos[:, None] - s_idx) % Sc)
+    slot_pos = jnp.where(slot_pos >= 0, slot_pos, -1)
+    o = decode_attention(
+        q, new_k, new_v, slot_pos, pos, window, cfg.attn.logit_softcap, ctx
+    )
+    y = o.reshape(B, cfg.n_heads * cfg.hd).astype(x_tok.dtype) @ params["wo"]
+    return y, new_k, new_v

@@ -1,0 +1,432 @@
+"""Mixture-of-Experts layer.
+
+Supports:
+  * top-k routing with capacity-based one-hot dispatch/combine einsums
+    (GSPMD-friendly: the expert dim shards over the `model` mesh axis =>
+    expert parallelism),
+  * DeepSeek-style shared (always-active) experts,
+  * `routing_override` — externally supplied (expert_ids, weights) per token,
+    which is exactly the hook SiDA-MoE's hash table uses to replace the
+    router at serving time (the router matmul is skipped entirely),
+  * returning router logits (teacher signal for hash-function training).
+
+Two dispatch strategies (see EXPERIMENTS.md §Perf):
+  * "einsum"  — classic [T, E, C] one-hot dispatch (baseline; robust under
+    GSPMD but its dispatch einsum costs T·E·C·d MACs),
+  * "gather"  — capacity-gather compact dispatch: tokens are gathered into
+    the per-expert [E, C] buffer with `take` instead of a one-hot matmul,
+    cutting HLO FLOPs by orders of magnitude for large E·C.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import ShardingCtx
+from repro.models.layers import act_fn, dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(ks[0], d, m.num_experts, jnp.float32, scale=0.02),
+        "w_in": _stack_init(ks[1], m.num_experts, d, m.d_expert, dtype),
+        "w_gate": _stack_init(ks[2], m.num_experts, d, m.d_expert, dtype),
+        "w_out": _stack_init(ks[3], m.num_experts, m.d_expert, d, dtype),
+    }
+    if m.num_shared_experts:
+        ds = m.d_shared * m.num_shared_experts
+        p["shared_w_in"] = dense_init(ks[4], d, ds, dtype)
+        p["shared_w_gate"] = dense_init(ks[5], d, ds, dtype)
+        p["shared_w_out"] = dense_init(ks[6], ds, d, dtype)
+    return p
+
+
+def _stack_init(key, e, d_in, d_out, dtype):
+    import math
+
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (e, d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+
+def router_topk(
+    logits: Array, k: int
+) -> Tuple[Array, Array]:
+    """[T, E] -> (ids [T, k], weights [T, k]); weights renormalised softmax."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(gates, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return ids, w
+
+
+def load_balance_loss(logits: Array, ids: Array, num_experts: int) -> Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(gates, axis=0)                               # [E]
+    one_hot = jax.nn.one_hot(ids[..., 0], num_experts)         # top-1 counts
+    ce = jnp.mean(one_hot, axis=0)
+    return num_experts * jnp.sum(me * ce)
+
+
+def router_z_loss(logits: Array) -> Array:
+    return jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# expert compute over the capacity buffer
+# ---------------------------------------------------------------------------
+
+
+def apply_expert_stack(p: dict, xe: Array, cfg: ModelConfig) -> Array:
+    """xe: [E, C, d] -> [E, C, d] through each expert's (G)LU FFN."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    if cfg.glu:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int, num_experts: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * n_tokens * m.top_k / num_experts)
+    return max(8, min(n_tokens, c))
+
+
+def _block_tokens(T: int, target: int = 4096) -> int:
+    """Largest divisor of T that is <= target (token blocking for dispatch).
+
+    Capacity is enforced per block (Switch-style per-group capacity): the
+    dispatch working set scales with blk·E·C instead of T·E·C, and blocks
+    shard over the data axis.
+    """
+    if T <= target:
+        return T
+    for blk in range(target, 0, -1):
+        if T % blk == 0:
+            return blk
+    return T
+
+
+# ---------------------------------------------------------------------------
+# MoE layer forward
+# ---------------------------------------------------------------------------
+
+
+def moe_layer(
+    params: dict,
+    x: Array,                       # [B, S, d]
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    routing_override: Optional[Tuple[Array, Array]] = None,  # ids [B,S,k], w [B,S,k]
+    dispatch: str = "auto",
+):
+    """Returns (y [B,S,d], aux) with aux = dict(router_logits, aux_loss, z_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    if routing_override is not None:
+        ids, w = routing_override
+        ids = ids.reshape(T, -1)[:, : m.top_k]
+        w = w.reshape(T, -1)[:, : m.top_k].astype(jnp.float32)
+        router_logits = None
+        aux_loss = jnp.zeros((), jnp.float32)
+        z_loss = jnp.zeros((), jnp.float32)
+    else:
+        router_logits = xt.astype(jnp.float32) @ params["router"]  # [T, E]
+        ids, w = router_topk(router_logits, m.top_k)
+        aux_loss = load_balance_loss(router_logits, ids, m.num_experts)
+        z_loss = router_z_loss(router_logits)
+
+    y = _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch)
+
+    if m.num_shared_experts:
+        h = xt @ params["shared_w_in"]
+        g = act_fn(cfg.act)(xt @ params["shared_w_gate"])
+        y = y + (g * h) @ params["shared_w_out"]
+
+    aux = {
+        "router_logits": (
+            router_logits.reshape(B, S, m.num_experts)
+            if router_logits is not None
+            else None
+        ),
+        "aux_loss": aux_loss,
+        "z_loss": z_loss,
+    }
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch):
+    """Token-blocked dispatch -> expert compute -> combine.
+
+    dispatch="einsum": classic one-hot dispatch/combine matmuls. Exact
+      (bit-identical to the reference) but costs blk·E·C·d MACs — used for
+      the paper-scale Switch models and as the test oracle.
+    dispatch="gather": index-based. The [n, E, C] token-index table is built
+      by scatter, experts gather their tokens (zero FLOPs), and the combine
+      scatter-adds per-expert outputs back (partial-sum + all-reduce under
+      expert parallelism). This is the path the 235B dry-runs use.
+    dispatch="auto": einsum for small working sets, gather otherwise.
+    """
+    m = cfg.moe
+    T, d = xt.shape
+    # E comes from the weight stack, not the config: SiDA serving passes slot
+    # buffers with S_slots << num_experts and slot-translated ids.
+    E, K = params["w_in"].shape[0], ids.shape[-1]
+    blk = _block_tokens(T)
+    n = T // blk
+    C = _capacity(cfg, blk, E)
+    if dispatch == "auto":
+        dispatch = "einsum" if blk * E * C <= (1 << 24) else "gather"
+
+    # §Perf hillclimb #1 (H1c, confirmed): under a mesh, run the whole
+    # dispatch->expert-FFN->combine as true expert parallelism inside
+    # shard_map. GSPMD cannot partition the fancy-index scatter/gather
+    # (the block coordinate travels as index *data*), so it replicates a
+    # [n, blk, d] f32 combine per device and all-reduces ~17 GB per MoE
+    # layer over the full mesh. Inside shard_map every index op is local
+    # and the only collective is one psum_scatter over `model`.
+    if (
+        dispatch == "gather"
+        and ctx.mesh is not None
+        and ctx.model_axis is not None
+        and E % ctx.mesh.shape[ctx.model_axis] == 0
+    ):
+        return _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C)
+
+    ids_b = ids.reshape(n, blk, K)
+    w_b = w.reshape(n, blk, K)
+    x_b = xt.reshape(n, blk, d)
+
+    # position of each (token, k) assignment within its expert's per-block
+    # capacity buffer (cumsum over the block)
+    onehot_e = jax.nn.one_hot(ids_b, E, dtype=jnp.int32)            # [n,blk,K,E]
+    flat_oh = onehot_e.reshape(n, blk * K, E)
+    pos = (jnp.cumsum(flat_oh, axis=1) - 1).reshape(n, blk, K, E)
+    pos = jnp.take_along_axis(pos, ids_b[..., None], axis=-1)[..., 0]  # [n,blk,K]
+    keep = pos < C
+    w_b = w_b * keep
+
+    if dispatch == "gather":
+        tok_idx = jnp.broadcast_to(jnp.arange(blk)[None, :, None], (n, blk, K))
+        slot = jnp.where(keep, ids_b * C + pos, E * C)              # [n,blk,K]
+        # token-index table: table[n, e, c] = which token sits in slot (e,c)
+        table = (
+            jnp.full((n, E * C + 1), blk, jnp.int32)
+            .at[jnp.arange(n)[:, None, None], slot]
+            .set(tok_idx, mode="drop")[:, : E * C]
+            .reshape(n, E, C)
+        )
+        table = _constrain_necd(table, ctx, P_dims=3)
+        x_pad = jnp.concatenate([x_b, jnp.zeros((n, 1, d), xt.dtype)], axis=1)
+        xe = x_pad[jnp.arange(n)[:, None, None], table]             # [n,E,C,d]
+        xe = _constrain_necd(xe, ctx)
+        ye = apply_expert_stack_blocked(params, xe, cfg)
+        ye = _constrain_necd(ye, ctx)
+        # combine: scatter-add expert outputs back to their tokens
+        gate = jnp.zeros((n, E * C + 1), jnp.float32).at[
+            jnp.arange(n)[:, None, None], slot
+        ].add(w_b.astype(jnp.float32), mode="drop")[:, : E * C].reshape(n, E, C)
+        # §Perf hillclimb #1: the scatter-add *operand* must carry the block
+        # sharding — an unsharded zeros buffer makes GSPMD replicate the
+        # whole [n, blk, d] f32 combine per device and all-reduce 17 GB/op
+        # over the full mesh. With n -> data, each expert shard scatter-adds
+        # a partial y of [n/|data|, blk, d] and the all-reduce runs over
+        # `model` only.
+        y0 = jnp.zeros((n, blk + 1, d), jnp.float32)
+        if ctx.mesh is not None:
+            y0 = ctx.constrain(y0, P(ctx.batch_spec(n), None, None))
+        y = (
+            y0.at[jnp.arange(n)[:, None, None], table]
+            .add(ye.astype(jnp.float32) * gate[..., None], mode="drop")[:, :blk]
+        )
+        if ctx.mesh is not None:
+            d_ax = None
+            if ctx.model_axis and d % ctx.mesh.shape[ctx.model_axis] == 0:
+                d_ax = ctx.model_axis
+            y = ctx.constrain(y, P(ctx.batch_spec(n), None, d_ax))
+        return y.reshape(T, d)
+
+    # einsum dispatch (exact oracle; fine for small blk·E·C)
+    disp = (
+        jax.nn.one_hot(ids_b, E, dtype=xt.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=xt.dtype)[..., None, :C]
+    )                                                               # [n,blk,K,E,C]
+    disp = disp.sum(2)                                              # [n,blk,E,C]
+    xe = jnp.einsum("nbd,nbec->necd", x_b, disp)
+    xe = _constrain_necd(xe, ctx)
+    ye = apply_expert_stack_blocked(params, xe, cfg)
+    ye = _constrain_necd(ye, ctx)
+    comb = jnp.einsum("nbkec,nbk->nbec",
+        jax.nn.one_hot(ids_b, E, dtype=xt.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=xt.dtype)[..., None, :C],
+        w_b.astype(xt.dtype),
+    )
+    y = jnp.einsum("necd,nbec->nbd", ye, comb).astype(jnp.float32)
+    return y.reshape(T, d)
+
+
+def _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C):
+    """Expert-parallel dispatch/combine under shard_map (see moe_layer).
+
+    Per (data×model) shard: mask the token->expert assignments to the
+    shard's local expert range, build the local [E_loc, C] capacity table,
+    gather tokens, run the expert FFN, scatter-add the local partial y, and
+    psum_scatter it into the residual stream's d-sharded layout.
+    """
+    mesh, maxis = ctx.mesh, ctx.model_axis
+    mext = mesh.shape[maxis]
+    E = params["w_in"].shape[0]
+    E_loc = E // mext
+    T, d = xt.shape
+    K = ids.shape[-1]
+    b_ax = ctx.batch_spec(n)
+    glu = cfg.glu
+    act = act_fn(cfg.act)
+    d_scatter = d % mext == 0  # psum_scatter needs d divisible
+
+    def inner(x_b, ids_b, w_b, wi, wg, wo):
+        nl = x_b.shape[0]
+        e0 = jax.lax.axis_index(maxis) * E_loc
+        idsl = ids_b - e0                                   # [nl, blk, K]
+        local = (idsl >= 0) & (idsl < E_loc)
+        idsl_c = jnp.clip(idsl, 0, E_loc - 1)
+        oh = jax.nn.one_hot(
+            jnp.where(local, idsl_c, E_loc), E_loc + 1, dtype=jnp.int32
+        )[..., :E_loc]                                      # [nl, blk, K, E_loc]
+        pos = (jnp.cumsum(oh.reshape(nl, blk * K, E_loc), 1) - 1).reshape(
+            nl, blk, K, E_loc
+        )
+        pos = jnp.take_along_axis(pos, idsl_c[..., None], -1)[..., 0]
+        keep = local & (pos < C)
+        wk = (w_b * keep).astype(jnp.float32)
+        tok = jnp.broadcast_to(jnp.arange(blk)[None, :, None], (nl, blk, K))
+        slot = jnp.where(keep, idsl_c * C + pos, E_loc * C)
+        nidx = jnp.arange(nl)[:, None, None]
+        table = (
+            jnp.full((nl, E_loc * C + 1), blk, jnp.int32)
+            .at[nidx, slot].set(tok, mode="drop")[:, : E_loc * C]
+            .reshape(nl, E_loc, C)
+        )
+        xp = jnp.concatenate([x_b, jnp.zeros((nl, 1, d), x_b.dtype)], 1)
+        xe = xp[jnp.arange(nl)[:, None, None], table]       # [nl, E_loc, C, d]
+        h = jnp.einsum("necd,edf->necf", xe, wi)
+        if glu:
+            h = act(jnp.einsum("necd,edf->necf", xe, wg)) * h
+        else:
+            h = act(h)
+        ye = jnp.einsum("necf,efd->necd", h, wo)
+        gate = (
+            jnp.zeros((nl, E_loc * C + 1), jnp.float32)
+            .at[nidx, slot].add(wk, mode="drop")[:, : E_loc * C]
+            .reshape(nl, E_loc, C)
+        )
+        # §Perf iteration 3b: combine in the model dtype. Each token receives
+        # at most top_k (<=8) adds, so bf16 accumulation is safe, and it
+        # halves both the local scatter temps and the psum_scatter bytes.
+        y0 = (
+            jnp.zeros((nl, blk + 1, d), x_b.dtype)
+            .at[jnp.arange(nl)[:, None, None], table]
+            .add(
+                (ye.astype(jnp.float32) * gate[..., None]).astype(x_b.dtype),
+                mode="drop",
+            )[:, :blk]
+        )
+        if d_scatter:
+            return jax.lax.psum_scatter(y0, maxis, scatter_dimension=2, tiled=True)
+        return jax.lax.psum(y0, maxis)
+
+    wspec = P(maxis, None, None)
+    y = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            P(b_ax, None, None), P(b_ax, None, None), P(b_ax, None, None),
+            wspec, wspec, wspec,
+        ),
+        out_specs=P(b_ax, None, maxis if d_scatter else None),
+    )(
+        xt.reshape(n, blk, d), ids.reshape(n, blk, K), w.reshape(n, blk, K),
+        params["w_in"], params["w_gate"], params["w_out"],
+    )
+    return y.reshape(T, d)
+
+
+def apply_expert_stack_blocked(
+    p: dict, xe: Array, cfg: ModelConfig, use_pallas: bool = False
+) -> Array:
+    """xe: [n, E, C, d] -> [n, E, C, d].
+
+    use_pallas routes through the TPU kernel (repro/kernels/expert_gemm.py,
+    MXU-aligned VMEM tiling); requires C and d_expert multiples of the
+    block sizes — the jnp path is the oracle and the CPU fallback.
+    """
+    if use_pallas:
+        from repro.kernels import ops
+
+        n, E, C, d = xe.shape
+        out = ops.expert_ffn(
+            xe.transpose(1, 0, 2, 3).reshape(E, n * C, d),
+            p["w_in"], p["w_gate"] if cfg.glu else None, p["w_out"],
+            act=cfg.act,
+        )
+        return out.reshape(E, n, C, d).transpose(1, 0, 2, 3)
+    h = jnp.einsum("necd,edf->necf", xe, p["w_in"])
+    if cfg.glu:
+        g = jnp.einsum("necd,edf->necf", xe, p["w_gate"])
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    return jnp.einsum("necf,efd->necd", h, p["w_out"])
+
+
+def _constrain_necd(x: Array, ctx: ShardingCtx, P_dims: int = 4) -> Array:
+    """Constrain [n, E, ...]: blocks -> batch axes, experts -> model axis."""
+    if ctx.mesh is None:
+        return x
+    n, E = x.shape[0], x.shape[1]
+    b_ax = ctx.batch_spec(n)
+    e_ax = None
+    if ctx.model_axis and E % ctx.mesh.shape[ctx.model_axis] == 0:
+        e_ax = ctx.model_axis
+    return ctx.constrain(x, P(b_ax, e_ax, *([None] * (P_dims - 2))))
+
+
+# ---------------------------------------------------------------------------
+# decode-path MoE (single token per sequence)
+# ---------------------------------------------------------------------------
+
+
+def moe_decode(
+    params: dict,
+    x: Array,                      # [B, d]
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    routing_override: Optional[Tuple[Array, Array]] = None,
+) -> Array:
+    y, _ = moe_layer(
+        params, x[:, None, :], cfg, ctx, routing_override=(
+            (routing_override[0][:, None], routing_override[1][:, None])
+            if routing_override is not None
+            else None
+        ),
+    )
+    return y[:, 0]

@@ -1,0 +1,433 @@
+"""State-space / recurrent mixers: Mamba (hymba branch) and xLSTM blocks.
+
+All recurrences are first-order linear (h_t = a_t ⊙ h_{t-1} + b_t). Memory
+discipline matters more than anything here: materialising the full [B, S,
+d_inner, N] gate tensors at 32k–500k sequence lengths is terabytes, so the
+full-sequence paths are **chunked** — an outer `lax.scan` carries the state
+across chunks while the inner chunk runs either
+
+  * mode="assoc": `lax.associative_scan` within the chunk (log-depth,
+    TPU-friendly — the production path), or
+  * mode="scan": strictly sequential `lax.scan` with gates computed
+    per-step (O(1) live gates — the reference/oracle path).
+
+Decode paths are O(1)-state single updates.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+CHUNK = 256  # inner-chunk length for the associative path
+
+
+def _linear_recurrence_chunk(a: Array, b: Array, h0: Array) -> Array:
+    """h_t = a_t*h_{t-1} + b_t over axis 1 within one chunk (assoc)."""
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hs
+
+
+def _maxplus_chunk(logf: Array, logi: Array, m0: Array) -> Array:
+    """m_t = max(logf_t + m_{t-1}, logi_t) within one chunk (assoc)."""
+    acum = jnp.cumsum(logf, axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+
+    _, b = jax.lax.associative_scan(combine, (logf, logi), axis=1)
+    return jnp.maximum(acum + m0[:, None], b)
+
+
+def _chunked(x_seq, carry0, chunk_fn, step_fn, mode: str, ck: int = CHUNK):
+    """Run a recurrence over [B, S, ...] sequences.
+
+    chunk_fn(carry, xs_chunk) -> (carry, ys_chunk)   (assoc inner)
+    step_fn(carry, xs_t) -> (carry, ys_t)            (sequential inner)
+    """
+    B, S = x_seq.shape[:2]
+    if mode == "scan":
+        def body(c, xt):
+            return step_fn(c, xt)
+        c, ys = jax.lax.scan(body, carry0, x_seq.swapaxes(0, 1))
+        return ys.swapaxes(0, 1)
+    ck = min(ck, S)
+    if S % ck:
+        # fall back to a divisor (S is a power-of-2-ish in all our shapes)
+        for cand in range(min(ck, S), 0, -1):
+            if S % cand == 0:
+                ck = cand
+                break
+    nc = S // ck
+    xc = x_seq.reshape(B, nc, ck, *x_seq.shape[2:]).swapaxes(0, 1)
+    c, ys = jax.lax.scan(chunk_fn, carry0, xc)
+    return ys.swapaxes(0, 1).reshape(B, S, *ys.shape[3:])
+
+
+# ===========================================================================
+# Mamba (selective SSM) — used as the parallel branch in hymba blocks
+# ===========================================================================
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    N = s.state_dim
+    dt_rank = max(1, math.ceil(d / 16))
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_db": dense_init(ks[2], di, dt_rank + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),  # softplus => small init dt
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _mamba_gates(p: dict, xz: Array, cfg: ModelConfig):
+    """xz: [..., di] conv-ed activations -> (a, b, C) for the recurrence."""
+    N = cfg.ssm.state_dim
+    dt_rank = p["dt_proj"].shape[0]
+    dbc = xz @ p["x_db"]
+    dt, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                  # [di, N]
+    a = jnp.exp(dt[..., None] * A)                            # [..., di, N]
+    b = (dt[..., None] * Bm[..., None, :].astype(jnp.float32)) * xz[
+        ..., None
+    ].astype(jnp.float32)                                     # [..., di, N]
+    return a, b, Cm.astype(jnp.float32)
+
+
+def _mamba_conv_full(p: dict, xs: Array) -> Array:
+    """Depthwise causal conv over [B, S, di]."""
+    K = p["conv_w"].shape[0]
+    S = xs.shape[1]
+    xp = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + S] * p["conv_w"][i] for i in range(K))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_forward(
+    p: dict, x: Array, cfg: ModelConfig, mode: str = "assoc"
+) -> Array:
+    """Full-sequence Mamba mixer. x: [B, S, d] -> [B, S, d]."""
+    B, S, d = x.shape
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_dim
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                         # [B,S,di] each
+    xs = _mamba_conv_full(p, xs)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def chunk_fn(h, xs_c):                                    # xs_c [B,ck,di]
+        a, b, Cm = _mamba_gates(p, xs_c, cfg)                 # [B,ck,di,N]
+        hs = _linear_recurrence_chunk(a, b, h)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cm)
+        return hs[:, -1], y
+
+    def step_fn(h, xs_t):                                     # xs_t [B,di]
+        a, b, Cm = _mamba_gates(p, xs_t, cfg)                 # [B,di,N]
+        h = a * h + b
+        return h, jnp.einsum("bdn,bn->bd", h, Cm)
+
+    # ck=64: the [B, ck, d_inner, N] f32 gate tensors are the live working
+    # set (8.4 GB/chunk at ck=256 for hymba train_4k); Mamba-1's per-channel
+    # A bars the [ck,ck] chunkwise trick used for mLSTM, so chunk length is
+    # the memory knob here (§Perf bonus iteration).
+    y = _chunked(xs, h0, chunk_fn, step_fn, mode, ck=64)
+    y = y + p["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di = cfg.ssm.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, di), dtype),
+    }
+
+
+def mamba_decode(p: dict, x: Array, state: dict, cfg: ModelConfig):
+    """One-token Mamba step. x: [B, d] -> (y [B, d], state)."""
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                         # [B, di]
+    conv = jnp.concatenate([state["conv"], xs[:, None]], axis=1)  # [B,K,di]
+    xs = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv, p["conv_w"]) + p["conv_b"])
+    a, b, Cm = _mamba_gates(p, xs, cfg)                       # [B,di,N]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["D"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"h": h, "conv": conv[:, 1:]}
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ===========================================================================
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.ssm.xlstm_heads
+    di = 2 * d                                        # proj factor 2
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),    # [x | gate]
+        "wq": dense_init(ks[1], di, di, dtype),
+        "wk": dense_init(ks[2], di, di, dtype),
+        "wv": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * H, dtype, scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),      # forget-open init
+        "out_norm": init_rmsnorm(di, dtype),
+        "down": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _mlstm_qkv(p, xi, H):
+    q = xi @ p["wq"]
+    k = xi @ p["wk"]
+    v = xi @ p["wv"]
+    hd = q.shape[-1] // H
+    sh = (*q.shape[:-1], H, hd)
+    return (
+        q.reshape(sh).astype(jnp.float32) / math.sqrt(hd),
+        k.reshape(sh).astype(jnp.float32),
+        v.reshape(sh).astype(jnp.float32),
+    )
+
+
+def _mlstm_gates(p, xi, H):
+    gates = (xi @ p["w_if"]).astype(jnp.float32)
+    logi = gates[..., :H] + p["b_i"]
+    logf = jax.nn.log_sigmoid(gates[..., H:] + p["b_f"])
+    return logi, logf
+
+
+def _mlstm_out(C, n, m, q, p, zg, cfg):
+    num = jnp.einsum("...hkv,...hk->...hv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("...hk,...hk->...h", n, q)), 1.0)
+    y = (num / den[..., None]).reshape(*q.shape[:-2], -1).astype(zg.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(zg)
+    return y @ p["down"]
+
+
+def mlstm_forward(p: dict, x: Array, cfg: ModelConfig, mode: str = "assoc") -> Array:
+    """Full-sequence mLSTM. x: [B,S,d]."""
+    B, S, d = x.shape
+    H = cfg.ssm.xlstm_heads
+    up = x @ p["up"]
+    xi, zg = jnp.split(up, 2, axis=-1)
+    hd = xi.shape[-1] // H
+    carry0 = (
+        jnp.zeros((B, H, hd, hd)),                # C (stabilised)
+        jnp.zeros((B, H, hd)),                    # n
+        jnp.full((B, H), -jnp.inf),               # m
+    )
+
+    def chunk_fn(carry, xi_c):                    # xi_c [B,ck,di]
+        """Chunkwise-parallel mLSTM (§Perf hillclimb #3).
+
+        The associative-scan form materialises the [B, ck, H, hd, hd]
+        matrix-memory stack (gigabytes at hd=384). The chunkwise form never
+        stacks C: within the chunk, outputs are an attention-like
+        [ck, ck]-matmul over decay-weighted q·k scores; across chunks only
+        the O(hd²) state carries. Identical math (stabilised), ~ck·hd²/ck²
+        ≈ 2300x less intermediate HBM traffic at ck=64, hd=384.
+        """
+        C0, n0, m0 = carry
+        q, k, v = _mlstm_qkv(p, xi_c, H)          # [B,ck,H,hd]
+        logi, logf = _mlstm_gates(p, xi_c, H)     # [B,ck,H]
+        m = _maxplus_chunk(logf, logi, m0)        # running stabiliser
+        F = jnp.cumsum(logf, axis=1)              # [B,ck,H]
+        # inter-chunk contribution scale: a_t = exp(F_t + m0 - m_t)
+        a = jnp.exp(F + m0[:, None] - m)
+        # intra-chunk decay matrix D[t,s] = exp(F_t - F_s + logi_s - m_t), s<=t
+        expo = (
+            F[:, :, None] - F[:, None, :] + logi[:, None, :] - m[:, :, None]
+        )                                          # [B,ck(t),ck(s),H]
+        tri = jnp.tril(jnp.ones((xi_c.shape[1], xi_c.shape[1]), bool))
+        # mask BEFORE exp: s>t entries have positive exponents (F decreasing)
+        D = jnp.exp(jnp.where(tri[None, :, :, None], expo, -jnp.inf))
+        qk = jnp.einsum("bthd,bshd->btsh", q, k)  # [B,ck,ck,H]
+        w = D * qk
+        num = (
+            a[..., None] * jnp.einsum("bthk,bhkv->bthv", q, C0)
+            + jnp.einsum("btsh,bshv->bthv", w, v)
+        )
+        den_dot = (
+            a * jnp.einsum("bthk,bhk->bth", q, n0)
+            + jnp.einsum("btsh->bth", w)
+        )
+        y = num / jnp.maximum(jnp.abs(den_dot), 1.0)[..., None]
+        # carry: state at chunk end (b_W[s] = D[W-1, s])
+        bW = D[:, -1]                              # [B,ck,H]
+        C1 = a[:, -1][..., None, None] * C0 + jnp.einsum(
+            "bsh,bshk,bshv->bhkv", bW, k, v
+        )
+        n1 = a[:, -1][..., None] * n0 + jnp.einsum("bsh,bshk->bhk", bW, k)
+        return (C1, n1, m[:, -1]), y
+
+    def step_fn(carry, xi_t):                     # xi_t [B,di]
+        C0, n0, m0 = carry
+        q, k, v = _mlstm_qkv(p, xi_t, H)          # [B,H,hd]
+        logi, logf = _mlstm_gates(p, xi_t, H)     # [B,H]
+        m = jnp.maximum(logf + m0, logi)
+        i_st = jnp.exp(logi - m)
+        f_st = jnp.exp(logf + m0 - m)
+        C = f_st[..., None, None] * C0 + i_st[..., None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", k, v
+        )
+        n = f_st[..., None] * n0 + i_st[..., None] * k
+        num = jnp.einsum("bhkv,bhk->bhv", C, q)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+        return (C, n, m), num / den[..., None]
+
+    y = _chunked(xi, carry0, chunk_fn, step_fn, mode, ck=64)
+    y = y.reshape(B, S, -1).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(zg)
+    return y @ p["down"]
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.ssm.xlstm_heads
+    di = 2 * cfg.d_model
+    hd = di // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_decode(p: dict, x: Array, state: dict, cfg: ModelConfig):
+    B, d = x.shape
+    H = cfg.ssm.xlstm_heads
+    up = x @ p["up"]
+    xi, zg = jnp.split(up, 2, axis=-1)
+    q, k, v = _mlstm_qkv(p, xi, H)                    # [B,H,hd]
+    logi, logf = _mlstm_gates(p, xi, H)
+    m = jnp.maximum(logf + state["m"], logi)
+    i_st = jnp.exp(logi - m)
+    f_st = jnp.exp(logf + state["m"] - m)
+    C = f_st[..., None, None] * state["C"] + i_st[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k, v
+    )
+    n = f_st[..., None] * state["n"] + i_st[..., None] * k
+    y = _mlstm_out(C, n, m, q, p, zg, cfg)
+    return y, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    dff = max(1, int(4 * d // 3))
+    return {
+        "w_z": dense_init(ks[0], d, d, dtype),
+        "w_gates": dense_init(ks[1], d, 3 * d, dtype, scale=0.02),  # i,f,o
+        "b_i": jnp.zeros((d,), jnp.float32),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+        "b_o": jnp.zeros((d,), jnp.float32),
+        "ffn_in": dense_init(ks[2], d, dff, dtype),
+        "ffn_gate": dense_init(ks[3], d, dff, dtype),
+        "ffn_out": dense_init(ks[4], dff, d, dtype),
+    }
+
+
+def _slstm_gates(p, x):
+    z = jnp.tanh((x @ p["w_z"]).astype(jnp.float32))
+    g = (x @ p["w_gates"]).astype(jnp.float32)
+    d = z.shape[-1]
+    logi = g[..., :d] + p["b_i"]
+    logf = jax.nn.log_sigmoid(g[..., d : 2 * d] + p["b_f"])
+    o = jax.nn.sigmoid(g[..., 2 * d :] + p["b_o"])
+    return z, logi, logf, o
+
+
+def slstm_forward(p: dict, x: Array, cfg: ModelConfig, mode: str = "assoc") -> Array:
+    B, S, d = x.shape
+    carry0 = (
+        jnp.zeros((B, d)),                        # c
+        jnp.zeros((B, d)),                        # n
+        jnp.full((B, d), -jnp.inf),               # m
+    )
+
+    def chunk_fn(carry, x_c):
+        c0, n0, m0 = carry
+        z, logi, logf, o = _slstm_gates(p, x_c)   # [B,ck,d]
+        m = _maxplus_chunk(logf, logi, m0)
+        m_prev = jnp.concatenate([m0[:, None], m[:, :-1]], 1)
+        i_st = jnp.exp(logi - m)
+        f_st = jnp.exp(logf + m_prev - m)
+        cs = _linear_recurrence_chunk(f_st, i_st * z, c0)
+        ns = _linear_recurrence_chunk(f_st, i_st, n0)
+        h = o * cs / jnp.maximum(ns, 1e-6)
+        return (cs[:, -1], ns[:, -1], m[:, -1]), h
+
+    def step_fn(carry, x_t):
+        c0, n0, m0 = carry
+        z, logi, logf, o = _slstm_gates(p, x_t)   # [B,d]
+        m = jnp.maximum(logf + m0, logi)
+        i_st = jnp.exp(logi - m)
+        f_st = jnp.exp(logf + m0 - m)
+        c = f_st * c0 + i_st * z
+        n = f_st * n0 + i_st
+        return (c, n, m), o * c / jnp.maximum(n, 1e-6)
+
+    h = _chunked(x, carry0, chunk_fn, step_fn, mode).astype(x.dtype)
+    # post-FFN (pf = 4/3 GLU) as in the xLSTM sLSTM block
+    f = jax.nn.silu(h @ p["ffn_gate"]) * (h @ p["ffn_in"])
+    return f @ p["ffn_out"]
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+    }
+
+
+def slstm_decode(p: dict, x: Array, state: dict, cfg: ModelConfig):
+    z, logi, logf, o = _slstm_gates(p, x)         # [B,d]
+    m = jnp.maximum(logf + state["m"], logi)
+    i_st = jnp.exp(logi - m)
+    f_st = jnp.exp(logf + state["m"] - m)
+    c = f_st * state["c"] + i_st * z
+    n = f_st * state["n"] + i_st
+    h = (o * c / jnp.maximum(n, 1e-6)).astype(x.dtype)
+    f = jax.nn.silu(h @ p["ffn_gate"]) * (h @ p["ffn_in"])
+    return f @ p["ffn_out"], {"c": c, "n": n, "m": m}

@@ -1,0 +1,480 @@
+"""Config-driven transformer: one builder for all 10 assigned architectures.
+
+Layers are grouped into repeating *periods* (e.g. gemma2's local/global pair,
+Switch's dense/MoE pair, xLSTM's m/s pair) and the period-group params are
+stacked so the depth dimension runs under `lax.scan` — keeping HLO size
+O(period), not O(n_layers), which is what makes 94-layer dry-runs lower
+quickly.
+
+Three entry points:
+  forward(...)       train / prefill (full-sequence)
+  decode_step(...)   one-token serve step against a cache pytree
+  init_cache(...)    cache pytree (ring-buffer KV for windowed layers,
+                     recurrent states for ssm/hybrid archs, cross-attn
+                     caches for enc-dec)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_lib
+from repro.models.attention import (
+    ShardingCtx,
+    attend_decode,
+    attend_full,
+    init_attention,
+)
+from repro.models.layers import embed_init, ffn, init_ffn, init_rmsnorm, rmsnorm, softcap
+from repro.models.moe import init_moe, moe_layer
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# layer-kind layout
+# ---------------------------------------------------------------------------
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+def period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.block_kind == "attn":
+        p = _lcm(p, len(cfg.attn.layer_pattern))
+        if cfg.moe.enabled:
+            p = _lcm(p, cfg.moe.moe_every)
+    elif cfg.block_kind == "xlstm":
+        p = _lcm(p, max(1, len(cfg.ssm.xlstm_pattern)))
+    return p
+
+
+def sub_kind(cfg: ModelConfig, sub: int) -> Dict[str, Any]:
+    """Static description of sublayer `sub` within a period group."""
+    if cfg.block_kind == "xlstm":
+        pat = cfg.ssm.xlstm_pattern or ("m",)
+        return {"kind": "xlstm", "cell": pat[sub % len(pat)]}
+    if cfg.block_kind == "hymba":
+        return {"kind": "hymba", "moe": False, "window": cfg.attn.window}
+    is_moe = cfg.moe.enabled and (sub % cfg.moe.moe_every == cfg.moe.moe_every - 1)
+    return {
+        "kind": "attn",
+        "moe": is_moe,
+        "window": cfg.layer_window(sub),
+    }
+
+
+def n_moe_layers(cfg: ModelConfig) -> int:
+    if not cfg.moe.enabled:
+        return 0
+    return cfg.n_layers // cfg.moe.moe_every
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, cfg: ModelConfig, sub: int, cross: bool) -> dict:
+    sk = sub_kind(cfg, sub)
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p: dict = {"ln1": init_rmsnorm(d, dtype)}
+    if sk["kind"] == "xlstm":
+        init = ssm_lib.init_mlstm if sk["cell"] == "m" else ssm_lib.init_slstm
+        p["mixer"] = init(ks[0], cfg)
+        return p
+    p["attn"] = init_attention(ks[0], cfg)
+    if sk["kind"] == "hymba":
+        p["mamba"] = ssm_lib.init_mamba(ks[1], cfg)
+        p["attn_norm"] = init_rmsnorm(d, dtype)
+        p["mamba_norm"] = init_rmsnorm(d, dtype)
+    if cross:
+        p["lnx"] = init_rmsnorm(d, dtype)
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+    p["ln2"] = init_rmsnorm(d, dtype)
+    if sk.get("moe"):
+        p["moe"] = init_moe(ks[3], cfg)
+    elif cfg.d_ff:
+        p["mlp"] = init_ffn(ks[4], d, cfg.d_ff, cfg.glu, dtype)
+    if cfg.post_norm:
+        p["ln1_post"] = init_rmsnorm(d, dtype)
+        p["ln2_post"] = init_rmsnorm(d, dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    per = period(cfg)
+    n_groups = cfg.n_layers // per
+    assert cfg.n_layers % per == 0, (cfg.name, cfg.n_layers, per)
+
+    def group(key, cross):
+        sks = jax.random.split(key, per)
+        return {f"sub{s}": _init_sublayer(sks[s], cfg, s, cross) for s in range(per)}
+
+    gks = jax.random.split(ks[0], n_groups)
+    params = {
+        "embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": _stack([group(gks[g], cross=cfg.enc_dec) for g in range(n_groups)]),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype).T
+    if cfg.enc_dec:
+        e_groups = cfg.n_enc_layers // per
+        eks = jax.random.split(ks[3], e_groups)
+        params["enc_blocks"] = _stack(
+            [group(eks[g], cross=False) for g in range(e_groups)]
+        )
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer_full(
+    bp: dict,
+    x: Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    sub: int,
+    causal: bool,
+    enc_out: Optional[Array],
+    routing_override,
+    scan_mode: str,
+):
+    sk = sub_kind(cfg, sub)
+    aux = {}
+    if sk["kind"] == "xlstm":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        fwd = ssm_lib.mlstm_forward if sk["cell"] == "m" else ssm_lib.slstm_forward
+        return x + fwd(bp["mixer"], h, cfg, scan_mode), aux
+
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    layer = sub  # pattern position
+    a = attend_full(bp["attn"], h, cfg, layer, ctx, causal=causal)
+    if sk["kind"] == "hymba":
+        mmb = ssm_lib.mamba_forward(bp["mamba"], h, cfg, scan_mode)
+        a = 0.5 * (
+            rmsnorm(bp["attn_norm"], a, cfg.norm_eps)
+            + rmsnorm(bp["mamba_norm"], mmb, cfg.norm_eps)
+        )
+    if cfg.post_norm:
+        a = rmsnorm(bp["ln1_post"], a, cfg.norm_eps)
+    x = x + a
+    if enc_out is not None and "xattn" in bp:
+        hx = rmsnorm(bp["lnx"], x, cfg.norm_eps)
+        x = x + attend_full(bp["xattn"], hx, cfg, layer, ctx, causal=False, kv_from=enc_out)
+    h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if sk.get("moe"):
+        y, moe_aux = moe_layer(bp["moe"], h, cfg, ctx, routing_override=routing_override)
+        aux = moe_aux
+    elif "mlp" in bp:
+        y = ffn(bp["mlp"], h, cfg.act, cfg.glu)
+    else:
+        y = jnp.zeros_like(h)
+    if cfg.post_norm:
+        y = rmsnorm(bp["ln2_post"], y, cfg.norm_eps)
+    return x + y, aux
+
+
+def _run_stack(
+    blocks,
+    x: Array,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    causal: bool,
+    enc_out: Optional[Array],
+    routing_override,  # (ids [L_moe,B,S,k], w) or None
+    collect_router_logits: bool,
+    scan_mode: str,
+    remat: bool = False,
+):
+    per = period(cfg)
+    moe_per_group = sum(1 for s in range(per) if sub_kind(cfg, s).get("moe"))
+
+    def body(carry, xs):
+        x, g = carry
+        gp = xs
+
+        def one(x, moe_seen, rl_list):
+            for s in range(per):
+                ro = None
+                if routing_override is not None and sub_kind(cfg, s).get("moe"):
+                    li = g * moe_per_group + moe_seen
+                    ro = (routing_override[0][li], routing_override[1][li])
+                x, aux = _apply_sublayer_full(
+                    gp[f"sub{s}"], x, cfg, ctx, s, causal, enc_out, ro, scan_mode
+                )
+                if sub_kind(cfg, s).get("moe"):
+                    moe_seen += 1
+                    rl_list.append(aux)
+            return x, rl_list
+
+        rl_list: list = []
+        x, rl_list = one(x, 0, rl_list)
+        x = ctx.act_constrain(x)
+        ys = {}
+        if moe_per_group:
+            ys["aux_loss"] = sum(a["aux_loss"] for a in rl_list)
+            ys["z_loss"] = sum(a["z_loss"] for a in rl_list)
+            if collect_router_logits:
+                ys["router_logits"] = jnp.stack(
+                    [a["router_logits"] for a in rl_list]
+                )  # [moe_per_group, B, S, E]
+        return (x, g + 1), ys
+
+    if remat:
+        body = jax.checkpoint(body)  # recompute group internals in backward
+    (x, _), ys = jax.lax.scan(body, (x, 0), blocks)
+    x = ctx.constrain(x, P(ctx.batch_spec(x.shape[0]), None, None))
+    return x, ys
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: Array) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padded vocab columns (see ModelConfig.padded_vocab)
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    tokens: Array,                       # [B, S] int32 (decoder tokens)
+    enc_input: Optional[Array] = None,   # [B, S_enc, d] stub frontend embeddings
+    routing_override=None,
+    collect_router_logits: bool = False,
+    scan_mode: str = "assoc",
+    remat: bool = False,
+) -> Dict[str, Any]:
+    """Full forward. Returns dict(logits, aux_loss, z_loss, router_logits?)."""
+    enc_out = None
+    if cfg.enc_dec:
+        assert enc_input is not None, "enc-dec arch needs encoder input"
+        e = enc_input.astype(jnp.dtype(cfg.dtype))
+        e, _ = _run_stack(
+            params["enc_blocks"], e, cfg, ctx, causal=False, enc_out=None,
+            routing_override=None, collect_router_logits=False,
+            scan_mode=scan_mode, remat=remat,
+        )
+        enc_out = rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+
+    x = embed_tokens(params, cfg, tokens)
+    x = ctx.act_constrain(x)
+    x, ys = _run_stack(
+        params["blocks"], x, cfg, ctx, causal=True, enc_out=enc_out,
+        routing_override=routing_override,
+        collect_router_logits=collect_router_logits,
+        scan_mode=scan_mode, remat=remat,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+
+    out: Dict[str, Any] = {"logits": logits}
+    if ys:
+        out["aux_loss"] = ys["aux_loss"].sum()
+        out["z_loss"] = ys["z_loss"].sum()
+        if collect_router_logits:
+            rl = ys["router_logits"]  # [G, mpg, B, S, E]
+            out["router_logits"] = rl.reshape(-1, *rl.shape[2:])
+    else:
+        out["aux_loss"] = jnp.zeros((), jnp.float32)
+        out["z_loss"] = jnp.zeros((), jnp.float32)
+    return out
+
+
+def lm_loss(logits: Array, labels: Array, mask: Optional[Array] = None) -> Array:
+    """Cross-entropy; labels [B,S] with -100 = ignore."""
+    valid = labels >= 0 if mask is None else mask
+    lbl = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, lbl[..., None], axis=-1)[..., 0]
+    return -(ll * valid).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# cache + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, sub: int, seq_budget: int) -> int:
+    sk = sub_kind(cfg, sub)
+    w = sk.get("window", 0)
+    return min(seq_budget, w) if w else seq_budget
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    seq_budget: int,
+    enc_len: int = 0,
+) -> dict:
+    """Zeros cache pytree. Layout: {"sub{s}": per-group-stacked state}."""
+    per = period(cfg)
+    n_groups = cfg.n_layers // per
+    dtype = jnp.dtype(cfg.dtype)
+    K, D = cfg.n_kv_heads, cfg.hd
+    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+    for s in range(per):
+        sk = sub_kind(cfg, s)
+        entry: dict = {}
+        if sk["kind"] == "xlstm":
+            init = (
+                ssm_lib.mlstm_init_state if sk["cell"] == "m" else ssm_lib.slstm_init_state
+            )
+            st = init(cfg, batch)
+            entry["state"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups, *x.shape)).copy(), st
+            )
+        else:
+            Sc = cache_len(cfg, s, seq_budget)
+            entry["k"] = jnp.zeros((n_groups, batch, Sc, K, D), dtype)
+            entry["v"] = jnp.zeros((n_groups, batch, Sc, K, D), dtype)
+            if sk["kind"] == "hymba":
+                st = ssm_lib.mamba_init_state(cfg, batch, dtype)
+                entry["state"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n_groups, *x.shape)).copy(), st
+                )
+            if cfg.enc_dec:
+                entry["cross_k"] = jnp.zeros((n_groups, batch, enc_len, K, D), dtype)
+                entry["cross_v"] = jnp.zeros((n_groups, batch, enc_len, K, D), dtype)
+        cache[f"sub{s}"] = entry
+    if cfg.enc_dec:
+        cache["cross_len"] = jnp.full((batch,), enc_len, jnp.int32)
+    return cache
+
+
+def _apply_sublayer_decode(
+    bp: dict,
+    entry: dict,
+    x: Array,                  # [B, d]
+    pos: Array,                # [B]
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    sub: int,
+    cross_len: Optional[Array],
+    routing_override,
+):
+    sk = sub_kind(cfg, sub)
+    new_entry = dict(entry)
+    if sk["kind"] == "xlstm":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        dec = ssm_lib.mlstm_decode if sk["cell"] == "m" else ssm_lib.slstm_decode
+        y, st = dec(bp["mixer"], h, entry["state"], cfg)
+        new_entry["state"] = st
+        return x + y, new_entry
+
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    a, nk, nv = attend_decode(
+        bp["attn"], h, entry["k"], entry["v"], pos, cfg, sub, ctx
+    )
+    new_entry["k"], new_entry["v"] = nk, nv
+    if sk["kind"] == "hymba":
+        mmb, st = ssm_lib.mamba_decode(bp["mamba"], h, entry["state"], cfg)
+        new_entry["state"] = st
+        a = 0.5 * (
+            rmsnorm(bp["attn_norm"], a, cfg.norm_eps)
+            + rmsnorm(bp["mamba_norm"], mmb, cfg.norm_eps)
+        )
+    if cfg.post_norm:
+        a = rmsnorm(bp["ln1_post"], a, cfg.norm_eps)
+    x = x + a
+    if "xattn" in bp and cross_len is not None:
+        hx = rmsnorm(bp["lnx"], x, cfg.norm_eps)
+        ya, _, _ = attend_decode(
+            bp["xattn"], hx, entry["cross_k"], entry["cross_v"],
+            pos, cfg, sub, ctx, cross=True, cross_len=cross_len,
+        )
+        x = x + ya
+    h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if sk.get("moe"):
+        from repro.models.moe import moe_decode
+
+        y = moe_decode(bp["moe"], h, cfg, ctx, routing_override=routing_override)
+    elif "mlp" in bp:
+        y = ffn(bp["mlp"], h, cfg.act, cfg.glu)
+    else:
+        y = jnp.zeros_like(h)
+    if cfg.post_norm:
+        y = rmsnorm(bp["ln2_post"], y, cfg.norm_eps)
+    return x + y, new_entry
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    tokens: Array,            # [B] int32
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    routing_override=None,    # (ids [L_moe,B,k], w [L_moe,B,k])
+) -> Tuple[Array, dict]:
+    """One serve step: next-token logits [B, V] + updated cache."""
+    per = period(cfg)
+    moe_per_group = sum(1 for s in range(per) if sub_kind(cfg, s).get("moe"))
+    pos = cache["pos"]
+    cross_len = cache.get("cross_len")
+    x = embed_tokens(params, cfg, tokens)
+
+    def body(carry, xs):
+        x, g = carry
+        gp, entries = xs
+        new_entries = {}
+        moe_seen = 0
+        for s in range(per):
+            ro = None
+            if routing_override is not None and sub_kind(cfg, s).get("moe"):
+                li = g * moe_per_group + moe_seen
+                ro = (routing_override[0][li], routing_override[1][li])
+                moe_seen += 1
+            x, ne = _apply_sublayer_decode(
+                gp[f"sub{s}"], entries[f"sub{s}"], x, pos, cfg, ctx, s,
+                cross_len, ro,
+            )
+            new_entries[f"sub{s}"] = ne
+        return (x, g + 1), new_entries
+
+    entries = {k: v for k, v in cache.items() if k.startswith("sub")}
+    (x, _), new_entries = jax.lax.scan(body, (x, 0), (params["blocks"], entries))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache.update(new_entries)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,229 @@
+"""Sharding policy: best-effort PartitionSpecs for params, optimizer state,
+inputs, and decode caches, per (arch × input-shape × mesh).
+
+Rules (DESIGN.md §5) — every rule checks divisibility and falls back to
+replication, so every assigned architecture lowers on every mesh:
+
+* weights (2D+): last dim ("output features", incl. the MoE expert dim for
+  routers / vocab for embeddings) -> `model`; second-to-last -> `data`
+  (FSDP/ZeRO-style full sharding — required for the 235B-scale configs to
+  fit 16 GB/chip).
+* MoE expert stacks [G, E, d, f]: E -> `model` (expert parallelism),
+  f -> `data`.
+* batch dims of inputs -> ("pod", "data") when divisible.
+* decode KV caches: seq dim -> `model` (flash-decode partial-softmax merge
+  happens in shard_map, see models/attention.py), batch -> ("pod","data").
+* `pod` axis: pure data parallelism across pods (params replicated over pod).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.attention import ShardingCtx
+from repro.models.transformer import init_cache, init_params
+
+Array = jax.Array
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    return axis is not None and n % int(np.prod([mesh.shape[a] for a in _tup(axis)])) == 0
+
+
+def _tup(axis) -> Tuple[str, ...]:
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def make_ctx(mesh: Optional[Mesh]) -> ShardingCtx:
+    if mesh is None:
+        return ShardingCtx()
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    return ShardingCtx(
+        mesh=mesh,
+        batch_axes=batch_axes or None,
+        model_axis="model" if "model" in names else None,
+        decode_seq_axis=None,  # enabled for decode shapes in serve specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_EXPERT_KEYS = ("w_in", "w_gate", "w_out")
+
+
+def _param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Greedy best-effort spec for one parameter."""
+    model = "model" if "model" in mesh.axis_names else None
+    data = "data" if "data" in mesh.axis_names else None
+
+    ndim = len(shape)
+    if ndim <= 1:
+        return P()
+    is_block = path.startswith("blocks") or path.startswith("enc_blocks")
+    is_expert = is_block and any(f"moe/{k}" in path for k in _EXPERT_KEYS)
+
+    entries: list = [None] * ndim
+    if path == "embed":
+        # [V, d]: vocab -> model so the (un)embedding logits land V-sharded
+        # (a replicated [B,S,V] activation is the single biggest temp killer)
+        if _div(shape[0], mesh, model):
+            entries[0] = model
+        if _div(shape[1], mesh, data):
+            entries[1] = data
+        return P(*entries)
+    if path == "head":
+        # [d, V]: vocab -> model (same reason), d -> data
+        if _div(shape[1], mesh, model):
+            entries[1] = model
+        if _div(shape[0], mesh, data):
+            entries[0] = data
+        return P(*entries)
+    if is_expert:
+        # [G, E, d_in, d_out]: experts -> model, d_out -> data
+        if _div(shape[1], mesh, model):
+            entries[1] = model
+        if _div(shape[3], mesh, data):
+            entries[3] = data
+        return P(*entries)
+
+    if path.endswith("moe/router"):
+        # router stays E-replicated: sharding E over `model` forces a
+        # full-logits all-gather before every top_k (§Perf iteration 3a);
+        # the matrix is tiny (d x E), so shard only the d dim over data.
+        if _div(shape[ndim - 2], mesh, data):
+            entries[ndim - 2] = data
+        return P(*entries)
+
+    # Megatron-style 1D pairing (§Perf iteration: down-projection pairing):
+    #   up/column weights:   out -> model, in -> data
+    #   down/row weights:    in  -> model, out -> data
+    # so the intermediate activation stays model-sharded between the pair
+    # and only one collective (psum/reduce-scatter) closes each block,
+    # instead of an all-gather around every matmul.
+    leaf = path.rsplit("/", 1)[-1]
+    is_down = leaf in ("wo", "w_out", "down", "ffn_out", "out_proj", "dt_proj")
+    out_dim, in_dim = ndim - 1, ndim - 2
+    lead_ok = in_dim >= (1 if is_block and ndim >= 3 else 0)
+    if is_down:
+        if lead_ok and _div(shape[in_dim], mesh, model):
+            entries[in_dim] = model
+        if _div(shape[out_dim], mesh, data):
+            entries[out_dim] = data
+        return P(*entries)
+    if _div(shape[out_dim], mesh, model):
+        entries[out_dim] = model
+    if lead_ok and _div(shape[in_dim], mesh, data):
+        entries[in_dim] = data
+    return P(*entries)
+
+
+def _paths_and_specs(tree, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        specs.append(_param_spec(key, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, key=None):
+    """PartitionSpec pytree for init_params(cfg) — via eval_shape (no alloc)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(partial(init_params, cfg=cfg), key)
+    return _paths_and_specs(shapes, mesh)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, pspecs):
+    """AdamW state: m/v shadow the param specs; t replicated."""
+    return {"m": pspecs, "v": pspecs, "t": P()}
+
+
+# ---------------------------------------------------------------------------
+# input / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes_for(mesh: Mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not axes:
+        return None
+    ext = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % ext == 0:
+        return axes
+    # try data-only / pod-only
+    for sub in (("data",), ("pod",)):
+        if all(a in mesh.axis_names for a in sub):
+            if batch % int(np.prod([mesh.shape[a] for a in sub])) == 0:
+                return sub
+    return None
+
+
+def token_specs(mesh: Mesh, batch: int) -> P:
+    return P(batch_axes_for(mesh, batch), None)
+
+
+def decode_plan(
+    mesh: Mesh, batch: int
+) -> Tuple[Optional[Tuple[str, ...]], Optional[Tuple[str, ...]]]:
+    """(batch axes, KV-seq axes) for decode.
+
+    The cache seq dim always shards over `model` (heads are replicated in
+    decode — the model axis is free); when the batch can't use the data axes
+    (e.g. long_500k batch=1) the seq dim takes them too, maximising how much
+    cache each chip must hold.
+    """
+    b_ax = batch_axes_for(mesh, batch)
+    seq_axes = tuple(
+        a for a in ("model",) + (("pod", "data") if b_ax is None else ())
+        if a in mesh.axis_names
+    )
+    return b_ax, (seq_axes or None)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_budget: int, enc_len: int = 0):
+    """Spec pytree matching init_cache(cfg, batch, seq_budget)."""
+    b_ax, seq_axes = decode_plan(mesh, batch)
+    model = "model" if "model" in mesh.axis_names else None
+    shapes = jax.eval_shape(
+        partial(init_cache, cfg, batch, seq_budget, enc_len)
+    )
+
+    def spec_for(path_key: str, shape) -> P:
+        nd = len(shape.shape)
+        if path_key in ("pos", "cross_len"):
+            return P(b_ax)
+        if any(t in path_key for t in ("/k", "/v", "cross_k", "cross_v")) and nd == 5:
+            # [G, B, Sc, K, D] — seq -> flash-decode shard axes
+            seq_ax = seq_axes if seq_axes and _div(shape.shape[2], mesh, seq_axes) else None
+            return P(None, b_ax, seq_ax, None, None)
+        # recurrent states [G, B, ...]: shard the widest trailing dim on model
+        entries = [None, b_ax] + [None] * (nd - 2)
+        for i in range(nd - 1, 1, -1):
+            if _div(shape.shape[i], mesh, model):
+                entries[i] = model
+                break
+        return P(*entries)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        specs.append(spec_for(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

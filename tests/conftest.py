@@ -1,0 +1,39 @@
+import os
+import sys
+
+# tests must see the real (1-)device CPU backend — never the dry-run's 512
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "tests must run without the dry-run XLA_FLAGS"
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.attention import ShardingCtx
+from repro.models.transformer import init_params
+
+
+@pytest.fixture(scope="session")
+def ctx():
+    return ShardingCtx()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+_PARAM_CACHE = {}
+
+
+def reduced_params(name: str, seed: int = 0):
+    """Session-cached reduced-config params (init is the slow part)."""
+    key = (name, seed)
+    if key not in _PARAM_CACHE:
+        cfg = get_config(name).reduced()
+        _PARAM_CACHE[key] = (cfg, init_params(jax.random.PRNGKey(seed), cfg))
+    return _PARAM_CACHE[key]

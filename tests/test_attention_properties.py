@@ -1,0 +1,109 @@
+"""Attention invariants (hypothesis property tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models.attention import ShardingCtx, attend_full, init_attention
+from repro.models.transformer import forward, init_params
+
+CTX = ShardingCtx()
+
+
+def _cfg(window=0, softcap=0.0, qk_norm=False):
+    base = get_config("smollm-135m").reduced()
+    return dataclasses.replace(
+        base,
+        head_dim=16,
+        attn=dataclasses.replace(
+            base.attn, window=window, logit_softcap=softcap, qk_norm=qk_norm
+        ),
+    )
+
+
+@given(seed=st.integers(0, 50), t=st.integers(1, 10))
+@settings(max_examples=10, deadline=None)
+def test_causality(seed, t):
+    """Changing tokens at positions > t must not change logits at <= t."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(seed)
+    S = 12
+    toks = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    toks2 = toks.at[0, t + 1 :].set(
+        (toks[0, t + 1 :] + 7) % cfg.vocab_size
+    )
+    a = forward(params, cfg, CTX, toks, scan_mode="scan")["logits"]
+    b = forward(params, cfg, CTX, toks2, scan_mode="scan")["logits"]
+    np.testing.assert_allclose(
+        np.asarray(a[0, : t + 1], np.float32),
+        np.asarray(b[0, : t + 1], np.float32),
+        atol=1e-5,
+    )
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_batch_permutation_equivariance(seed):
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (4, 8), 0, cfg.vocab_size)
+    perm = np.array([2, 0, 3, 1])
+    a = forward(params, cfg, CTX, toks, scan_mode="scan")["logits"]
+    b = forward(params, cfg, CTX, toks[perm], scan_mode="scan")["logits"]
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32)[perm], np.asarray(b, np.float32), atol=1e-5
+    )
+
+
+@given(window=st.integers(1, 3))
+@settings(max_examples=6, deadline=None)
+def test_window_limits_receptive_field(window):
+    """With window w and L stacked local layers, logits at position t depend
+    only on tokens in (t - L·w, t] — perturbing older tokens changes nothing."""
+    cfg = _cfg(window=window)
+    cfg = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, layer_pattern=("local",))
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    S, t = 14, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    cutoff = t - cfg.n_layers * window  # strictly outside the stacked field
+    if cutoff <= 0:
+        return
+    toks2 = toks.at[0, :cutoff].set((toks[0, :cutoff] + 3) % cfg.vocab_size)
+    a = forward(params, cfg, CTX, toks, scan_mode="scan")["logits"]
+    b = forward(params, cfg, CTX, toks2, scan_mode="scan")["logits"]
+    np.testing.assert_allclose(
+        np.asarray(a[0, t], np.float32), np.asarray(b[0, t], np.float32), atol=1e-5
+    )
+
+
+def test_softcap_bounds_attention_logits():
+    """gemma2 softcap: outputs finite & bounded even with huge activations."""
+    cfg = _cfg(softcap=50.0)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y = attend_full(p, x.astype(cfg.dtype), cfg, 0, CTX)
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+
+
+@given(scale=st.floats(0.5, 4.0))
+@settings(max_examples=6, deadline=None)
+def test_qk_norm_scale_invariance(scale):
+    """With qk-norm, scaling the attention input barely moves the attention
+    pattern (per-head RMS normalisation) — outputs stay finite and close in
+    direction."""
+    cfg = _cfg(qk_norm=True)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 6, cfg.d_model))
+    y1 = attend_full(p, x.astype(cfg.dtype), cfg, 0, CTX)
+    y2 = attend_full(p, (x * scale).astype(cfg.dtype), cfg, 0, CTX)
+    assert bool(jnp.isfinite(y2.astype(jnp.float32)).all())
+    # v path scales linearly; direction of outputs preserved
+    c = jnp.sum(y1 * y2) / (jnp.linalg.norm(y1) * jnp.linalg.norm(y2) + 1e-9)
+    assert float(c) > 0.95

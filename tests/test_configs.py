@@ -1,0 +1,111 @@
+"""Config registry: the 10 assigned architectures (+ the paper's Switch family)."""
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs, shape_supported
+
+ASSIGNED = {
+    # name: (family, n_layers, d_model, n_heads, n_kv, d_ff, vocab)
+    "gemma2-9b": ("dense", 42, 3584, 16, 8, 14336, 256000),
+    "qwen3-moe-235b-a22b": ("moe", 94, 4096, 64, 4, 0, 151936),
+    "stablelm-12b": ("dense", 40, 5120, 32, 8, 13824, 100352),
+    "hymba-1.5b": ("hybrid", 32, 1600, 25, 5, 5504, 32001),
+    "qwen2-1.5b": ("dense", 28, 1536, 12, 2, 8960, 151936),
+    "chameleon-34b": ("vlm", 48, 8192, 64, 8, 22016, 65536),
+    "seamless-m4t-medium": ("audio", 12, 1024, 16, 16, 4096, 256206),
+    "xlstm-125m": ("ssm", 12, 768, 4, 4, 0, 50304),
+    "deepseek-moe-16b": ("moe", 28, 2048, 16, 16, 0, 102400),
+    "smollm-135m": ("dense", 30, 576, 9, 3, 1536, 49152),
+}
+
+
+def test_all_assigned_registered():
+    names = set(list_configs())
+    for a in ASSIGNED:
+        assert a in names
+    for e in (8, 64, 128, 256):
+        assert f"switch-base-{e}" in names
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_exact_spec(name):
+    fam, L, d, H, K, ff, V = ASSIGNED[name]
+    cfg = get_config(name)
+    assert cfg.family == fam
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H and cfg.n_kv_heads == K
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    assert cfg.citation
+
+
+def test_moe_details():
+    q = get_config("qwen3-moe-235b-a22b")
+    assert (q.moe.num_experts, q.moe.top_k, q.moe.d_expert) == (128, 8, 1536)
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.moe.num_experts, ds.moe.top_k) == (64, 6)
+    assert ds.moe.num_shared_experts == 2
+    hy = get_config("hymba-1.5b")
+    assert hy.ssm.state_dim == 16 and hy.block_kind == "hymba"
+    xl = get_config("xlstm-125m")
+    assert xl.block_kind == "xlstm" and set(xl.ssm.xlstm_pattern) == {"m", "s"}
+    g = get_config("gemma2-9b")
+    assert g.attn.logit_softcap == 50.0 and g.final_logit_softcap == 30.0
+    assert g.attn.layer_pattern == ("local", "global") and g.attn.window == 4096
+    assert get_config("qwen2-1.5b").attn.qkv_bias
+    sm = get_config("seamless-m4t-medium")
+    assert sm.enc_dec and sm.n_enc_layers == 12
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_is_small(name):
+    r = get_config(name).reduced()
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    assert r.moe.num_experts <= 4
+    assert r.vocab_size <= 512
+    # family-defining features survive reduction
+    assert r.family == get_config(name).family
+    assert r.block_kind == get_config(name).block_kind
+
+
+def test_param_counts_switch_table2():
+    """Table 2: MoE params dominate, growing with expert count."""
+    prev_frac = 0.0
+    for e in (8, 64, 128, 256):
+        cfg = get_config(f"switch-base-{e}")
+        c = cfg.param_counts()
+        frac = c["moe"] / c["total"]
+        assert frac > prev_frac
+        prev_frac = frac
+    assert prev_frac > 0.9  # switch-base-256: >90% of params are experts
+
+
+def test_shape_support_matrix():
+    n = 0
+    for name in ASSIGNED:
+        cfg = get_config(name)
+        for s in INPUT_SHAPES.values():
+            ok, why = shape_supported(cfg, s)
+            n += ok
+            if not ok:
+                assert s.name == "long_500k" and why
+    # exactly 3 archs run long_500k (xlstm, hymba, gemma2)
+    assert n == 10 * 3 + 3
+
+
+def test_param_count_magnitudes():
+    """Config param totals should land near the advertised model sizes."""
+    expect = {
+        "gemma2-9b": (8e9, 12e9),
+        "qwen3-moe-235b-a22b": (180e9, 280e9),
+        "stablelm-12b": (10e9, 14e9),
+        "chameleon-34b": (28e9, 40e9),
+        "qwen2-1.5b": (1.2e9, 2.2e9),
+        "smollm-135m": (0.1e9, 0.2e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+    }
+    for name, (lo, hi) in expect.items():
+        total = get_config(name).param_counts()["total"]
+        assert lo < total < hi, (name, total)

@@ -1,0 +1,169 @@
+"""Beyond-paper extensions: int8 host store, SSD spill tier, incremental
+decode hash prediction, autoregressive decode engine, cache-aware scheduling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.configs.base import get_config
+from repro.core.decode_engine import (
+    SiDADecodeEngine,
+    hash_fn_step,
+    hash_state_init,
+)
+from repro.core.engine import SiDAEngine
+from repro.core.hash_fn import hash_fn_apply, init_hash_fn
+from repro.core.hash_table import HashTable
+from repro.core.offload import ExpertStore, quantize_expert
+from repro.models.transformer import n_moe_layers
+
+
+# ---------------------------------------------------------------------------
+# int8 host store
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_expert_roundtrip():
+    w = np.random.default_rng(0).normal(size=(3, 64, 32)).astype(np.float32)
+    q, scale = quantize_expert(w)
+    assert q.dtype == np.int8
+    deq = q.astype(np.float32) * scale
+    rel = np.abs(deq - w).max() / np.abs(w).max()
+    assert rel < 0.02, rel
+    assert q.nbytes == w.nbytes // 4
+
+
+def _table(L, E, seed=0):
+    rng = np.random.default_rng(seed)
+    return HashTable(
+        0,
+        rng.integers(0, E, (L, 2, 8, 1)).astype(np.int32),
+        rng.random((L, 2, 8, 1)).astype(np.float32),
+    )
+
+
+def test_int8_store_loads_dequantized_slots():
+    cfg, params = reduced_params("switch-base-8")
+    fp = ExpertStore(cfg, params, slots_per_layer=4)
+    q8 = ExpertStore(cfg, params, slots_per_layer=4, host_quant="int8")
+    table = _table(fp.L, fp.E)
+    t_fp = fp.prepare(table)
+    t_q8 = q8.prepare(table)
+    np.testing.assert_array_equal(t_fp, t_q8)
+    # dequantised slot contents close to fp
+    s = fp.moe_subs[0]
+    a = np.asarray(fp.serve_params["blocks"][f"sub{s}"]["moe"]["w_in"], np.float32)
+    b = np.asarray(q8.serve_params["blocks"][f"sub{s}"]["moe"]["w_in"], np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 0.02, rel
+    # and moved ~4x fewer bytes (int8 vs f32 reduced-config weights)
+    assert q8.stats.bytes_h2d < fp.stats.bytes_h2d / 2
+
+
+def test_spill_dir_memmap(tmp_path):
+    cfg, params = reduced_params("switch-base-8")
+    st = ExpertStore(cfg, params, slots_per_layer=4, spill_dir=str(tmp_path))
+    assert any(f.suffix == ".npy" for f in tmp_path.iterdir())
+    table = _table(st.L, st.E)
+    trans = st.prepare(table)  # loads straight from the memmap tier
+    assert (trans >= 0).any()
+
+
+# ---------------------------------------------------------------------------
+# incremental hash prediction
+# ---------------------------------------------------------------------------
+
+
+def test_hash_fn_step_matches_full_sequence():
+    """Incremental (ring-buffer) prediction == the causal full-sequence
+    predictor for sequences within the ring."""
+    d_model, L, E, dh = 32, 2, 8, 16
+    hp = init_hash_fn(jax.random.PRNGKey(0), d_model, L, E, d_h=dh)
+    B, S = 2, 12
+    emb = jax.random.normal(jax.random.PRNGKey(1), (B, S, d_model))
+    full = hash_fn_apply(hp, emb, num_experts=E, causal=True)  # [B, S, L, E]
+    state = hash_state_init(hp, B)
+    outs = []
+    for t in range(S):
+        logits, state = hash_fn_step(hp, emb[:, t], state, E)
+        outs.append(logits)
+    stepped = jnp.stack(outs, axis=1)                     # [B, S, L, E]
+    err = float(jnp.abs(stepped - full).max())
+    assert err < 1e-4, err
+
+
+def test_decode_engine_generates():
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    from repro.models.transformer import init_params
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    eng = SiDADecodeEngine(cfg, params, hp, slots_per_layer=2, serve_top_k=1)
+    start = np.array([1, 2], np.int32)
+    out, m = eng.generate(start, steps=10, cache_len=16)
+    assert out.shape == (2, 10)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    assert m.steps == 10
+    # steady state: later steps hit the expert cache more than the first
+    assert m.loads_per_step[-1] <= m.loads_per_step[0]
+
+
+def test_decode_engine_int8_close_to_fp():
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    from repro.models.transformer import init_params
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    e1 = SiDADecodeEngine(cfg, params, hp, slots_per_layer=4, serve_top_k=1)
+    e2 = SiDADecodeEngine(cfg, params, hp, slots_per_layer=4, serve_top_k=1,
+                          host_quant="int8")
+    start = np.array([3, 4], np.int32)
+    o1, _ = e1.generate(start, steps=8, cache_len=16)
+    o2, _ = e2.generate(start, steps=8, cache_len=16)
+    # greedy decode is discrete: require strong (not perfect) agreement
+    assert (o1 == o2).mean() > 0.7
+
+
+# ---------------------------------------------------------------------------
+# cache-aware scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_lookahead_scheduling_reduces_loads():
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    from repro.models.transformer import init_params
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    rng = np.random.default_rng(0)
+    # two "domains" of batches with disjoint token ranges -> distinct experts
+    batches = []
+    for i in range(8):
+        lo, hi = (0, cfg.vocab_size // 2) if i % 2 == 0 else (cfg.vocab_size // 2, cfg.vocab_size)
+        batches.append(rng.integers(lo, hi, (2, 12)).astype(np.int32))
+
+    e1 = SiDAEngine(cfg, params, hp, slots_per_layer=2)
+    e1.serve(batches, threaded=True, lookahead=1)
+    loads_fifo = e1.store.stats.loads
+    e2 = SiDAEngine(cfg, params, hp, slots_per_layer=2)
+    e2.serve(batches, threaded=True, lookahead=4)
+    loads_sched = e2.store.stats.loads
+    assert loads_sched <= loads_fifo
+    # results identical regardless of serving order
+    for a, b in zip(e1.results, e2.results):
+        np.testing.assert_allclose(a, b, atol=1e-5)

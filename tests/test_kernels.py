@@ -1,0 +1,196 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
+asserting allclose against the pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,C,d,F", [
+    (1, 128, 128, 128),
+    (4, 256, 512, 384),
+    (3, 128, 256, 640),
+    (8, 512, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_ffn_shapes(E, C, d, F, dtype):
+    ks = jax.random.split(KEY, 4)
+    xe = jax.random.normal(ks[0], (E, C, d), dtype)
+    wi = (jax.random.normal(ks[1], (E, d, F)) * 0.05).astype(dtype)
+    wg = (jax.random.normal(ks[2], (E, d, F)) * 0.05).astype(dtype)
+    wo = (jax.random.normal(ks[3], (E, F, d)) * 0.05).astype(dtype)
+    got = ops.expert_ffn(xe, wi, wg, wo)
+    want = ref.expert_ffn_ref(xe, wi, wg, wo)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("act,glu", [("silu", True), ("gelu", False), ("relu", True)])
+def test_expert_ffn_acts(act, glu):
+    ks = jax.random.split(KEY, 4)
+    E, C, d, F = 2, 128, 256, 256
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wi = jax.random.normal(ks[1], (E, d, F)) * 0.05
+    wg = jax.random.normal(ks[2], (E, d, F)) * 0.05 if glu else None
+    wo = jax.random.normal(ks[3], (E, F, d)) * 0.05
+    got = ops.expert_ffn(xe, wi, wg, wo, act=act)
+    want = ref.expert_ffn_ref(xe, wi, wg, wo, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_expert_ffn_block_sweep():
+    """Different BlockSpec tilings must give identical results."""
+    ks = jax.random.split(KEY, 4)
+    E, C, d, F = 2, 256, 128, 256
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wi = jax.random.normal(ks[1], (E, d, F)) * 0.05
+    wg = jax.random.normal(ks[2], (E, d, F)) * 0.05
+    wo = jax.random.normal(ks[3], (E, F, d)) * 0.05
+    want = ref.expert_ffn_ref(xe, wi, wg, wo)
+    for bc, bf in [(64, 64), (128, 128), (256, 256), (128, 64)]:
+        got = ops.expert_ffn(xe, wi, wg, wo, bc=bc, bf=bf)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sparsemax
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,L", [(1, 4), (37, 33), (256, 128), (300, 7)])
+def test_sparsemax_shapes(rows, L):
+    z = jax.random.normal(KEY, (rows, L)) * 3
+    got = ops.sparsemax(z)
+    want = ref.sparsemax_ref(z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@given(
+    rows=st.integers(1, 20), L=st.integers(2, 40),
+    scale=st.floats(0.1, 20.0), seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_sparsemax_properties(rows, L, scale, seed):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (rows, L)) * scale
+    out = np.asarray(ops.sparsemax(z))
+    # projection onto the simplex: nonneg, sums to 1
+    assert (out >= 0).all()
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-4)
+    # matches oracle
+    np.testing.assert_allclose(out, np.asarray(ref.sparsemax_ref(z)), atol=1e-4)
+    # sparsity: strictly fewer nonzeros than softmax for spread inputs
+    assert ((out > 0).sum(-1) <= L).all()
+
+
+def test_sparsemax_is_sparse_vs_softmax():
+    z = jax.random.normal(KEY, (64, 32)) * 4
+    out = np.asarray(ops.sparsemax(z))
+    assert (out == 0).mean() > 0.3  # plenty of exact zeros (softmax has none)
+
+
+def test_sparsemax_nd_input():
+    z = jax.random.normal(KEY, (2, 5, 17))
+    got = ops.sparsemax(z)
+    want = ref.sparsemax_ref(z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+
+
+def _cache(B, S, K, D, pos_vals, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k = jax.random.normal(ks[0], (B, S, K, D))
+    v = jax.random.normal(ks[1], (B, S, K, D))
+    pos = jnp.asarray(pos_vals, jnp.int32)
+    sidx = jnp.arange(S)[None, :]
+    slot_pos = pos[:, None] - ((pos[:, None] - sidx) % S)
+    slot_pos = jnp.where(slot_pos >= 0, slot_pos, -1)
+    return k, v, slot_pos, pos
+
+
+@pytest.mark.parametrize("B,H,K,D,S", [
+    (1, 4, 4, 64, 256),
+    (2, 8, 4, 64, 1024),
+    (2, 8, 2, 128, 512),
+    (3, 6, 6, 128, 256),
+])
+def test_flash_decode_shapes(B, H, K, D, S):
+    q = jax.random.normal(KEY, (B, H, D))
+    k, v, slot_pos, pos = _cache(B, S, K, D, [S // 2] * B)
+    got = ops.flash_decode(q, k, v, slot_pos, pos, bs=128)
+    want = ref.flash_decode_ref(q, k, v, slot_pos, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (100, 0.0), (0, 30.0), (64, 50.0)])
+def test_flash_decode_masking(window, cap):
+    B, H, K, D, S = 2, 4, 2, 64, 512
+    q = jax.random.normal(KEY, (B, H, D))
+    k, v, slot_pos, pos = _cache(B, S, K, D, [300, 511])
+    got = ops.flash_decode(q, k, v, slot_pos, pos, window=window, cap=cap, bs=128)
+    want = ref.flash_decode_ref(q, k, v, slot_pos, pos, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,K,D,bq,bs", [
+    (2, 512, 8, 4, 64, 128, 128),
+    (1, 256, 4, 2, 64, 64, 64),
+    (2, 256, 4, 4, 128, 128, 64),
+    (1, 128, 6, 3, 64, 128, 128),
+])
+def test_flash_prefill_shapes(B, S, H, K, D, bq, bs):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    got = ops.flash_prefill(q, k, v, bq=bq, bs=bs)
+    want = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("window,cap,causal", [
+    (64, 0.0, True), (0, 50.0, True), (0, 0.0, False), (32, 30.0, True),
+])
+def test_flash_prefill_variants(window, cap, causal):
+    B, S, H, K, D = 1, 256, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    got = ops.flash_prefill(q, k, v, window=window, cap=cap, causal=causal,
+                            bq=64, bs=64)
+    want = ref.flash_prefill_ref(q, k, v, window=window, cap=cap, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@given(seed=st.integers(0, 100), pos_frac=st.floats(0.1, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_flash_decode_property(seed, pos_frac):
+    B, H, K, D, S = 1, 4, 2, 64, 256
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, H, D))
+    k, v, slot_pos, pos = _cache(B, S, K, D, [int(pos_frac * (S - 1))], seed=seed)
+    got = np.asarray(ops.flash_decode(q, k, v, slot_pos, pos, bs=64))
+    want = np.asarray(ref.flash_decode_ref(q, k, v, slot_pos, pos))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+    assert np.isfinite(got).all()

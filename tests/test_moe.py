@@ -1,0 +1,126 @@
+"""MoE layer: dispatch strategies, capacity, overrides, aux losses."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models.attention import ShardingCtx
+from repro.models.moe import (
+    _block_tokens,
+    init_moe,
+    load_balance_loss,
+    moe_layer,
+    router_topk,
+)
+
+CTX = ShardingCtx()
+
+
+def _cfg(num_experts=4, top_k=2, cap=100.0, shared=0):
+    base = get_config("deepseek-moe-16b").reduced()
+    return dataclasses.replace(
+        base,
+        moe=dataclasses.replace(
+            base.moe,
+            num_experts=num_experts, top_k=top_k, capacity_factor=cap,
+            num_shared_experts=shared, d_shared=base.moe.d_expert if shared else 0,
+        ),
+    )
+
+
+def test_gather_equals_einsum():
+    cfg = _cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model))
+    y1, _ = moe_layer(p, x.astype(cfg.dtype), cfg, CTX, dispatch="einsum")
+    y2, _ = moe_layer(p, x.astype(cfg.dtype), cfg, CTX, dispatch="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+@given(
+    B=st.integers(1, 4), S=st.sampled_from([8, 16, 24]),
+    E=st.sampled_from([2, 4]), k=st.integers(1, 2),
+)
+@settings(max_examples=10, deadline=None)
+def test_dispatch_parity_property(B, S, E, k):
+    cfg = _cfg(num_experts=E, top_k=k)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(B * 100 + S), (B, S, cfg.d_model)).astype(cfg.dtype)
+    y1, _ = moe_layer(p, x, cfg, CTX, dispatch="einsum")
+    y2, _ = moe_layer(p, x, cfg, CTX, dispatch="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_routing_override_skips_router():
+    cfg = _cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    p_norouter = {k: v for k, v in p.items() if k != "router"}
+    B, S, k = 2, 8, cfg.moe.top_k
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)).astype(cfg.dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(3), (B, S, k), 0, cfg.moe.num_experts)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(4), (B, S, k)), -1)
+    y, aux = moe_layer(p_norouter, x, cfg, CTX, routing_override=(ids, w))
+    assert aux["router_logits"] is None
+    assert float(aux["aux_loss"]) == 0.0
+    assert not jnp.isnan(y).any()
+
+
+def test_override_matches_router_when_same_routing():
+    """Feeding the router's own top-k back as an override reproduces it."""
+    cfg = _cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, cfg.d_model)).astype(cfg.dtype)
+    y_router, aux = moe_layer(p, x, cfg, CTX)
+    logits = aux["router_logits"].reshape(-1, cfg.moe.num_experts)
+    ids, w = router_topk(logits, cfg.moe.top_k)
+    y_override, _ = moe_layer(
+        p, x, cfg, CTX,
+        routing_override=(ids.reshape(B, S, -1), w.reshape(B, S, -1)),
+    )
+    np.testing.assert_allclose(np.asarray(y_router), np.asarray(y_override), atol=1e-5)
+
+
+def test_capacity_drops_tokens():
+    cfg = _cfg(cap=0.01)  # capacity floor = 8 per block
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64, cfg.d_model)).astype(cfg.dtype)
+    y_low, _ = moe_layer(p, x, cfg, CTX)
+    cfg_hi = _cfg(cap=100.0)
+    y_hi, _ = moe_layer(p, x, cfg_hi, CTX)
+    assert float(jnp.abs(y_low - y_hi).max()) > 1e-3  # some tokens dropped
+
+
+def test_shared_experts_always_active():
+    cfg = _cfg(shared=1)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, cfg.d_model)).astype(cfg.dtype)
+    # zero out all routed-expert weights: output must still be nonzero
+    p0 = dict(p)
+    for t in ("w_in", "w_gate", "w_out"):
+        p0[t] = jnp.zeros_like(p0[t])
+    y, _ = moe_layer(p0, x, cfg, CTX)
+    assert float(jnp.abs(y).max()) > 0
+
+
+def test_load_balance_loss_prefers_uniform():
+    E, T = 4, 1024
+    uniform = jnp.zeros((T, E))
+    ids_u = jnp.arange(T)[:, None] % E
+    collapsed = jnp.zeros((T, E)).at[:, 0].set(10.0)
+    ids_c = jnp.zeros((T, 1), jnp.int32)
+    assert float(load_balance_loss(uniform, ids_u, E)) < float(
+        load_balance_loss(collapsed, ids_c, E)
+    )
+    assert abs(float(load_balance_loss(uniform, ids_u, E)) - 1.0) < 1e-3
+
+
+@given(T=st.integers(1, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_block_tokens_divides(T):
+    blk = _block_tokens(T)
+    assert T % blk == 0 and blk <= max(T, 4096)

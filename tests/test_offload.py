@@ -1,0 +1,115 @@
+"""ExpertStore: host store + device slot cache with FIFO eviction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.core.hash_table import HashTable
+from repro.core.offload import ExpertStore
+from repro.models.transformer import n_moe_layers
+
+
+def _store(slots, name="switch-base-8"):
+    cfg, params = reduced_params(name)
+    return cfg, ExpertStore(cfg, params, slots_per_layer=slots)
+
+
+def _table(L, E, B=2, S=8, k=1, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, E, (L, B, S, k)).astype(np.int32)
+    w = rng.random((L, B, S, k)).astype(np.float32)
+    return HashTable(0, ids, w)
+
+
+def test_routers_are_offloaded():
+    cfg, store = _store(4)
+    for s in store.moe_subs:
+        assert "router" not in store.serve_params["blocks"][f"sub{s}"]["moe"]
+
+
+def test_prepare_loads_predicted_experts():
+    cfg, store = _store(4)
+    L, E = store.L, store.E
+    table = _table(L, E)
+    trans = store.prepare(table)
+    for l in range(L):
+        for e in np.unique(table.expert_ids[l]):
+            assert trans[l, e] >= 0, (l, e)
+    assert store.stats.loads > 0
+    assert store.stats.bytes_h2d > 0
+
+
+def test_slot_contents_match_host():
+    cfg, store = _store(4)
+    table = _table(store.L, store.E)
+    trans = store.prepare(table)
+    l = 0
+    g, s = store.layer_to_gs(l)
+    moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
+    for e in np.unique(table.expert_ids[l]):
+        slot = trans[l, e]
+        np.testing.assert_array_equal(
+            np.asarray(moe_p["w_in"][g, slot]), store.host[f"sub{s}"]["w_in"][g, e]
+        )
+
+
+def test_second_prepare_hits_cache():
+    cfg, store = _store(4)
+    table = _table(store.L, store.E)
+    store.prepare(table)
+    loads_before = store.stats.loads
+    store.prepare(table)  # same table: all hits
+    assert store.stats.loads == loads_before
+    assert store.stats.hits > 0
+
+
+def test_fifo_eviction():
+    cfg, store = _store(2)  # tight budget: 2 slots, 4 experts
+    L, E = store.L, store.E
+    t1 = HashTable(0, np.full((L, 1, 2, 1), 0, np.int32), np.ones((L, 1, 2, 1), np.float32))
+    t1.expert_ids[:, 0, 1, 0] = 1
+    store.prepare(t1)  # loads {0, 1}
+    t2 = HashTable(1, np.full((L, 1, 2, 1), 2, np.int32), np.ones((L, 1, 2, 1), np.float32))
+    t2.expert_ids[:, 0, 1, 0] = 3
+    trans = store.prepare(t2)  # must evict {0,1} FIFO, load {2,3}
+    assert store.stats.evictions > 0
+    assert trans[0, 2] >= 0 and trans[0, 3] >= 0
+    assert trans[0, 0] == -1 and trans[0, 1] == -1
+
+
+def test_budget_tighter_than_active_set_drops_lowest_mass():
+    cfg, store = _store(2)
+    L, E = store.L, store.E
+    ids = np.zeros((L, 1, 8, 1), np.int32)
+    ids[:, 0, :4, 0] = np.array([0, 1, 2, 3])  # 4 distinct experts
+    w = np.ones((L, 1, 8, 1), np.float32)
+    w[:, 0, 2:4] = 0.01  # experts 2,3 carry tiny mass
+    table = HashTable(0, ids, w)
+    trans = store.prepare(table)
+    # expert 0 has the most α mass (slots go to 0 and 1)
+    assert trans[0, 0] >= 0
+    assert (trans[0] >= 0).sum() == 2
+
+
+def test_translate_masks_misses():
+    cfg, store = _store(2)
+    table = _table(store.L, store.E, seed=3)
+    trans = store.prepare(table)
+    slot_ids, w = store.translate(table, trans)
+    assert slot_ids.shape == table.expert_ids.shape
+    assert slot_ids.max() < store.S
+    missed = np.take_along_axis(
+        trans, table.expert_ids.reshape(store.L, -1), axis=1
+    ).reshape(table.expert_ids.shape) < 0
+    assert (w[missed] == 0).all()
+    assert (w[~missed] > 0).any()
+
+
+def test_memory_accounting():
+    cfg, store4 = _store(4)
+    _, store2 = _store(2)
+    assert store2.device_bytes() < store4.device_bytes()
+    assert store4.device_bytes() <= store4.full_expert_bytes()

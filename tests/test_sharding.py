@@ -1,0 +1,130 @@
+"""Distribution tests: sharding policy specs + an 8-fake-device mini dry-run
+in a subprocess (the main test process must keep its single-device backend)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_policy_specs_divisibility():
+    script = """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.sharding import policy
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    for name in ["smollm-135m", "qwen3-moe-235b-a22b"]:
+        cfg = get_config(name).reduced()
+        specs = policy.param_specs(cfg, mesh)
+        # every spec axis must divide its dim
+        import jax.numpy as jnp
+        from functools import partial
+        from repro.models.transformer import init_params
+        shapes = jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+        for (path, spec), (_, shp) in zip(
+            jax.tree_util.tree_flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0],
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+        ):
+            for dim, ax in zip(shp.shape, tuple(spec) + (None,) * 8):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                ext = 1
+                for a in axes:
+                    ext *= mesh.shape[a]
+                assert dim % ext == 0, (path, shp.shape, spec)
+    print("SPECS-OK")
+    """
+    assert "SPECS-OK" in _run(script)
+
+
+def test_mini_mesh_train_and_decode_lower():
+    """Reduced config x tiny shapes on a (2,4) mesh: train + decode must
+    lower, compile, and produce collectives (the sharding is real)."""
+    script = """
+    import jax
+    from repro.configs.base import get_config, InputShape
+    from repro.launch.dryrun import build_lowering
+    from repro.launch.mesh import make_mesh
+    from repro.launch.hlo_analysis import analyse_hlo
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    for name in ["switch-base-8", "gemma2-9b", "xlstm-125m", "seamless-m4t-medium"]:
+        cfg = get_config(name).reduced()
+        for shape in [InputShape("t", 64, 8, "train"), InputShape("d", 64, 8, "decode")]:
+            lowered, _ = build_lowering(cfg, shape, mesh)
+            compiled = lowered.compile()
+            a = analyse_hlo(compiled.as_text())
+            assert a["flops"] > 0, (name, shape.kind)
+            print(f"{name} {shape.kind} OK coll={a['collective_total_bytes']>0}")
+    print("MINI-MESH-OK")
+    """
+    out = _run(script)
+    assert "MINI-MESH-OK" in out
+
+
+def test_multipod_mesh_lowering():
+    """(2,2,2) pod mesh: the pod axis must shard (multi-pod proof at test scale)."""
+    script = """
+    import jax
+    from repro.configs.base import get_config, InputShape
+    from repro.launch.dryrun import build_lowering
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    cfg = get_config("deepseek-moe-16b").reduced()
+    lowered, _ = build_lowering(cfg, InputShape("t", 32, 8, "train"), mesh)
+    compiled = lowered.compile()
+    assert compiled.memory_analysis().temp_size_in_bytes > 0
+    print("MULTIPOD-OK")
+    """
+    assert "MULTIPOD-OK" in _run(script)
+
+
+def test_flash_decode_sharded_matches_local():
+    """shard_map partial-softmax merge == single-device decode attention."""
+    script = """
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_mesh
+    from repro.models.attention import ShardingCtx, decode_attention
+    from repro.kernels.ref import flash_decode_ref
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    B, H, K, D, S = 2, 4, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.array([40, 63], jnp.int32)
+    sidx = jnp.arange(S)[None, :]
+    slot_pos = pos[:, None] - ((pos[:, None] - sidx) % S)
+    ctx = ShardingCtx(mesh=mesh, batch_axes=("data",), model_axis="model",
+                      decode_seq_axis=("model",))
+    got = jax.jit(lambda *a: decode_attention(*a, window=0, cap=0.0, ctx=ctx))(
+        q, k, v, slot_pos, pos
+    )
+    want = flash_decode_ref(q, k, v, slot_pos, pos)
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-4, err
+    print("FLASH-SHARD-OK", err)
+    """
+    assert "FLASH-SHARD-OK" in _run(script)

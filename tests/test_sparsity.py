@@ -1,0 +1,64 @@
+"""Sparsity analyses: Eq. 2, ĉ estimation, sentence-level sparsity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (
+    effective_memory_utilization,
+    estimate_c,
+    expected_phat,
+    sentence_sparsity,
+)
+from repro.configs.base import get_config
+
+
+def test_eq2_boundaries():
+    # p=0: no corruption => no change; p=1: always hits a critical token
+    assert expected_phat(0.0, 2, 512) == pytest.approx(0.0, abs=1e-9)
+    assert expected_phat(1.0, 1, 512) == pytest.approx(1.0, abs=1e-6)
+
+
+@given(
+    c=st.integers(1, 8), L=st.sampled_from([128, 512]),
+    p1=st.floats(0.05, 0.4), dp=st.floats(0.05, 0.5),
+)
+@settings(max_examples=30, deadline=None)
+def test_eq2_monotone_in_p(c, L, p1, dp):
+    assert expected_phat(p1 + dp, c, L) >= expected_phat(p1, c, L) - 1e-9
+
+
+@given(p=st.floats(0.05, 0.9), L=st.sampled_from([128, 512]), c=st.integers(1, 7))
+@settings(max_examples=30, deadline=None)
+def test_eq2_monotone_in_c(p, L, c):
+    assert expected_phat(p, c + 1, L) >= expected_phat(p, c, L) - 1e-9
+
+
+@given(c_true=st.integers(1, 10))
+@settings(max_examples=10, deadline=None)
+def test_estimate_c_inverts_eq2(c_true):
+    L = 512
+    ps = [0.05, 0.1, 0.2, 0.4, 0.6, 0.8]
+    phats = [expected_phat(p, c_true, L) for p in ps]
+    assert estimate_c(ps, phats, L) == c_true
+
+
+def test_sentence_sparsity():
+    L, B, S, E = 2, 3, 16, 8
+    rng = np.random.default_rng(0)
+    # sentence 0 uses only expert 0; sentence 1 uses all experts
+    ids = np.zeros((L, B, S), np.int64)
+    ids[:, 1] = rng.integers(0, E, (L, S))
+    ids[:, 2] = np.arange(S) % E
+    r = sentence_sparsity(ids, E)
+    assert r[0] == pytest.approx(1 - 1 / E)
+    assert r[2] == pytest.approx(0.0)
+    assert r[0] > r[1] > r[2] - 1e-9
+
+
+def test_effective_memory_utilization_fig2():
+    cfg = get_config("switch-base-128")
+    full = effective_memory_utilization(cfg, idle_ratio=0.0)
+    sparse = effective_memory_utilization(cfg, idle_ratio=0.8)
+    assert full["effective_utilization"] == pytest.approx(1.0)
+    assert sparse["effective_utilization"] < 0.35  # MoE dominates switch-128
+    assert sparse["ineffective_gb"] > 0
