@@ -1,0 +1,164 @@
+"""Request-level serving benchmark (beyond paper — the north-star workload):
+Poisson arrivals through the continuous-batching RequestServer vs
+
+* ``sequential``       — same machinery, one lane, FCFS (isolates the win
+                         from continuous batching + SLA/affinity scheduling);
+* ``ondemand_prefill`` — router-inline OnDemand baseline serving each
+                         request's prefill FCFS (no look-ahead, so expert
+                         loads stall the forward; prefill-only because the
+                         baseline has no offloaded decode path);
+* ``prefetchall_prefill`` — data-unaware streaming baseline, same protocol.
+
+Emits JSON (stdout + experiments/bench/serving.json) with p50/p95/p99
+latency, TTFT, sustained throughput, and expert-cache hit rate per engine.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--requests 16 --rate 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row, get_system
+from repro.core.baselines import OnDemandServer, PrefetchAllServer
+from repro.serving import RequestServer, Telemetry, poisson_requests
+from repro.serving.request import Request
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def _requests(cfg, n: int, rate: float, seed: int, slo: float) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return poisson_requests(
+        rng, n, rate_rps=rate, vocab_size=cfg.vocab_size,
+        prompt_len_range=(4, 24), max_new_range=(2, 8), slo_s=slo,
+    )
+
+
+def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru"):
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=slots,
+        max_lanes=lanes, max_prefill_batch=lanes,
+        buckets=(8, 16, 32), cache_len=48, eviction=eviction,
+    )
+    # warm every jit shape outside the timed stream, then reset the clocks
+    warm_rng = np.random.default_rng(99)
+    warm = poisson_requests(
+        warm_rng, 2 * lanes, rate_rps=1e6, vocab_size=cfg.vocab_size,
+        prompt_len_range=(4, 24), max_new_range=(2, 8),
+    )
+    srv.run(warm, realtime=False)
+    srv.store.stats.reset()
+    srv.telemetry = Telemetry()
+    srv.run(reqs, realtime=True)
+    return srv.summary()
+
+
+def serve_prefill_fcfs(baseline_cls, cfg, params, reqs, slots) -> Dict[str, float]:
+    """FCFS request-at-a-time prefill through a router-inline baseline."""
+    from repro.serving.telemetry import Histogram
+
+    srv = baseline_cls(cfg, params, slots_per_layer=slots)
+    srv._forward_batch(reqs[0].prompt[None])  # warm compile
+    srv.store.stats.reset()
+    lat = Histogram()
+    tokens = 0
+    t0 = time.perf_counter()
+    for r in sorted(reqs, key=lambda r: r.arrival_s):
+        wait = r.arrival_s - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        logits = srv._forward_batch(r.prompt[None])
+        _ = int(np.argmax(np.asarray(logits)[0, -1]))  # first token (TTFT)
+        lat.observe(time.perf_counter() - t0 - r.arrival_s)
+        tokens += r.prompt_len
+    wall = time.perf_counter() - t0
+    st = srv.store.stats
+    refs = st.hits + st.loads
+    return {
+        "prefill_only": 1.0,
+        "completed": float(len(reqs)),
+        "throughput_tok_s": tokens / wall if wall else 0.0,
+        "p50_latency_s": lat.percentile(50),
+        "p95_latency_s": lat.percentile(95),
+        "p99_latency_s": lat.percentile(99),
+        "p50_ttft_s": lat.percentile(50),   # TTFT == prefill completion here
+        "p95_ttft_s": lat.percentile(95),
+        "cache_hit_rate": st.hits / refs if refs else 0.0,
+        "h2d_mb": st.bytes_h2d / 1e6,
+    }
+
+
+def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
+    cfg, params, hp = get_system(E)
+    result = {
+        "config": {
+            "arch": cfg.name, "experts": E, "slots": slots, "lanes": lanes,
+            "requests": n_requests, "rate_rps": rate, "slo_s": slo,
+        },
+        "engines": {},
+    }
+    result["engines"]["server"] = serve_requests(
+        cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
+        slots, lanes,
+    )
+    # same eviction policy as the server so the delta isolates continuous
+    # batching + scheduling, not cache replacement
+    result["engines"]["sequential"] = serve_requests(
+        cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
+        slots, lanes=1,
+    )
+    result["engines"]["ondemand_prefill"] = serve_prefill_fcfs(
+        OnDemandServer, cfg, params, _requests(cfg, n_requests, rate, seed, slo),
+        slots,
+    )
+    result["engines"]["prefetchall_prefill"] = serve_prefill_fcfs(
+        PrefetchAllServer, cfg, params,
+        _requests(cfg, n_requests, rate, seed, slo), slots,
+    )
+    return result
+
+
+def run() -> List[Row]:
+    """benchmarks.run entry point."""
+    result = bench()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "serving.json"), "w") as f:
+        json.dump(result, f, indent=2)
+    rows = []
+    for name, m in result["engines"].items():
+        rows.append(Row(
+            f"serving/{name}",
+            m["p50_latency_s"] * 1e6,
+            tput_tok_s=round(m["throughput_tok_s"], 1),
+            p95_s=round(m["p95_latency_s"], 4),
+            ttft_p50_s=round(m["p50_ttft_s"], 4),
+            hit_rate=round(m["cache_hit_rate"], 3),
+        ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experts", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--slo", type=float, default=20.0)
+    args = ap.parse_args()
+    result = bench(args.experts, args.requests, args.rate, args.slots,
+                   args.lanes, args.slo)
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "serving.json"), "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+
+
+if __name__ == "__main__":
+    main()

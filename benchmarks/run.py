@@ -26,6 +26,7 @@ SUITES = [
     ("dependency", "benchmarks.bench_dependency"),  # Eq. 2, Figs 6/7
     ("dispatch", "benchmarks.bench_dispatch"),      # beyond-paper ablation
     ("decode", "benchmarks.bench_decode"),          # beyond-paper serving
+    ("serving", "benchmarks.bench_serving"),        # request-level serving
     ("roofline", "benchmarks.roofline"),            # deliverable (g)
 ]
 

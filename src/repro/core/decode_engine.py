@@ -50,7 +50,9 @@ def hash_state_init(params: dict, batch: int) -> dict:
     return {
         "h1": z(), "c1": z(), "h2": z(), "c2": z(),
         "ring": jnp.zeros((batch, HISTORY, d_h), jnp.float32),
-        "t": jnp.zeros((), jnp.int32),
+        # per-lane step counter: continuous batching joins/leaves lanes at
+        # different sequence positions, so t cannot be shared across batch
+        "t": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -71,14 +73,15 @@ def hash_fn_step(
     x = jnp.tanh(emb_tok.astype(jnp.float32) @ params["compress"])
     h1, c1 = _lstm_cell(params["lstm1"], x, state["h1"], state["c1"])
     h2, c2 = _lstm_cell(params["lstm2"], h1, state["h2"], state["c2"])
-    t = state["t"]
-    ring = state["ring"].at[:, t % HISTORY].set(h2)
+    t = state["t"]                                        # [B] per-lane step
+    bidx = jnp.arange(h2.shape[0])
+    ring = state["ring"].at[bidx, t % HISTORY].set(h2)
     # sparse attention of the current query over the ring (same math as the
     # full-sequence predictor for t < HISTORY)
     q = h2 @ params["attn_q"]
     scores = jnp.einsum("bd,bkd->bk", q, ring) / math.sqrt(h2.shape[-1])
-    valid = jnp.arange(HISTORY) <= t
-    scores = jnp.where(valid[None], scores, -1e30)
+    valid = jnp.arange(HISTORY)[None, :] <= t[:, None]
+    scores = jnp.where(valid, scores, -1e30)
     w = sparsemax(scores, axis=-1)
     a = jnp.einsum("bk,bkd->bd", w, ring)
     logits = (a + h2) @ params["heads"]
@@ -115,12 +118,16 @@ class SiDADecodeEngine:
         serve_top_k: Optional[int] = None,
         ctx: ShardingCtx = ShardingCtx(),
         host_quant: str = "none",
+        eviction: str = "fifo",
+        store: Optional[ExpertStore] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
         self.k = serve_top_k or cfg.moe.top_k
         self.hash_params = hash_params
-        self.store = ExpertStore(cfg, params, slots_per_layer, host_quant=host_quant)
+        self.store = store if store is not None else ExpertStore(
+            cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
+        )
         self.embed_table = params["embed"]
         self.L = n_moe_layers(cfg)
         E = cfg.moe.num_experts

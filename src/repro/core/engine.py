@@ -69,14 +69,18 @@ class SiDAEngine:
         ctx: ShardingCtx = ShardingCtx(),
         host_quant: str = "none",
         spill_dir: Optional[str] = None,
+        eviction: str = "fifo",
+        store: Optional[ExpertStore] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
         self.k = serve_top_k or cfg.moe.top_k
         self.hash_params = hash_params
-        self.store = ExpertStore(
+        # a caller-supplied store lets prefill and decode engines share one
+        # device slot cache (the request server runs both against it)
+        self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer,
-            host_quant=host_quant, spill_dir=spill_dir,
+            host_quant=host_quant, spill_dir=spill_dir, eviction=eviction,
         )
         self.embed_table = params["embed"]
         self.L = n_moe_layers(cfg)
@@ -101,6 +105,16 @@ class SiDAEngine:
 
         self._forward = _forward
 
+        @jax.jit
+        def _forward_kv(serve_params, tokens, slot_ids, weights):
+            out = forward(
+                serve_params, cfg, ctx, tokens,
+                routing_override=(slot_ids, weights), collect_kv=True,
+            )
+            return out["logits"], out["kv"]
+
+        self._forward_kv = _forward_kv
+
     # ------------------------------------------------------------------
     def build_table(self, batch_index: int, tokens: np.ndarray) -> HashTable:
         ids, w = self._predict(self.hash_params, self.embed_table, tokens)
@@ -115,17 +129,22 @@ class SiDAEngine:
         )
         return logits
 
+    def prefill(self, tokens: np.ndarray, table: HashTable):
+        """Like `infer`, but also returns every layer's rope-applied K/V
+        ({sub: (k, v)} each [G, B, S, K, D]) so the request server can seed
+        decode-lane caches directly from the prefill forward."""
+        trans = self.store.prepare(table)
+        slot_ids, w = self.store.translate(table, trans)
+        return self._forward_kv(
+            self.store.serve_params, jnp.asarray(tokens),
+            jnp.asarray(slot_ids), jnp.asarray(w),
+        )
+
     # ------------------------------------------------------------------
     def _cache_affinity(self, table: HashTable) -> float:
-        """Fraction of the table's active experts already resident."""
-        hits = tot = 0
-        for l in range(self.L):
-            g, s = self.store.layer_to_gs(l)
-            res = self.store.resident[(g, s)]
-            for e in table.active_experts(l):
-                tot += 1
-                hits += int(e) in res
-        return hits / max(tot, 1)
+        """Fraction of the table's active experts already resident
+        (generalized onto ExpertStore so the request scheduler shares it)."""
+        return self.store.cache_affinity(table)
 
     def serve(
         self, batches: Sequence[np.ndarray], threaded: bool = True,

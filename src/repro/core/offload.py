@@ -56,6 +56,113 @@ def quantize_expert(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return q, scale
 
 
+class EvictionPolicy:
+    """Replacement policy for one (group, sub) slot pool.
+
+    The store calls `admit` when an expert is loaded, `touch` on every
+    reference (hit or load, with the α mass it carried), `pick_victim`
+    when a slot must be reclaimed, passing the experts that must survive
+    (currently-needed + pinned). Returns None when every resident expert
+    is protected — the caller then drops the load instead of evicting.
+    """
+
+    name = "base"
+
+    def admit(self, e: int, weight: float = 0.0) -> None:
+        raise NotImplementedError
+
+    def touch(self, e: int, weight: float = 0.0) -> None:
+        pass
+
+    def pick_victim(self, protected) -> Optional[int]:
+        raise NotImplementedError
+
+
+class FIFOPolicy(EvictionPolicy):
+    """Evict in insertion order (the paper's serving loop assumption)."""
+
+    name = "fifo"
+
+    def __init__(self):
+        self.order: collections.deque = collections.deque()
+
+    def admit(self, e: int, weight: float = 0.0) -> None:
+        self.order.append(e)
+
+    def pick_victim(self, protected) -> Optional[int]:
+        for _ in range(len(self.order)):
+            victim = self.order.popleft()
+            if victim in protected:
+                self.order.append(victim)  # recycle, try next
+                continue
+            return victim
+        return None
+
+
+class LRUPolicy(EvictionPolicy):
+    """Evict the least-recently referenced expert — request-interleaved
+    traffic revisits hot experts out of FIFO order, where pure insertion
+    order evicts exactly the experts about to be reused."""
+
+    name = "lru"
+
+    def __init__(self):
+        self.order: "collections.OrderedDict[int, None]" = collections.OrderedDict()
+
+    def admit(self, e: int, weight: float = 0.0) -> None:
+        self.order[e] = None
+        self.order.move_to_end(e)
+
+    def touch(self, e: int, weight: float = 0.0) -> None:
+        if e in self.order:
+            self.order.move_to_end(e)
+
+    def pick_victim(self, protected) -> Optional[int]:
+        for victim in self.order:
+            if victim not in protected:
+                del self.order[victim]
+                return victim
+        return None
+
+
+class AlphaMassPolicy(EvictionPolicy):
+    """Evict the expert with the least decayed α mass: the hash table gives
+    the routing weight every token sends to each expert, so the cache can
+    rank residency by how much computation an expert actually absorbs
+    rather than by arrival order."""
+
+    name = "alpha"
+
+    def __init__(self, decay: float = 0.9):
+        self.decay = decay
+        self.score: Dict[int, float] = {}
+
+    def admit(self, e: int, weight: float = 0.0) -> None:
+        self.score[e] = self.score.get(e, 0.0) + max(weight, 1e-6)
+
+    def touch(self, e: int, weight: float = 0.0) -> None:
+        if e in self.score:
+            self.score[e] = self.decay * self.score[e] + weight
+
+    def pick_victim(self, protected) -> Optional[int]:
+        best, best_s = None, None
+        for e, sc in self.score.items():
+            if e in protected:
+                continue
+            if best_s is None or sc < best_s:
+                best, best_s = e, sc
+        if best is not None:
+            del self.score[best]
+        return best
+
+
+EVICTION_POLICIES = {
+    "fifo": FIFOPolicy,
+    "lru": LRUPolicy,
+    "alpha": AlphaMassPolicy,
+}
+
+
 @dataclass
 class TransferStats:
     bytes_h2d: int = 0
@@ -86,8 +193,10 @@ class ExpertStore:
         slots_per_layer: int,
         host_quant: str = "none",      # "none" | "int8"
         spill_dir: Optional[str] = None,
+        eviction: str = "fifo",        # "fifo" | "lru" | "alpha"
     ):
         assert cfg.moe.enabled, "ExpertStore requires an MoE config"
+        assert eviction in EVICTION_POLICIES, eviction
         self.cfg = cfg
         self.per = period(cfg)
         self.n_groups = cfg.n_layers // self.per
@@ -134,15 +243,18 @@ class ExpertStore:
             moe_p.pop("router", None)  # routers never participate in forward
         self.serve_params = serve_params
 
-        # --- cache state per (group, sub): expert->slot, FIFO order
+        # --- cache state per (group, sub): expert->slot + eviction policy
+        self.eviction = eviction
         self.resident: Dict[Tuple[int, int], Dict[int, int]] = {}
-        self.fifo: Dict[Tuple[int, int], collections.deque] = {}
+        self.policy: Dict[Tuple[int, int], EvictionPolicy] = {}
         self.free: Dict[Tuple[int, int], List[int]] = {}
+        self.pinned: Dict[Tuple[int, int], set] = {}
         for g in range(self.n_groups):
             for s in self.moe_subs:
                 self.resident[(g, s)] = {}
-                self.fifo[(g, s)] = collections.deque()
+                self.policy[(g, s)] = EVICTION_POLICIES[eviction]()
                 self.free[(g, s)] = list(range(self.S))
+                self.pinned[(g, s)] = set()
 
     # -- layer indexing: moe layer l = g * len(moe_subs) + j ----------------
     def layer_to_gs(self, l: int) -> Tuple[int, int]:
@@ -164,36 +276,51 @@ class ExpertStore:
         )
 
     # ------------------------------------------------------------------
-    def plan_layer(self, l: int, needed: np.ndarray) -> List[Tuple[int, int, int]]:
-        """Cache bookkeeping for one layer; returns pending (g, slot, e) loads."""
+    def pin_experts(self, l: int, experts) -> None:
+        """Mark experts at MoE layer `l` as never-evictable (hot experts a
+        deployment wants permanently resident). Pinned experts still load
+        through the normal prepare path; they just cannot be victims."""
+        g, s = self.layer_to_gs(l)
+        self.pinned[(g, s)].update(int(e) for e in experts)
+
+    def unpin_experts(self, l: int, experts) -> None:
+        g, s = self.layer_to_gs(l)
+        self.pinned[(g, s)].difference_update(int(e) for e in experts)
+
+    def plan_layer(
+        self, l: int, needed: np.ndarray, mass: Optional[np.ndarray] = None
+    ) -> List[Tuple[int, int, int]]:
+        """Cache bookkeeping for one layer; returns pending (g, slot, e) loads.
+
+        `mass` (optional, [E]) is the α mass the current hash table routes to
+        each expert — fed to the eviction policy so α-weighted replacement
+        can rank residency by absorbed computation.
+        """
         g, s = self.layer_to_gs(l)
         res = self.resident[(g, s)]
-        fifo = self.fifo[(g, s)]
+        policy = self.policy[(g, s)]
         free = self.free[(g, s)]
         needed_set = set(int(e) for e in needed)
+        protected = needed_set | self.pinned[(g, s)]
         pending: List[Tuple[int, int, int]] = []
         for e in needed:
             e = int(e)
+            w = float(mass[e]) if mass is not None else 0.0
             if e in res:
                 self.stats.hits += 1
+                policy.touch(e, w)
                 continue
             if free:
                 slot = free.pop()
             else:
-                # FIFO eviction — never evict an expert needed right now
-                slot = None
-                for _ in range(len(fifo)):
-                    victim = fifo.popleft()
-                    if victim in needed_set:
-                        fifo.append(victim)   # recycle, try next
-                        continue
-                    slot = res.pop(victim)
-                    self.stats.evictions += 1
-                    break
-                if slot is None:  # everything resident is needed => drop
+                # evict per policy — never an expert needed right now or pinned
+                victim = policy.pick_victim(protected)
+                if victim is None:  # everything resident is protected => drop
                     continue
+                slot = res.pop(victim)
+                self.stats.evictions += 1
             res[e] = slot
-            fifo.append(e)
+            policy.admit(e, w)
             pending.append((g, slot, e))
             self.stats.loads += 1
         return pending
@@ -249,12 +376,14 @@ class ExpertStore:
         pending: Dict[int, List[Tuple[int, int, int]]] = {s: [] for s in self.moe_subs}
         for l in range(self.L):
             needed = table.active_experts(l)
+            mass = None
+            if len(needed) > self.S or self.eviction == "alpha":
+                mass = table.activation_mass(l, self.E)
             if len(needed) > self.S:
                 # tighter budget than the active set: keep the highest-α-mass
-                mass = table.activation_mass(l, self.E)
                 needed = needed[np.argsort(-mass[needed])][: self.S]
             _, s = self.layer_to_gs(l)
-            pending[s].extend(self.plan_layer(l, needed))
+            pending[s].extend(self.plan_layer(l, needed, mass=mass))
             trans[l] = self.trans_row(l)
         for s, items in pending.items():
             self.commit_loads(s, items)
@@ -262,10 +391,37 @@ class ExpertStore:
         return trans
 
     # ------------------------------------------------------------------
+    def cache_affinity(self, table: HashTable) -> float:
+        """Fraction of the table's active experts already resident — the
+        scheduling score for cache-aware batch/request ordering (engine
+        lookahead and the request scheduler both rank work by it)."""
+        hits = tot = 0
+        for l in range(self.L):
+            g, s = self.layer_to_gs(l)
+            res = self.resident[(g, s)]
+            for e in table.active_experts(l):
+                tot += 1
+                hits += int(e) in res
+        return hits / max(tot, 1)
+
+    # ------------------------------------------------------------------
     def translate(self, table: HashTable, trans: np.ndarray):
-        """(slot_ids [L,B,S,k] int32, weights [L,B,S,k] f32) — misses zeroed."""
+        """(slot_ids [L,B,S,k] int32, weights [L,B,S,k] f32).
+
+        Predicted experts that missed residency (dropped under a tight slot
+        budget) get weight 0; the surviving weights are renormalized per
+        token so the MoE output keeps its original α mass instead of
+        silently shrinking toward zero (each token's override weights sum
+        to what the hash function predicted, miss or no miss). Tokens whose
+        every predicted expert missed keep weight 0 — there is nothing on
+        device to compute them with.
+        """
         L, B, S, k = table.expert_ids.shape
         flat = table.expert_ids.reshape(L, -1)
         slots = np.take_along_axis(trans, flat, axis=1).reshape(L, B, S, k)
         w = table.weights * (slots >= 0)
+        orig = table.weights.sum(axis=-1, keepdims=True)
+        surv = w.sum(axis=-1, keepdims=True)
+        scale = np.where(surv > 0, orig / np.maximum(surv, 1e-12), 1.0)
+        w = w * scale
         return np.maximum(slots, 0).astype(np.int32), w.astype(np.float32)

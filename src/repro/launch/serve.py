@@ -1,11 +1,20 @@
 """Serving launcher: SiDA engine vs baselines on a (reduced) MoE arch.
 
+Batch mode (the paper's setting — static, pre-formed batches):
+
     PYTHONPATH=src python -m repro.launch.serve --arch switch-base-8 \
         --engine sida --slots 2 --batches 8 --batch 4 --seq 32
 
+Request mode (continuous batching + SLA-aware scheduling over a Poisson
+arrival stream):
+
+    PYTHONPATH=src python -m repro.launch.serve --engine server \
+        --requests 16 --rate 4 --lanes 4 --slots 2 --slo 60
+
 Trains nothing: random weights + untrained hash function (use
 examples/serve_sida.py for the full train->distill->serve pipeline).
-Prints throughput / latency / device-memory for the chosen engine.
+Prints throughput / latency / device-memory for the chosen engine;
+request mode emits the full telemetry snapshot as JSON.
 """
 from __future__ import annotations
 
@@ -21,7 +30,7 @@ from repro.core.hash_fn import init_hash_fn
 from repro.models.transformer import init_params, n_moe_layers
 
 
-def build_engine(engine: str, cfg, params, slots: int):
+def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo"):
     if engine == "standard":
         return StandardServer(cfg, params)
     if engine == "ondemand":
@@ -32,19 +41,62 @@ def build_engine(engine: str, cfg, params, slots: int):
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
         cfg.moe.num_experts, d_h=64,
     )
-    return SiDAEngine(cfg, params, hp, slots_per_layer=slots)
+    return SiDAEngine(cfg, params, hp, slots_per_layer=slots, eviction=eviction)
+
+
+def run_request_server(cfg, params, args) -> None:
+    from repro.serving import RequestServer, poisson_requests
+
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=64,
+    )
+    buckets = [8]
+    while buckets[-1] < args.seq:
+        buckets.append(2 * buckets[-1])
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=args.slots,
+        max_lanes=args.lanes, max_prefill_batch=args.prefill_batch,
+        buckets=tuple(buckets), eviction=args.eviction,
+        drop_expired=args.drop_expired,
+    )
+    rng = np.random.default_rng(0)
+    reqs = poisson_requests(
+        rng, args.requests, rate_rps=args.rate, vocab_size=cfg.vocab_size,
+        prompt_len_range=(4, args.seq), max_new_range=(2, args.new_tokens),
+        slo_s=args.slo,
+    )
+    srv.run(reqs, realtime=not args.no_realtime)
+    print(f"engine=server slots={args.slots} lanes={args.lanes} "
+          f"eviction={args.eviction} rate={args.rate}rps")
+    for k, v in srv.summary().items():
+        print(f"  {k:20s} {v:.4f}")
+    print(srv.telemetry.to_json())
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="switch-base-8")
     ap.add_argument("--engine", default="sida",
-                    choices=["sida", "standard", "ondemand", "prefetchall"])
+                    choices=["sida", "standard", "ondemand", "prefetchall",
+                             "server"])
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--full", action="store_true", help="full-size config")
+    ap.add_argument("--eviction", default="fifo",
+                    choices=["fifo", "lru", "alpha"])
+    # request-server mode
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--prefill-batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--slo", type=float, default=None, help="latency SLO (s)")
+    ap.add_argument("--drop-expired", action="store_true")
+    ap.add_argument("--no-realtime", action="store_true",
+                    help="ignore arrival gaps (fast smoke runs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,12 +104,17 @@ def main():
         cfg = cfg.reduced()
     assert cfg.moe.enabled, "serving engines target MoE architectures"
     params = init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.engine == "server":
+        run_request_server(cfg, params, args)
+        return
+
     rng = np.random.default_rng(0)
     batches = [
         rng.integers(0, cfg.vocab_size, (args.batch, args.seq)).astype(np.int32)
         for _ in range(args.batches)
     ]
-    srv = build_engine(args.engine, cfg, params, args.slots)
+    srv = build_engine(args.engine, cfg, params, args.slots, args.eviction)
     metrics = srv.serve(batches)
     print(f"engine={args.engine} slots={args.slots}")
     for k, v in metrics.summary().items():

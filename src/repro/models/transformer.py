@@ -164,6 +164,7 @@ def _apply_sublayer_full(
     enc_out: Optional[Array],
     routing_override,
     scan_mode: str,
+    collect_kv: bool = False,
 ):
     sk = sub_kind(cfg, sub)
     aux = {}
@@ -174,7 +175,15 @@ def _apply_sublayer_full(
 
     h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
     layer = sub  # pattern position
-    a = attend_full(bp["attn"], h, cfg, layer, ctx, causal=causal)
+    if collect_kv:
+        # rope-applied K/V, exactly what attend_decode would have written
+        # into the cache at positions 0..S-1 — lets a request server seed
+        # decode lanes straight from the prefill forward
+        a, aux["kv"] = attend_full(
+            bp["attn"], h, cfg, layer, ctx, causal=causal, return_kv=True
+        )
+    else:
+        a = attend_full(bp["attn"], h, cfg, layer, ctx, causal=causal)
     if sk["kind"] == "hymba":
         mmb = ssm_lib.mamba_forward(bp["mamba"], h, cfg, scan_mode)
         a = 0.5 * (
@@ -190,7 +199,7 @@ def _apply_sublayer_full(
     h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
     if sk.get("moe"):
         y, moe_aux = moe_layer(bp["moe"], h, cfg, ctx, routing_override=routing_override)
-        aux = moe_aux
+        aux.update(moe_aux)
     elif "mlp" in bp:
         y = ffn(bp["mlp"], h, cfg.act, cfg.glu)
     else:
@@ -211,6 +220,7 @@ def _run_stack(
     collect_router_logits: bool,
     scan_mode: str,
     remat: bool = False,
+    collect_kv: bool = False,
 ):
     per = period(cfg)
     moe_per_group = sum(1 for s in range(per) if sub_kind(cfg, s).get("moe"))
@@ -219,22 +229,26 @@ def _run_stack(
         x, g = carry
         gp = xs
 
-        def one(x, moe_seen, rl_list):
+        def one(x, moe_seen, rl_list, kv_dict):
             for s in range(per):
                 ro = None
                 if routing_override is not None and sub_kind(cfg, s).get("moe"):
                     li = g * moe_per_group + moe_seen
                     ro = (routing_override[0][li], routing_override[1][li])
                 x, aux = _apply_sublayer_full(
-                    gp[f"sub{s}"], x, cfg, ctx, s, causal, enc_out, ro, scan_mode
+                    gp[f"sub{s}"], x, cfg, ctx, s, causal, enc_out, ro,
+                    scan_mode, collect_kv,
                 )
+                if "kv" in aux:
+                    kv_dict[f"sub{s}"] = aux.pop("kv")
                 if sub_kind(cfg, s).get("moe"):
                     moe_seen += 1
                     rl_list.append(aux)
-            return x, rl_list
+            return x, rl_list, kv_dict
 
         rl_list: list = []
-        x, rl_list = one(x, 0, rl_list)
+        kv_dict: dict = {}
+        x, rl_list, kv_dict = one(x, 0, rl_list, kv_dict)
         x = ctx.act_constrain(x)
         ys = {}
         if moe_per_group:
@@ -244,6 +258,8 @@ def _run_stack(
                 ys["router_logits"] = jnp.stack(
                     [a["router_logits"] for a in rl_list]
                 )  # [moe_per_group, B, S, E]
+        if collect_kv:
+            ys["kv"] = kv_dict  # {sub: (k, v)} -> stacked [G, B, S, K, D]
         return (x, g + 1), ys
 
     if remat:
@@ -283,8 +299,12 @@ def forward(
     collect_router_logits: bool = False,
     scan_mode: str = "assoc",
     remat: bool = False,
+    collect_kv: bool = False,
 ) -> Dict[str, Any]:
-    """Full forward. Returns dict(logits, aux_loss, z_loss, router_logits?)."""
+    """Full forward. Returns dict(logits, aux_loss, z_loss, router_logits?,
+    kv?). collect_kv=True additionally returns every self-attention layer's
+    rope-applied K/V ({sub: (k, v)} each [G, B, S, K, D]) so a serving loop
+    can seed decode caches from the prefill pass."""
     enc_out = None
     if cfg.enc_dec:
         assert enc_input is not None, "enc-dec arch needs encoder input"
@@ -302,13 +322,13 @@ def forward(
         params["blocks"], x, cfg, ctx, causal=True, enc_out=enc_out,
         routing_override=routing_override,
         collect_router_logits=collect_router_logits,
-        scan_mode=scan_mode, remat=remat,
+        scan_mode=scan_mode, remat=remat, collect_kv=collect_kv,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params, cfg, x)
 
     out: Dict[str, Any] = {"logits": logits}
-    if ys:
+    if "aux_loss" in ys:
         out["aux_loss"] = ys["aux_loss"].sum()
         out["z_loss"] = ys["z_loss"].sum()
         if collect_router_logits:
@@ -317,6 +337,8 @@ def forward(
     else:
         out["aux_loss"] = jnp.zeros((), jnp.float32)
         out["z_loss"] = jnp.zeros((), jnp.float32)
+    if collect_kv:
+        out["kv"] = ys["kv"]
     return out
 
 

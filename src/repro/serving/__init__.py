@@ -1,0 +1,24 @@
+"""Request-level serving: continuous batching + SLA-aware scheduling over
+the SiDA hash-ahead pipeline (request lifecycle, admission queue, lane
+batcher, request server, telemetry)."""
+from repro.serving.request import Request, RequestState, poisson_requests
+from repro.serving.scheduler import (
+    DEFAULT_BUCKETS,
+    LaneTable,
+    Scheduler,
+    bucket_len,
+)
+from repro.serving.server import RequestServer
+from repro.serving.telemetry import Telemetry
+
+__all__ = [
+    "Request",
+    "RequestState",
+    "poisson_requests",
+    "DEFAULT_BUCKETS",
+    "LaneTable",
+    "Scheduler",
+    "bucket_len",
+    "RequestServer",
+    "Telemetry",
+]

@@ -1,0 +1,138 @@
+"""Admission queue + continuous batcher.
+
+Two scheduling decisions live here, both SLA-aware:
+
+* **Prefill batch composition** — queued requests are grouped by length
+  bucket (padding waste stays bounded by the bucket granularity) and
+  ordered earliest-deadline-first; within the same urgency band, requests
+  whose hash-ahead tables overlap the resident expert cache the most go
+  first (the cache-affinity score generalized out of the batch engine's
+  lookahead scheduling onto `ExpertStore.cache_affinity`).
+* **Decode lane occupancy** — the `LaneTable` tracks which request holds
+  which decode-batch row; requests join a free lane as soon as prefill
+  completes and leave the moment they finish, so the running decode batch
+  continuously re-fills instead of draining to the slowest member.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.offload import ExpertStore
+from repro.serving.request import Request, RequestState
+
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128)
+
+# requests within the same slack band are interchangeable deadline-wise;
+# cache affinity orders inside a band
+SLACK_BAND_S = 0.25
+
+
+def bucket_len(length: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket that holds `length` (prompts are padded up to it)."""
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket {buckets[-1]}")
+
+
+class LaneTable:
+    """Decode-batch lane bookkeeping: which request occupies which row."""
+
+    def __init__(self, n_lanes: int):
+        self.n_lanes = n_lanes
+        self.requests: List[Optional[Request]] = [None] * n_lanes
+        self._free: List[int] = list(range(n_lanes - 1, -1, -1))
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def active(self) -> List[int]:
+        return [i for i, r in enumerate(self.requests) if r is not None]
+
+    def assign(self, req: Request) -> int:
+        lane = self._free.pop()
+        self.requests[lane] = req
+        req.lane = lane
+        return lane
+
+    def release(self, lane: int) -> Request:
+        req = self.requests[lane]
+        assert req is not None, f"lane {lane} is already free"
+        self.requests[lane] = None
+        self._free.append(lane)
+        req.lane = -1
+        return req
+
+
+class Scheduler:
+    """Admission queue feeding the continuous batcher."""
+
+    def __init__(
+        self,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        use_affinity: bool = True,
+        slack_band_s: float = SLACK_BAND_S,
+    ):
+        self.buckets = tuple(sorted(buckets))
+        self.use_affinity = use_affinity
+        self.slack_band_s = slack_band_s
+        self._queue: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        req.state = RequestState.QUEUED
+        self._queue.append(req)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def pop_expired(self, now: float) -> List[Request]:
+        """Remove and return queued requests whose deadline already passed —
+        admission control: serving them would burn capacity on guaranteed
+        SLO misses."""
+        expired = [r for r in self._queue if r.slack(now) < 0]
+        for r in expired:
+            self._queue.remove(r)
+            r.state = RequestState.REJECTED
+        return expired
+
+    # ------------------------------------------------------------------
+    def _order(self, reqs: List[Request], now: float, store: Optional[ExpertStore]):
+        """EDF first; inside a slack band, highest cache affinity first."""
+
+        def key(r: Request):
+            band = (
+                r.slack(now) // self.slack_band_s
+                if r.slo_s is not None
+                else float("inf")
+            )
+            aff = 0.0
+            if self.use_affinity and store is not None and r.table is not None:
+                aff = store.cache_affinity(r.table)
+            return (band, -aff, r.arrival_s, r.rid)
+
+        return sorted(reqs, key=key)
+
+    def next_prefill_batch(
+        self,
+        now: float,
+        max_batch: int,
+        store: Optional[ExpertStore] = None,
+    ) -> Tuple[List[Request], int]:
+        """Compose the next prefill batch: the most urgent request anchors
+        it, its length bucket fixes the padded shape, and remaining slots
+        fill from the same bucket in deadline/affinity order. Returns
+        (requests, bucket) — ([], 0) when nothing is ready."""
+        ready = [r for r in self._queue if r.table is not None]
+        if not ready or max_batch <= 0:
+            return [], 0
+        ordered = self._order(ready, now, store)
+        anchor = ordered[0]
+        bucket = bucket_len(anchor.prompt_len, self.buckets)
+        batch = [
+            r for r in ordered if bucket_len(r.prompt_len, self.buckets) == bucket
+        ][:max_batch]
+        for r in batch:
+            self._queue.remove(r)
+            r.state = RequestState.PREFILL
+        return batch, bucket

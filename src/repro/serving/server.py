@@ -1,0 +1,415 @@
+"""Request server: continuous batching over the SiDA hash-ahead pipeline.
+
+Wiring (one shared `ExpertStore` under everything):
+
+    arrival stream ──> hash-ahead thread ──> admission queue (Scheduler)
+                        (build_table per           │ EDF + cache-affinity
+                         request, off the          ▼
+                         critical path)      prefill batches (length-bucketed)
+                                                   │ SiDAEngine.prefill
+                                                   │ (logits + rope'd K/V)
+                                                   ▼
+                                             decode lanes (continuous batch)
+                                                   │ per-step hash predict,
+                                                   │ ExpertStore prepare,
+                                                   ▼ masked decode_step
+                                             token streams -> Request.emit
+
+Requests join a decode lane the moment their prefill finishes (the prefill
+forward's K/V seeds the lane's cache directly — no replay) and leave the
+moment they finish, so the decode batch re-fills continuously instead of
+draining to its slowest member. The hash function's look-ahead property is
+what makes admission-time expert prediction (and therefore cache-affinity
+scheduling and prefetch) possible before any model compute runs.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.decode_engine import hash_fn_step, hash_state_init
+from repro.core.engine import SiDAEngine
+from repro.core.hash_table import HashTable
+from repro.core.offload import ExpertStore
+from repro.models.attention import ShardingCtx
+from repro.models.transformer import decode_step, init_cache, n_moe_layers
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import DEFAULT_BUCKETS, LaneTable, Scheduler
+from repro.serving.telemetry import Telemetry
+
+
+def _mask_batch(active, new, old, batch_axis: int):
+    """jnp.where over a pytree whose leaves carry batch at `batch_axis`."""
+
+    def one(nw, od):
+        shape = [1] * nw.ndim
+        shape[batch_axis] = -1
+        return jnp.where(active.reshape(shape), nw, od)
+
+    return jax.tree.map(one, new, old)
+
+
+class RequestServer:
+    """Continuous-batching request server over the SiDA engines."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        hash_params: dict,
+        slots_per_layer: int,
+        max_lanes: int = 4,
+        max_prefill_batch: int = 4,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        cache_len: int = 0,
+        serve_top_k: Optional[int] = None,
+        ctx: ShardingCtx = ShardingCtx(),
+        host_quant: str = "none",
+        eviction: str = "lru",
+        drop_expired: bool = False,
+        keep_prefill_logits: bool = False,
+        telemetry: Optional[Telemetry] = None,
+    ):
+        assert cfg.moe.enabled, "RequestServer targets MoE architectures"
+        assert not cfg.enc_dec and cfg.block_kind == "attn", (
+            "decode lanes currently support attention-family decoder-only archs"
+        )
+        self.cfg = cfg
+        self.ctx = ctx
+        self.store = ExpertStore(
+            cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction
+        )
+        self.engine = SiDAEngine(
+            cfg, params, hash_params, slots_per_layer,
+            serve_top_k=serve_top_k, ctx=ctx, store=self.store,
+        )
+        self.hash_params = hash_params
+        self.embed_table = params["embed"]
+        self.L = n_moe_layers(cfg)
+        self.E = cfg.moe.num_experts
+        self.k = serve_top_k or cfg.moe.top_k
+
+        self.buckets = tuple(sorted(buckets))
+        self.cache_len = cache_len or 2 * self.buckets[-1]
+        assert self.buckets[-1] <= self.cache_len, "cache must hold a full bucket"
+        windows = [w for s in range(cfg.n_layers) if (w := cfg.layer_window(s))]
+        assert not windows or min(windows) >= self.cache_len, (
+            "windowed layers need window >= cache_len for prefill-seeded lanes"
+        )
+
+        self.max_lanes = max_lanes
+        self.max_prefill_batch = max_prefill_batch
+        self.drop_expired = drop_expired
+        self.keep_prefill_logits = keep_prefill_logits
+
+        self.scheduler = Scheduler(buckets=self.buckets)
+        self.lanes = LaneTable(max_lanes)
+        self.telemetry = telemetry or Telemetry()
+        self._lock = threading.Lock()
+
+        # --- mutable decode-batch state (one lane = one batch row)
+        self.cache = init_cache(cfg, max_lanes, self.cache_len)
+        self.hstate = hash_state_init(hash_params, max_lanes)
+        self.lane_tokens = np.zeros((max_lanes,), np.int32)
+        self._active = np.zeros((max_lanes,), bool)
+        self._step = 0
+        self._t0 = time.perf_counter()  # rebased at run(); fallback for direct use
+        self.completed: List[Request] = []
+        self.rejected: List[Request] = []
+
+        cfg_, ctx_, E, k = cfg, ctx, self.E, self.k
+
+        @jax.jit
+        def _hash_prefill(hp, embed_table, tokens, lengths):
+            """Advance the predictor LSTM through each (padded) prompt,
+            freezing every sequence at its true length — yields the exact
+            state the incremental decode predictor would have reached."""
+            emb = jnp.take(embed_table, tokens, axis=0)          # [n, Sb, d]
+            state0 = hash_state_init(hp, tokens.shape[0])
+
+            def step(state, xs):
+                emb_t, j = xs
+                _, new = hash_fn_step(hp, emb_t, state, E)
+                act = j < lengths
+                return _mask_batch(act, new, state, 0), None
+
+            xs = (jnp.moveaxis(emb, 1, 0), jnp.arange(tokens.shape[1]))
+            state, _ = jax.lax.scan(step, state0, xs)
+            return state
+
+        @jax.jit
+        def _predict_masked(hp, embed_table, tokens, hstate, active):
+            emb = jnp.take(embed_table, tokens, axis=0)          # [B, d]
+            logits, new = hash_fn_step(hp, emb, hstate, E)       # [B, L, E]
+            merged = _mask_batch(active, new, hstate, 0)
+            vals, ids = jax.lax.top_k(logits, k)                 # [B, L, k]
+            alpha = jax.nn.softmax(vals, axis=-1) * active[:, None, None]
+            return (
+                jnp.moveaxis(ids, 1, 0).astype(jnp.int32),       # [L, B, k]
+                jnp.moveaxis(alpha, 1, 0).astype(jnp.float32),
+                merged,
+            )
+
+        @jax.jit
+        def _decode_masked(serve_params, cache, tokens, slot_ids, w, active):
+            logits, new_cache = decode_step(
+                serve_params, cache, tokens, cfg_, ctx_,
+                routing_override=(slot_ids, w),
+            )
+            merged = dict(new_cache)
+            merged["pos"] = jnp.where(active, new_cache["pos"], cache["pos"])
+            for key in cache:
+                if key.startswith("sub"):
+                    merged[key] = _mask_batch(active, new_cache[key], cache[key], 1)
+            return jnp.argmax(logits, -1).astype(jnp.int32), merged
+
+        @jax.jit
+        def _seed_lanes(cache, hstate, kv, hjoin, lanes, pos):
+            new_cache = dict(cache)
+            for skey, (kk, vv) in kv.items():
+                entry = dict(new_cache[skey])
+                Sb = kk.shape[2]
+                entry["k"] = entry["k"].at[:, lanes, :Sb].set(
+                    kk.astype(entry["k"].dtype)
+                )
+                entry["v"] = entry["v"].at[:, lanes, :Sb].set(
+                    vv.astype(entry["v"].dtype)
+                )
+                new_cache[skey] = entry
+            new_cache["pos"] = cache["pos"].at[lanes].set(pos)
+            new_hstate = jax.tree.map(
+                lambda full, j: full.at[lanes].set(j.astype(full.dtype)),
+                hstate, hjoin,
+            )
+            return new_cache, new_hstate
+
+        self._hash_prefill = _hash_prefill
+        self._predict_masked = _predict_masked
+        self._decode_masked = _decode_masked
+        self._seed_lanes = _seed_lanes
+
+    # ------------------------------------------------------------------
+    # hash-ahead admission
+    # ------------------------------------------------------------------
+    def build_request_table(self, req: Request) -> None:
+        """Hash-ahead: predict the request's per-token expert activations
+        before any model compute (runs on the hash thread)."""
+        req.table = self.engine.build_table(req.rid, req.prompt[None, :])
+
+    def admit(self, req: Request, now: float) -> None:
+        req.t_queued = now
+        self.telemetry.counter("requests_arrived").inc()
+        with self._lock:
+            self.scheduler.enqueue(req)
+
+    # ------------------------------------------------------------------
+    # prefill: length-bucketed batch -> lanes
+    # ------------------------------------------------------------------
+    def _combined_table(self, batch: List[Request], bucket: int) -> HashTable:
+        """Concat per-request hash tables, edge-padding ids (no spurious
+        expert loads) with zero α (pad tokens route nowhere)."""
+        ids = np.zeros((self.L, len(batch), bucket, self.k), np.int32)
+        w = np.zeros((self.L, len(batch), bucket, self.k), np.float32)
+        for i, r in enumerate(batch):
+            P = r.prompt_len
+            ids[:, i, :P] = r.table.expert_ids[:, 0]
+            ids[:, i, P:] = r.table.expert_ids[:, 0, P - 1 : P]
+            w[:, i, :P] = r.table.weights[:, 0]
+        return HashTable(self._step, ids, w)
+
+    def _prefill_and_join(self, batch: List[Request], bucket: int, now: float):
+        n = len(batch)
+        tokens = np.zeros((n, bucket), np.int32)
+        lengths = np.zeros((n,), np.int32)
+        for i, r in enumerate(batch):
+            tokens[i, : r.prompt_len] = r.prompt
+            lengths[i] = r.prompt_len
+            r.t_prefill = now
+        table = self._combined_table(batch, bucket)
+
+        logits, kv = self.engine.prefill(tokens, table)
+        hjoin = self._hash_prefill(
+            self.hash_params, self.embed_table, jnp.asarray(tokens),
+            jnp.asarray(lengths),
+        )
+        logits = np.asarray(logits)
+
+        lanes = np.zeros((n,), np.int32)
+        pos = np.zeros((n,), np.int32)
+        t_first = time.perf_counter() - self._t0
+        for i, r in enumerate(batch):
+            first = int(np.argmax(logits[i, r.prompt_len - 1]))
+            if self.keep_prefill_logits:
+                r.prefill_logits = logits[i, : r.prompt_len].copy()
+            lanes[i] = self.lanes.assign(r)
+            pos[i] = r.prompt_len
+            r.state = RequestState.DECODE
+            r.t_first_token = t_first
+            r.emit(first)
+            self.lane_tokens[lanes[i]] = first
+            self.telemetry.histogram("ttft_s").observe(r.ttft_s)
+        self.cache, self.hstate = self._seed_lanes(
+            self.cache, self.hstate, kv, hjoin,
+            jnp.asarray(lanes), jnp.asarray(pos),
+        )
+        self._active[lanes] = True
+        self.telemetry.counter("prefill_batches").inc()
+        self.telemetry.histogram("prefill_batch_size").observe(n)
+        self.telemetry.counter("prefill_pad_tokens").inc(
+            float(n * bucket - lengths.sum())
+        )
+        # a request whose whole budget was the first token finishes here
+        for i, r in enumerate(batch):
+            if r.finished():
+                self._finish(int(lanes[i]))
+
+    # ------------------------------------------------------------------
+    # decode: one continuous-batch step
+    # ------------------------------------------------------------------
+    def _decode_tick(self, now: float) -> None:
+        active = self._active.copy()
+        ids, alpha, self.hstate = self._predict_masked(
+            self.hash_params, self.embed_table,
+            jnp.asarray(self.lane_tokens), self.hstate, jnp.asarray(active),
+        )
+        ids_np, alpha_np = np.asarray(ids), np.asarray(alpha)
+
+        # prefetch only what active lanes predict; translate for all lanes
+        prep = HashTable(
+            self._step, ids_np[:, active, None, :], alpha_np[:, active, None, :]
+        )
+        trans = self.store.prepare(prep)
+        full = HashTable(self._step, ids_np[:, :, None, :], alpha_np[:, :, None, :])
+        slot_ids, w = self.store.translate(full, trans)
+
+        next_tok, self.cache = self._decode_masked(
+            self.store.serve_params, self.cache, jnp.asarray(self.lane_tokens),
+            jnp.asarray(slot_ids[:, :, 0, :]), jnp.asarray(w[:, :, 0, :]),
+            jnp.asarray(active),
+        )
+        next_tok = np.asarray(next_tok)
+        self._step += 1
+        self.telemetry.counter("decode_steps").inc()
+
+        for lane in self.lanes.active():
+            if not active[lane]:
+                continue  # joined after this tick's snapshot
+            req = self.lanes.requests[lane]
+            req.emit(int(next_tok[lane]))
+            self.lane_tokens[lane] = next_tok[lane]
+            self.telemetry.counter("tokens_generated").inc()
+            if req.finished():
+                self._finish(lane)
+
+    def _finish(self, lane: int) -> None:
+        req = self.lanes.release(lane)
+        self._active[lane] = False
+        now = time.perf_counter() - self._t0
+        req.state = RequestState.DONE
+        req.t_done = now
+        self.completed.append(req)
+        self.telemetry.counter("requests_completed").inc()
+        self.telemetry.histogram("latency_s").observe(req.latency_s)
+        self.telemetry.histogram("decode_tokens").observe(len(req.generated))
+        if req.slo_s is not None and req.latency_s > req.slo_s:
+            self.telemetry.counter("deadline_miss").inc()
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], realtime: bool = True) -> Telemetry:
+        """Serve an arrival stream to completion.
+
+        realtime=True honors inter-arrival gaps with wall-clock waits (the
+        open-loop Poisson benchmark); realtime=False releases requests in
+        arrival order as fast as the hash thread can admit them (tests)."""
+        self._t0 = time.perf_counter()
+        stream = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        hash_done = threading.Event()
+
+        def hash_thread():
+            for req in stream:
+                if realtime:
+                    wait = req.arrival_s - (time.perf_counter() - self._t0)
+                    if wait > 0:
+                        time.sleep(wait)
+                self.build_request_table(req)
+                self.admit(req, time.perf_counter() - self._t0)
+            hash_done.set()
+
+        ht = threading.Thread(target=hash_thread)
+        ht.start()
+        try:
+            while True:
+                now = time.perf_counter() - self._t0
+                with self._lock:
+                    if self.drop_expired:
+                        for r in self.scheduler.pop_expired(now):
+                            self.rejected.append(r)
+                            self.telemetry.counter("requests_rejected").inc()
+                    free = self.lanes.free_count()
+                    batch, bucket = ([], 0)
+                    if free:
+                        batch, bucket = self.scheduler.next_prefill_batch(
+                            now, min(free, self.max_prefill_batch), self.store
+                        )
+                    depth = self.scheduler.pending()
+                self.telemetry.gauge("queue_depth").set(depth)
+                self.telemetry.gauge("active_lanes").set(len(self.lanes.active()))
+
+                progressed = False
+                if batch:
+                    self._prefill_and_join(batch, bucket, now)
+                    progressed = True
+                if self._active.any():
+                    self._decode_tick(now)
+                    progressed = True
+                if not progressed:
+                    # hash_done is set only after the last admit, so a
+                    # pending() re-read under the lock cannot miss a request
+                    # admitted after the depth snapshot above
+                    if hash_done.is_set():
+                        with self._lock:
+                            if self.scheduler.pending() == 0:
+                                break
+                    time.sleep(2e-4)
+        finally:
+            ht.join()
+        st = self.store.stats
+        self.telemetry.counter("h2d_bytes").inc(st.bytes_h2d)
+        self.telemetry.counter("expert_loads").inc(st.loads)
+        self.telemetry.counter("expert_hits").inc(st.hits)
+        self.telemetry.counter("expert_evictions").inc(st.evictions)
+        return self.telemetry
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        """Flat metric dict: the serving analogue of ServeMetrics.summary."""
+        t = self.telemetry
+        lat, ttft = t.histogram("latency_s"), t.histogram("ttft_s")
+        st = self.store.stats
+        refs = st.hits + st.loads
+        toks = t.counter("tokens_generated").value + t.counter(
+            "requests_completed"
+        ).value  # first tokens are emitted at prefill
+        wall = t.wall_s()
+        return {
+            "completed": t.counter("requests_completed").value,
+            "rejected": t.counter("requests_rejected").value,
+            "deadline_miss": t.counter("deadline_miss").value,
+            "throughput_tok_s": toks / wall if wall else 0.0,
+            "p50_latency_s": lat.percentile(50),
+            "p95_latency_s": lat.percentile(95),
+            "p99_latency_s": lat.percentile(99),
+            "p50_ttft_s": ttft.percentile(50),
+            "p95_ttft_s": ttft.percentile(95),
+            "cache_hit_rate": st.hits / refs if refs else 0.0,
+            "h2d_mb": st.bytes_h2d / 1e6,
+            "max_queue_depth": t.gauge("queue_depth").max,
+        }

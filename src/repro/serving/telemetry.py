@@ -1,0 +1,108 @@
+"""Serving telemetry: counters, gauges, histograms with JSON export.
+
+Replaces the ad-hoc print-a-few-floats reporting of the batch engines with
+a structured registry the server, the launcher, and the benchmarks all
+share: `Telemetry.snapshot()` is a plain dict (JSON-serializable) carrying
+p50/p95/p99 latency, TTFT, queue depth, H2D bytes, cache hit rate, …
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+
+class Counter:
+    """Monotonic event count (requests completed, tokens generated, …)."""
+
+    def __init__(self) -> None:
+        self.value: float = 0
+
+    def inc(self, v: float = 1) -> None:
+        self.value += v
+
+
+class Gauge:
+    """Point-in-time value (queue depth, active lanes, …). Keeps the max
+    ever seen so a snapshot exposes peak pressure, not just the final state."""
+
+    def __init__(self) -> None:
+        self.value: float = 0
+        self.max: float = 0
+
+    def set(self, v: float) -> None:
+        self.value = v
+        self.max = max(self.max, v)
+
+
+class Histogram:
+    """Exact-sample histogram (serving runs are bounded, so no sketching):
+    percentiles are computed from the raw observations at snapshot time."""
+
+    def __init__(self) -> None:
+        self.samples: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.samples.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    def percentile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        xs = sorted(self.samples)
+        idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+        return xs[idx]
+
+    def summary(self) -> Dict[str, float]:
+        if not self.samples:
+            return {"count": 0}
+        return {
+            "count": self.count,
+            "mean": sum(self.samples) / self.count,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+            "max": max(self.samples),
+        }
+
+
+class Telemetry:
+    """Named-metric registry with get-or-create accessors and JSON export."""
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+        self._t0 = time.perf_counter()
+
+    def counter(self, name: str) -> Counter:
+        return self._counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        return self._gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str) -> Histogram:
+        return self._histograms.setdefault(name, Histogram())
+
+    def wall_s(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def snapshot(self) -> dict:
+        return {
+            "wall_s": self.wall_s(),
+            "counters": {k: c.value for k, c in self._counters.items()},
+            "gauges": {
+                k: {"last": g.value, "max": g.max} for k, g in self._gauges.items()
+            },
+            "histograms": {k: h.summary() for k, h in self._histograms.items()},
+        }
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent)
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())

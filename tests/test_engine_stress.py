@@ -17,6 +17,9 @@ from repro.models.transformer import init_params, n_moe_layers
 
 CTX = ShardingCtx()
 
+# concurrency stress sweeps: long-running — out of tier-1
+pytestmark = pytest.mark.slow
+
 
 def test_hash_table_queue_fifo_and_close():
     q = HashTableQueue(maxsize=4)

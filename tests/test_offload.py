@@ -113,3 +113,105 @@ def test_memory_accounting():
     _, store2 = _store(2)
     assert store2.device_bytes() < store4.device_bytes()
     assert store4.device_bytes() <= store4.full_expert_bytes()
+
+
+# ---------------------------------------------------------------------------
+# miss renormalization (regression: dropped experts used to shrink the
+# MoE output because surviving weights were not rescaled)
+# ---------------------------------------------------------------------------
+
+
+def test_translate_renormalizes_surviving_weights():
+    cfg, store = _store(2)
+    L, E = store.L, store.E
+    # make experts {0, 1} resident
+    warm = HashTable(0, np.zeros((L, 1, 2, 1), np.int32),
+                     np.ones((L, 1, 2, 1), np.float32))
+    warm.expert_ids[:, 0, 1, 0] = 1
+    trans = store.prepare(warm)
+    # token routes to resident 0 (α=.7) and non-resident 3 (α=.3)
+    ids = np.zeros((L, 1, 1, 2), np.int32)
+    ids[..., 1] = 3
+    w = np.zeros((L, 1, 1, 2), np.float32)
+    w[..., 0], w[..., 1] = 0.7, 0.3
+    table = HashTable(1, ids, w)
+    _, got = store.translate(table, trans)
+    # survivor absorbs the dropped α mass: total stays 1.0 per token
+    np.testing.assert_allclose(got[..., 0], 1.0, atol=1e-6)
+    np.testing.assert_allclose(got[..., 1], 0.0, atol=1e-6)
+    # all-miss tokens stay zero (nothing resident to scale up)
+    all_miss = HashTable(2, np.full((L, 1, 1, 1), 2, np.int32),
+                         np.full((L, 1, 1, 1), 0.5, np.float32))
+    _, gm = store.translate(all_miss, trans)
+    assert (gm == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# pluggable eviction + pinning
+# ---------------------------------------------------------------------------
+
+
+def _single(L, e, n=2):
+    ids = np.full((L, 1, n, 1), e, np.int32)
+    return HashTable(0, ids, np.ones((L, 1, n, 1), np.float32))
+
+
+def _pair(L, a, b):
+    t = _single(L, a)
+    t.expert_ids[:, 0, 1, 0] = b
+    return t
+
+
+def test_lru_eviction_keeps_touched_expert():
+    cfg, params = reduced_params("switch-base-8")
+    lru = ExpertStore(cfg, params, slots_per_layer=2, eviction="lru")
+    fifo = ExpertStore(cfg, params, slots_per_layer=2, eviction="fifo")
+    L = lru.L
+    for st in (lru, fifo):
+        st.prepare(_pair(L, 0, 1))  # load {0, 1}
+        st.prepare(_single(L, 0))   # touch 0
+        st.prepare(_single(L, 2))   # needs an eviction
+    # LRU evicts 1 (least recent); FIFO evicts 0 (oldest insertion)
+    assert 0 in lru.resident[(0, lru.moe_subs[0])]
+    assert 1 not in lru.resident[(0, lru.moe_subs[0])]
+    assert 0 not in fifo.resident[(0, fifo.moe_subs[0])]
+    assert 1 in fifo.resident[(0, fifo.moe_subs[0])]
+
+
+def test_alpha_mass_eviction_keeps_heavy_expert():
+    cfg, params = reduced_params("switch-base-8")
+    st = ExpertStore(cfg, params, slots_per_layer=2, eviction="alpha")
+    L = st.L
+    ids = np.zeros((L, 1, 8, 1), np.int32)
+    ids[:, 0, 7, 0] = 1  # expert 0: 7 tokens of mass, expert 1: one token
+    w = np.ones((L, 1, 8, 1), np.float32)
+    st.prepare(HashTable(0, ids, w))
+    st.prepare(_single(L, 2))  # eviction: must drop the light expert 1
+    res = st.resident[(0, st.moe_subs[0])]
+    assert 0 in res and 2 in res and 1 not in res
+
+
+def test_pinned_expert_never_evicted():
+    cfg, params = reduced_params("switch-base-8")
+    st = ExpertStore(cfg, params, slots_per_layer=2)
+    L = st.L
+    st.prepare(_pair(L, 0, 1))
+    for l in range(L):
+        st.pin_experts(l, [0, 1])
+    trans = st.prepare(_pair(L, 2, 3))  # both loads must be dropped
+    res = st.resident[(0, st.moe_subs[0])]
+    assert 0 in res and 1 in res
+    assert (trans[:, 2] == -1).all() and (trans[:, 3] == -1).all()
+    for l in range(L):
+        st.unpin_experts(l, [0, 1])
+    trans = st.prepare(_pair(L, 2, 3))  # now evictable again
+    assert (trans[:, 2] >= 0).all() and (trans[:, 3] >= 0).all()
+
+
+def test_cache_affinity_score():
+    cfg, store = _store(4)
+    L = store.L
+    store.prepare(_pair(L, 0, 1))
+    assert store.cache_affinity(_pair(L, 0, 1)) == 1.0
+    assert store.cache_affinity(_pair(L, 2, 3)) == 0.0
+    assert abs(store.cache_affinity(_pair(L, 0, 2)) - 0.5) < 1e-9

@@ -1,6 +1,8 @@
 """Sparsity analyses: Eq. 2, ĉ estimation, sentence-level sparsity."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sparsity import (

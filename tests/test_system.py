@@ -27,6 +27,9 @@ from repro.optim.adamw import adamw_init
 
 CTX = ShardingCtx()
 
+# trains a model + hash function end-to-end: minutes of CPU — out of tier-1
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained_system():
