@@ -49,6 +49,20 @@ class AttnConfig:
 
 
 @dataclass(frozen=True)
+class PrefetchConfig:
+    """Async expert-prefetch pipeline settings (serving-time).
+
+    `depth` is the lookahead: how many prediction batches may have uploads
+    outstanding at once (bounds both transfer-queue backpressure and the
+    eviction-protection working set). `staging_buffers` sizes the host
+    staging ring the transfer thread double-buffers H2D copies through."""
+
+    enabled: bool = False
+    depth: int = 2                    # max outstanding prefetch tickets
+    staging_buffers: int = 2          # host staging slabs (2 = double-buffered)
+
+
+@dataclass(frozen=True)
 class SSMConfig:
     """State-space / recurrent block settings (mamba + xLSTM)."""
 
@@ -92,6 +106,7 @@ class ModelConfig:
     moe: MoEConfig = field(default_factory=MoEConfig)
     attn: AttnConfig = field(default_factory=AttnConfig)
     ssm: SSMConfig = field(default_factory=SSMConfig)
+    prefetch: PrefetchConfig = field(default_factory=PrefetchConfig)
 
     # block layout: "attn" (transformer), "hymba" (parallel attn+ssm),
     # "xlstm" (recurrent-only stack)

@@ -30,7 +30,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.hash_fn import sparsemax
 from repro.core.hash_table import HashTable
-from repro.core.offload import ExpertStore
+from repro.core.offload import ExpertStore, PrefetchPipeline
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import decode_step, init_cache, n_moe_layers
 
@@ -99,6 +99,7 @@ class DecodeMetrics:
     steps: int = 0
     tokens: int = 0
     wall_s: float = 0.0
+    stall_s: float = 0.0           # time blocked on async prefetch fences
     loads_per_step: List[int] = field(default_factory=list)
 
     @property
@@ -120,6 +121,9 @@ class SiDADecodeEngine:
         host_quant: str = "none",
         eviction: str = "fifo",
         store: Optional[ExpertStore] = None,
+        prefetch_depth: Optional[int] = None,
+        staging_buffers: Optional[int] = None,
+        prefetcher: Optional[PrefetchPipeline] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
@@ -128,6 +132,14 @@ class SiDADecodeEngine:
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
         )
+        self._owns_prefetcher = False
+        if prefetcher is not None:
+            self.prefetcher: Optional[PrefetchPipeline] = prefetcher
+        else:
+            self.prefetcher = PrefetchPipeline.maybe_create(
+                self.store, cfg, prefetch_depth, staging_buffers
+            )
+            self._owns_prefetcher = self.prefetcher is not None
         self.embed_table = params["embed"]
         self.L = n_moe_layers(cfg)
         E = cfg.moe.num_experts
@@ -177,16 +189,34 @@ class SiDADecodeEngine:
             table = HashTable(i, np.asarray(ids)[:, :, None, :],
                               np.asarray(alpha)[:, :, None, :])
             loads_before = self.store.stats.loads
-            trans = self.store.prepare(table)
+            if self.prefetcher is not None:
+                # per-lane decode predictions feed the transfer thread; the
+                # step only clears ready fences for the experts it needs
+                stall0 = self.prefetcher.stats.stall_s
+                ticket = self.prefetcher.submit(table)
+                ticket.wait()
+                m.stall_s += self.prefetcher.stats.stall_s - stall0
+                trans = ticket.trans
+            else:
+                ticket = None
+                trans = self.store.prepare(table)
             m.loads_per_step.append(self.store.stats.loads - loads_before)
             slot_ids, w = self.store.translate(table, trans)
             tokens, cache = self._step(
                 self.store.serve_params, cache, tokens,
                 jnp.asarray(slot_ids[:, :, 0, :]), jnp.asarray(w[:, :, 0, :]),
             )
-            out[:, i] = np.asarray(tokens)
+            out[:, i] = np.asarray(tokens)  # forces the step; slots consumed
+            if ticket is not None:
+                ticket.release()
             m.steps += 1
             m.tokens += B
         jax.block_until_ready(tokens)
         m.wall_s = time.perf_counter() - t0
         return out, m
+
+    def close(self) -> None:
+        """Join the async prefetch transfer thread (no-op when sync or when
+        the pipeline is owned by the caller)."""
+        if self.prefetcher is not None and self._owns_prefetcher:
+            self.prefetcher.close()

@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.hash_fn import hash_fn_apply, predict_topk
 from repro.core.hash_table import HashTable, HashTableQueue
-from repro.core.offload import ExpertStore
+from repro.core.offload import ExpertStore, PrefetchPipeline, PrefetchTicket
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import forward, n_moe_layers
 
@@ -71,6 +71,9 @@ class SiDAEngine:
         spill_dir: Optional[str] = None,
         eviction: str = "fifo",
         store: Optional[ExpertStore] = None,
+        prefetch_depth: Optional[int] = None,
+        staging_buffers: Optional[int] = None,
+        prefetcher: Optional[PrefetchPipeline] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
@@ -82,6 +85,16 @@ class SiDAEngine:
             cfg, params, slots_per_layer,
             host_quant=host_quant, spill_dir=spill_dir, eviction=eviction,
         )
+        # async prefetch: explicit args > cfg.prefetch knobs > off. A
+        # caller-supplied pipeline (the request server's) is shared as-is.
+        self._owns_prefetcher = False
+        if prefetcher is not None:
+            self.prefetcher: Optional[PrefetchPipeline] = prefetcher
+        else:
+            self.prefetcher = PrefetchPipeline.maybe_create(
+                self.store, cfg, prefetch_depth, staging_buffers
+            )
+            self._owns_prefetcher = self.prefetcher is not None
         self.embed_table = params["embed"]
         self.L = n_moe_layers(cfg)
 
@@ -120,30 +133,61 @@ class SiDAEngine:
         ids, w = self._predict(self.hash_params, self.embed_table, tokens)
         return HashTable(batch_index, np.asarray(ids), np.asarray(w))
 
-    def infer(self, tokens: np.ndarray, table: HashTable) -> np.ndarray:
-        trans = self.store.prepare(table)
-        slot_ids, w = self.store.translate(table, trans)
+    def _route(self, table: HashTable, ticket: Optional[PrefetchTicket] = None):
+        """Resolve the routing override for `table`: through the async
+        pipeline (fence on ready events, never upload inline) when one is
+        attached, synchronous prepare otherwise. Returns
+        (slot_ids, weights, ticket) — the caller must `release()` a
+        non-None ticket once the forward has consumed the slots."""
+        if ticket is None and self.prefetcher is not None:
+            ticket = self.prefetcher.submit(table)
+        if ticket is not None:
+            ticket.wait()
+            slot_ids, w = self.store.translate(table, ticket.trans)
+        else:
+            trans = self.store.prepare(table)
+            slot_ids, w = self.store.translate(table, trans)
+        return slot_ids, w, ticket
+
+    def infer(
+        self, tokens: np.ndarray, table: HashTable,
+        ticket: Optional[PrefetchTicket] = None,
+    ) -> np.ndarray:
+        slot_ids, w, ticket = self._route(table, ticket)
         logits = self._forward(
             self.store.serve_params, jnp.asarray(tokens),
             jnp.asarray(slot_ids), jnp.asarray(w),
         )
+        if ticket is not None:
+            # slots stay eviction-protected until the forward has read them
+            jax.block_until_ready(logits)
+            ticket.release()
         return logits
 
-    def prefill(self, tokens: np.ndarray, table: HashTable):
+    def prefill(self, tokens: np.ndarray, table: HashTable,
+                ticket: Optional[PrefetchTicket] = None):
         """Like `infer`, but also returns every layer's rope-applied K/V
         ({sub: (k, v)} each [G, B, S, K, D]) so the request server can seed
-        decode-lane caches directly from the prefill forward."""
-        trans = self.store.prepare(table)
-        slot_ids, w = self.store.translate(table, trans)
-        return self._forward_kv(
+        decode-lane caches directly from the prefill forward. The server
+        passes a pre-submitted `ticket` whose uploads it already overlapped
+        against decode compute; otherwise one is submitted here."""
+        slot_ids, w, ticket = self._route(table, ticket)
+        out = self._forward_kv(
             self.store.serve_params, jnp.asarray(tokens),
             jnp.asarray(slot_ids), jnp.asarray(w),
         )
+        if ticket is not None:
+            jax.block_until_ready(out)
+            ticket.release()
+        return out
 
     # ------------------------------------------------------------------
     def _cache_affinity(self, table: HashTable) -> float:
-        """Fraction of the table's active experts already resident
-        (generalized onto ExpertStore so the request scheduler shares it)."""
+        """Fraction of the table's active experts already resident or with
+        an upload in flight (generalized onto ExpertStore so the request
+        scheduler shares it)."""
+        if self.prefetcher is not None:
+            return self.prefetcher.cache_affinity(table)
         return self.store.cache_affinity(table)
 
     def serve(
@@ -156,22 +200,33 @@ class SiDAEngine:
         inference thread buffers up to `lookahead` hash tables and serves
         the one whose predicted expert set overlaps the resident cache the
         most — fewer H2D loads under tight budgets, at bounded reordering.
+
+        With an async prefetcher attached, the hash thread doubles as the
+        prefetch producer: it submits each table's expert uploads the moment
+        the table is built, so batch j+1's transfers overlap batch j's
+        forward and the inference thread only clears ready fences.
         """
         metrics = ServeMetrics()
         q = HashTableQueue(maxsize=max(4, lookahead))
         results: List[Optional[np.ndarray]] = [None] * len(batches)
+        # ticket handoff hash->inference thread; the queue put/get pair
+        # orders the dict write before the read
+        tickets: Dict[int, PrefetchTicket] = {}
 
         def hash_thread():
             for j, toks in enumerate(batches):
                 t0 = time.perf_counter()
-                q.put(self.build_table(j, toks))
+                table = self.build_table(j, toks)
+                if self.prefetcher is not None:
+                    tickets[j] = self.prefetcher.submit(table)
+                q.put(table)
                 metrics.hash_time_s += time.perf_counter() - t0
             q.close()
 
         def _run_one(table: HashTable):
             i = table.batch_index
             t0 = time.perf_counter()
-            logits = self.infer(batches[i], table)
+            logits = self.infer(batches[i], table, ticket=tickets.pop(i, None))
             jax.block_until_ready(logits)
             metrics.latency_s.append(time.perf_counter() - t0)
             results[i] = np.asarray(logits)
@@ -215,6 +270,13 @@ class SiDAEngine:
         metrics.wall_s = time.perf_counter() - t_start
         self.results = results
         return metrics
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Join the async prefetch transfer thread (no-op when sync or when
+        the pipeline is owned by the caller, e.g. the request server)."""
+        if self.prefetcher is not None and self._owns_prefetcher:
+            self.prefetcher.close()
 
     # ------------------------------------------------------------------
     def device_memory_bytes(self) -> int:

@@ -11,14 +11,23 @@ routing override can address slots directly.
 Routers are offloaded entirely: the serving params pytree contains no router
 matrix (the hash table replaces it — paper §3.1 "all routers are offloaded
 to the main memory and do not participate in the forward pass").
+
+`PrefetchPipeline` adds the asynchronous tier on top of the store: a
+background transfer thread consumes per-step expert predictions, stages the
+(int8-quantised) host weights into double-buffered staging slabs, and
+commits them to device slots overlapped against the previous step's
+compute. The forward path blocks only on per-expert ready fences instead of
+performing uploads inline — see the class docstring for the protocol.
 """
 from __future__ import annotations
 
 import collections
+import sys
+import threading
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +53,21 @@ def _slot_write_q(buf: Array, g: Array, slots: Array, q: Array, scale: Array) ->
     """int8 variant: dequantisation happens ON DEVICE, so the host->device
     transfer moves int8 + per-channel scales (2x fewer bytes than bf16,
     4x fewer than f32) — SiDA's critical path is exactly these transfers."""
+    w = (q.astype(jnp.float32) * scale).astype(buf.dtype)
+    return buf.at[g, slots].set(w)
+
+
+# Non-donating variants for concurrent writers: the async transfer thread
+# commits while a forward may still hold (and read) the previous slot-pool
+# array, so the old buffer must stay alive — copy-on-write snapshot
+# semantics instead of in-place donation.
+@jax.jit
+def _slot_write_cow(buf: Array, g: Array, slots: Array, w: Array) -> Array:
+    return buf.at[g, slots].set(w)
+
+
+@jax.jit
+def _slot_write_q_cow(buf: Array, g: Array, slots: Array, q: Array, scale: Array) -> Array:
     w = (q.astype(jnp.float32) * scale).astype(buf.dtype)
     return buf.at[g, slots].set(w)
 
@@ -169,10 +193,12 @@ class TransferStats:
     loads: int = 0
     evictions: int = 0
     hits: int = 0
-    prepare_time: float = 0.0
+    dropped: int = 0               # planned loads dropped (every victim protected)
+    prepare_time: float = 0.0      # synchronous upload time inside the forward path
 
     def reset(self):
         self.bytes_h2d = self.loads = self.evictions = self.hits = 0
+        self.dropped = 0
         self.prepare_time = 0.0
 
 
@@ -255,6 +281,11 @@ class ExpertStore:
                 self.policy[(g, s)] = EVICTION_POLICIES[eviction]()
                 self.free[(g, s)] = list(range(self.S))
                 self.pinned[(g, s)] = set()
+        # planning + device commits are serialized under this lock so the
+        # async transfer thread and the forward thread never interleave slot
+        # bookkeeping or double-donate a slot buffer
+        self._lock = threading.RLock()
+        self._prefetcher: Optional["PrefetchPipeline"] = None
 
     # -- layer indexing: moe layer l = g * len(moe_subs) + j ----------------
     def layer_to_gs(self, l: int) -> Tuple[int, int]:
@@ -288,13 +319,19 @@ class ExpertStore:
         self.pinned[(g, s)].difference_update(int(e) for e in experts)
 
     def plan_layer(
-        self, l: int, needed: np.ndarray, mass: Optional[np.ndarray] = None
+        self,
+        l: int,
+        needed: np.ndarray,
+        mass: Optional[np.ndarray] = None,
+        extra_protected: Optional[Set[int]] = None,
     ) -> List[Tuple[int, int, int]]:
         """Cache bookkeeping for one layer; returns pending (g, slot, e) loads.
 
         `mass` (optional, [E]) is the α mass the current hash table routes to
         each expert — fed to the eviction policy so α-weighted replacement
-        can rank residency by absorbed computation.
+        can rank residency by absorbed computation. `extra_protected` are
+        experts that must also survive eviction: the prefetch pipeline passes
+        experts referenced by unconsumed tickets or with uploads in flight.
         """
         g, s = self.layer_to_gs(l)
         res = self.resident[(g, s)]
@@ -302,6 +339,8 @@ class ExpertStore:
         free = self.free[(g, s)]
         needed_set = set(int(e) for e in needed)
         protected = needed_set | self.pinned[(g, s)]
+        if extra_protected:
+            protected |= extra_protected
         pending: List[Tuple[int, int, int]] = []
         for e in needed:
             e = int(e)
@@ -316,6 +355,7 @@ class ExpertStore:
                 # evict per policy — never an expert needed right now or pinned
                 victim = policy.pick_victim(protected)
                 if victim is None:  # everything resident is protected => drop
+                    self.stats.dropped += 1
                     continue
                 slot = res.pop(victim)
                 self.stats.evictions += 1
@@ -326,9 +366,15 @@ class ExpertStore:
         return pending
 
     def commit_loads(self, s: int, items: List[Tuple[int, int, int]]) -> None:
-        """Batched host->device writes for sub-slot `s` (one per tensor)."""
+        """Batched host->device writes for sub-slot `s` (one per tensor).
+
+        With a prefetch pipeline attached, writes use the copy-on-write
+        variants: an async forward may still read the previous pool array,
+        so it cannot be donated out from under it."""
         if not items:
             return
+        write = _slot_write if self._prefetcher is None else _slot_write_cow
+        write_q = _slot_write_q if self._prefetcher is None else _slot_write_q_cow
         gs = np.array([i[0] for i in items], np.int32)
         sl = np.array([i[1] for i in items], np.int32)
         es = np.array([i[2] for i in items], np.int32)
@@ -338,13 +384,13 @@ class ExpertStore:
             if self.quant == "int8":
                 scale = self.host_scale[f"sub{s}"][t][gs, es]
                 self.stats.bytes_h2d += w_host.nbytes + scale.nbytes
-                moe_p[t] = _slot_write_q(
+                moe_p[t] = write_q(
                     moe_p[t], jnp.asarray(gs), jnp.asarray(sl),
                     jnp.asarray(w_host), jnp.asarray(scale),
                 )
             else:
                 self.stats.bytes_h2d += w_host.nbytes
-                moe_p[t] = _slot_write(
+                moe_p[t] = write(
                     moe_p[t], jnp.asarray(gs), jnp.asarray(sl), jnp.asarray(w_host)
                 )
 
@@ -361,19 +407,27 @@ class ExpertStore:
         if len(needed) > self.S:
             needed = needed[: self.S]
         _, s = self.layer_to_gs(l)
-        self.commit_loads(s, self.plan_layer(l, np.asarray(needed)))
-        row = self.trans_row(l)
+        with self._lock:
+            self.commit_loads(s, self.plan_layer(l, np.asarray(needed)))
+            row = self.trans_row(l)
         self.stats.prepare_time += time.perf_counter() - t0
         return row
 
-    def prepare(self, table: HashTable) -> np.ndarray:
-        """Load predicted experts for a whole batch (SiDA look-ahead path).
+    def plan(
+        self,
+        table: HashTable,
+        protect_fn: Optional[Callable[[int, int], Set[int]]] = None,
+    ):
+        """Slot bookkeeping for a whole table (no device traffic).
 
-        Returns the translation table [L, E] expert->slot (-1 = not resident).
+        Returns (trans [L, E], pending {sub: [(g, slot, e)]}, needed {l: ids}).
+        `protect_fn(g, s)` supplies extra never-evict experts (the prefetch
+        pipeline protects experts referenced by outstanding tickets and
+        uploads still in flight). Caller must hold `_lock`.
         """
-        t0 = time.perf_counter()
         trans = np.full((self.L, self.E), -1, np.int32)
         pending: Dict[int, List[Tuple[int, int, int]]] = {s: [] for s in self.moe_subs}
+        needed_by_layer: Dict[int, np.ndarray] = {}
         for l in range(self.L):
             needed = table.active_experts(l)
             mass = None
@@ -382,26 +436,58 @@ class ExpertStore:
             if len(needed) > self.S:
                 # tighter budget than the active set: keep the highest-α-mass
                 needed = needed[np.argsort(-mass[needed])][: self.S]
-            _, s = self.layer_to_gs(l)
-            pending[s].extend(self.plan_layer(l, needed, mass=mass))
+            g, s = self.layer_to_gs(l)
+            extra = protect_fn(g, s) if protect_fn is not None else None
+            pending[s].extend(
+                self.plan_layer(l, needed, mass=mass, extra_protected=extra)
+            )
+            needed_by_layer[l] = needed
             trans[l] = self.trans_row(l)
-        for s, items in pending.items():
-            self.commit_loads(s, items)
+        return trans, pending, needed_by_layer
+
+    def prepare(self, table: HashTable) -> np.ndarray:
+        """Load predicted experts for a whole batch (SiDA look-ahead path).
+
+        Returns the translation table [L, E] expert->slot (-1 = not resident).
+        This is the synchronous path: uploads run inline, so the full time
+        lands in `stats.prepare_time` (the upload-stall metric). When a
+        PrefetchPipeline is attached, residency of in-flight uploads is
+        honored by fencing on them instead of re-issuing the transfer.
+        """
+        t0 = time.perf_counter()
+        pf = self._prefetcher
+        with self._lock:
+            trans, pending, needed = self.plan(
+                table, protect_fn=pf.protected_experts if pf is not None else None
+            )
+            for s, items in pending.items():
+                self.commit_loads(s, items)
+            fences = pf.events_for(needed) if pf is not None else []
+        for _, ev in fences:
+            ev.wait()
         self.stats.prepare_time += time.perf_counter() - t0
         return trans
 
     # ------------------------------------------------------------------
-    def cache_affinity(self, table: HashTable) -> float:
+    def cache_affinity(
+        self,
+        table: HashTable,
+        inflight: Optional[Dict[Tuple[int, int], Set[int]]] = None,
+    ) -> float:
         """Fraction of the table's active experts already resident — the
         scheduling score for cache-aware batch/request ordering (engine
-        lookahead and the request scheduler both rank work by it)."""
+        lookahead and the request scheduler both rank work by it).
+        `inflight` extends residency with uploads currently in flight so
+        the scheduler credits prefetches it already paid for."""
         hits = tot = 0
-        for l in range(self.L):
-            g, s = self.layer_to_gs(l)
-            res = self.resident[(g, s)]
-            for e in table.active_experts(l):
-                tot += 1
-                hits += int(e) in res
+        with self._lock:
+            for l in range(self.L):
+                g, s = self.layer_to_gs(l)
+                res = self.resident[(g, s)]
+                fly = inflight.get((g, s), ()) if inflight else ()
+                for e in table.active_experts(l):
+                    tot += 1
+                    hits += int(int(e) in res or int(e) in fly)
         return hits / max(tot, 1)
 
     # ------------------------------------------------------------------
@@ -425,3 +511,544 @@ class ExpertStore:
         scale = np.where(surv > 0, orig / np.maximum(surv, 1e-12), 1.0)
         w = w * scale
         return np.maximum(slots, 0).astype(np.int32), w.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# asynchronous prefetch pipeline
+# ---------------------------------------------------------------------------
+
+
+def _staged_put(x: np.ndarray) -> Array:
+    """H2D transfer of one staged slab. Module-level so tests can inject a
+    slow link (the concurrency suite monkeypatches this to model a saturated
+    PCIe/ICI channel)."""
+    return jax.device_put(x)
+
+
+@dataclass
+class PrefetchStats:
+    """Overlap accounting for the async pipeline.
+
+    `stall_s` is the only time the forward path actually lost: waiting on a
+    ready fence for an expert whose upload had not landed yet. `transfer_s`
+    is the background thread's busy time — the part of it that is not stall
+    is transfer hidden behind compute, which is the pipeline's win."""
+
+    submitted: int = 0          # tickets submitted
+    uploads: int = 0            # experts uploaded by the transfer thread
+    stall_s: float = 0.0        # consumer time blocked on ready fences
+    transfer_s: float = 0.0     # background gather+upload busy time
+    staging_waits: int = 0      # gathers that waited for a staging slab to drain
+    warm_skipped: int = 0       # warming prefetches dropped (transfer backlog)
+    stolen: int = 0             # jobs a fence found still queued and ran inline
+
+    @property
+    def overlap_s(self) -> float:
+        return max(0.0, self.transfer_s - self.stall_s)
+
+    def reset(self) -> None:
+        self.submitted = self.uploads = self.staging_waits = 0
+        self.warm_skipped = self.stolen = 0
+        self.stall_s = self.transfer_s = 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "prefetch_submitted": float(self.submitted),
+            "prefetch_uploads": float(self.uploads),
+            "prefetch_stall_s": self.stall_s,
+            "prefetch_transfer_s": self.transfer_s,
+            "prefetch_overlap_s": self.overlap_s,
+            "prefetch_staging_waits": float(self.staging_waits),
+            "prefetch_warm_skipped": float(self.warm_skipped),
+            "prefetch_stolen": float(self.stolen),
+        }
+
+
+class PrefetchTicket:
+    """Handle for one submitted prediction: a translation-table snapshot plus
+    the ready fences the consumer must clear before forwarding with it.
+
+    Protocol: `submit` plans slots immediately (so `trans` is final at
+    submission), uploads land asynchronously; the consumer calls `wait()`
+    (or `wait_experts` for a partial fence) before running the forward, and
+    `release()` after the forward has consumed the slots — until then every
+    expert the ticket references is protected from eviction."""
+
+    def __init__(
+        self,
+        pipeline: "PrefetchPipeline",
+        seq: int,
+        trans: np.ndarray,
+        needed: Dict[int, np.ndarray],
+        fences: List[Tuple[Tuple[int, int, int], threading.Event]],
+        protect: bool,
+    ):
+        self._pipeline = pipeline
+        self.seq = seq
+        self.trans = trans
+        self.needed = needed                  # layer -> expert ids planned
+        self._fences = fences                 # ((g, s, e), event) to clear
+        self._protect = protect
+        self._job: Optional[dict] = None      # queued transfer job (stealable)
+        self.released = False
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Make the ticket consumable: clear its ready fences AND re-plan
+        any needed expert whose prefetch was dropped (slot contention with
+        other outstanding tickets) or evicted since planning — the
+        consuming ticket has priority, so the final residency matches what
+        the synchronous path would have loaded. Refreshes `trans` in place.
+        Returns False if `timeout` expired first."""
+        return self._pipeline._refresh(self, timeout)
+
+    def wait_experts(self, l: int, experts) -> None:
+        """Partial fence: block only on uploads of `experts` at MoE layer
+        `l` — experts already resident (no pending upload) never block."""
+        g, s = self._pipeline.store.layer_to_gs(l)
+        want = {int(e) for e in experts}
+        t0 = time.perf_counter()
+        for (fg, fs, fe), ev in self._fences:
+            if (fg, fs) == (g, s) and fe in want:
+                ev.wait()
+        self._pipeline.stats.stall_s += time.perf_counter() - t0
+
+    def release(self) -> None:
+        """Drop eviction protection (call after the forward consumed the
+        slots this ticket translated)."""
+        if not self.released:
+            self._pipeline._release(self)
+            self.released = True
+
+
+class PrefetchPipeline:
+    """Async double-buffered expert prefetch over one ExpertStore.
+
+    A background transfer thread consumes planned load batches: it gathers
+    host weights (int8 + scales under `host_quant="int8"`) into one of
+    `staging_buffers` reusable host slabs, ships the slab with
+    `jax.device_put`, and scatters it into the device slot pool — all
+    overlapped against whatever the forward thread is computing. Slot
+    *planning* happens synchronously at `submit` (it is cheap, pure-Python
+    bookkeeping), so the returned ticket carries the final translation
+    table; only the byte movement is deferred.
+
+    Correctness invariants:
+      * an expert referenced by an unreleased ticket, or with an upload in
+        flight, is never an eviction victim (so no slot a pending forward
+        will read is ever reused);
+      * a ready fence fires only after *all* expert tensors (w_in, w_gate,
+        w_out) for that upload have been committed — a consumer can never
+        observe a half-written slot;
+      * a staging slab is reused only after the device acknowledged the
+        previous transfer out of it (the double-buffer fence).
+    """
+
+    # CPython's default thread switch interval (5 ms) starves the transfer
+    # thread's short numpy/dispatch ops behind the serving loop's Python
+    # work, adding ~10 ms of pure scheduling latency per upload; a serving
+    # process with a transfer thread wants sub-ms handoff. The interval is
+    # process-global, so it is refcounted and restored at close().
+    SWITCH_INTERVAL_S = 0.0005
+    _switch_refs = 0
+    _switch_saved: Optional[float] = None
+    _switch_lock = threading.Lock()
+
+    @classmethod
+    def _acquire_switch_interval(cls) -> None:
+        with cls._switch_lock:
+            if cls._switch_refs == 0 and sys.getswitchinterval() > cls.SWITCH_INTERVAL_S:
+                cls._switch_saved = sys.getswitchinterval()
+                sys.setswitchinterval(cls.SWITCH_INTERVAL_S)
+            cls._switch_refs += 1
+
+    @classmethod
+    def _release_switch_interval(cls) -> None:
+        with cls._switch_lock:
+            cls._switch_refs -= 1
+            if cls._switch_refs == 0 and cls._switch_saved is not None:
+                sys.setswitchinterval(cls._switch_saved)
+                cls._switch_saved = None
+
+    @classmethod
+    def maybe_create(
+        cls,
+        store: ExpertStore,
+        cfg,
+        prefetch_depth: Optional[int] = None,
+        staging_buffers: Optional[int] = None,
+    ) -> Optional["PrefetchPipeline"]:
+        """Resolve the prefetch knobs (explicit args > cfg.prefetch > off)
+        and build a pipeline, or return None for the synchronous path —
+        the single source of the precedence rule the engines and the
+        request server all share."""
+        depth = prefetch_depth if prefetch_depth is not None else (
+            cfg.prefetch.depth if cfg.prefetch.enabled else 0
+        )
+        nbuf = (staging_buffers if staging_buffers is not None
+                else cfg.prefetch.staging_buffers)
+        return cls(store, depth, nbuf) if depth > 0 else None
+
+    def __init__(self, store: ExpertStore, depth: int = 2, staging_buffers: int = 2):
+        assert store._prefetcher is None, "store already has a prefetch pipeline"
+        self._acquire_switch_interval()
+        self.store = store
+        self.depth = max(1, depth)
+        self.n_staging = max(1, staging_buffers)
+        self.stats = PrefetchStats()
+        self._lock = store._lock
+        # three-class transfer queue: urgent consumer jobs (a fence wait is
+        # imminent — decode ticks) > pre-submitted consumer jobs (prefill
+        # tickets whose fence comes after overlapped compute) > warming
+        # jobs — so neither admission bursts nor lookahead prefill ever
+        # head-of-line-blocks the decode path
+        self._jobs_cv = threading.Condition()
+        self._jobs: List[collections.deque] = [collections.deque() for _ in range(3)]
+        # (g, s) -> expert -> ready event for uploads still in flight
+        self._pending: Dict[Tuple[int, int], Dict[int, threading.Event]] = (
+            collections.defaultdict(dict)
+        )
+        # (g, s) -> expert -> refcount from unreleased tickets
+        self._refs: Dict[Tuple[int, int], collections.Counter] = (
+            collections.defaultdict(collections.Counter)
+        )
+        # staging slabs: per buffer, (sub, tensor[, "scale"]) -> host slab,
+        # plus the device arrays that must land before the slab is reused
+        self._staging: List[Dict[tuple, np.ndarray]] = [
+            {} for _ in range(self.n_staging)
+        ]
+        self._staging_inflight: List[List[Array]] = [[] for _ in range(self.n_staging)]
+        self._buf_i = 0
+        self._seq = 0
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._transfer_loop, name="sida-prefetch", daemon=True
+        )
+        store._prefetcher = self
+        self._thread.start()
+
+    # -- planning side (consumer threads) -------------------------------
+    def protected_experts(self, g: int, s: int) -> Set[int]:
+        """Experts at (g, s) that must survive eviction: referenced by an
+        unreleased ticket or mid-upload. Caller holds the store lock."""
+        prot = set(self._refs[(g, s)].keys())
+        prot.update(self._pending[(g, s)].keys())
+        return prot
+
+    def events_for(self, needed: Dict[int, np.ndarray]):
+        """Ready fences covering `needed` (layer -> expert ids): one entry
+        per needed expert with an upload in flight. Caller holds the lock."""
+        fences = []
+        for l, ids in needed.items():
+            g, s = self.store.layer_to_gs(l)
+            pend = self._pending[(g, s)]
+            for e in ids:
+                ev = pend.get(int(e))
+                if ev is not None:
+                    fences.append(((g, s, int(e)), ev))
+        return fences
+
+    def inflight(self) -> Dict[Tuple[int, int], Set[int]]:
+        """Snapshot of experts with uploads in flight (for cache-affinity)."""
+        with self._lock:
+            return {k: set(v.keys()) for k, v in self._pending.items() if v}
+
+    def cache_affinity(self, table: HashTable) -> float:
+        """Affinity that credits in-flight prefetches, not just residency —
+        the request scheduler ranks queued work with this."""
+        return self.store.cache_affinity(table, inflight=self.inflight())
+
+    def submit(
+        self, table: HashTable, protect: bool = True,
+        priority: Optional[int] = None,
+    ) -> Optional[PrefetchTicket]:
+        """Plan slots for `table` now; enqueue its uploads for the transfer
+        thread. `protect=False` submits a fire-and-forget warming prefetch
+        (admission-time): uploads happen and are fenced by later consumers,
+        but nothing is pinned, so a warmed expert may be evicted before use
+        (a performance miss, never a correctness hazard). Warming submits
+        return None without planning anything when the transfer queue is
+        backlogged — warming is opportunistic, it must never add pressure.
+
+        `priority` (default: 0 for protected, 2 for warming) picks the
+        transfer class: 0 = urgent (fence wait imminent), 1 = pre-submitted
+        lookahead (fence comes after overlapped compute), 2 = warming."""
+        assert not self._closed, "pipeline is closed"
+        prio = priority if priority is not None else (0 if protect else 2)
+        if not protect:
+            with self._jobs_cv:
+                if len(self._jobs[2]) >= self.depth:
+                    self.stats.warm_skipped += 1
+                    return None
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+            trans, pending, needed = self.store.plan(
+                table, protect_fn=self.protected_experts
+            )
+            job: Dict[int, List[tuple]] = {}
+            for s, items in pending.items():
+                if not items:
+                    continue
+                rows = []
+                for g, slot, e in items:
+                    ev = threading.Event()
+                    self._pending[(g, s)][e] = ev
+                    rows.append((g, slot, e, ev))
+                job[s] = rows
+            if protect:
+                for l, ids in needed.items():
+                    g, s = self.store.layer_to_gs(l)
+                    self._refs[(g, s)].update(int(e) for e in ids)
+            # the ticket fences on every needed expert still in flight —
+            # whether this submit started the upload or an earlier one did
+            fences = self.events_for(needed)
+            self.stats.submitted += 1
+        ticket = PrefetchTicket(self, seq, trans, needed, fences, protect)
+        if job:
+            # outside the store lock: the put may block at `depth` (consumer
+            # backpressure); a planned job is never dropped — its slots are
+            # already assigned, so the upload must eventually happen
+            ticket._job = job
+            with self._jobs_cv:
+                if protect:
+                    while len(self._jobs[prio]) >= self.depth:
+                        self._jobs_cv.wait()
+                self._jobs[prio].append(job)
+                self._jobs_cv.notify_all()
+        return ticket
+
+    def _steal(self, ticket: PrefetchTicket) -> None:
+        """If the ticket's transfer job is still queued when its fence is
+        reached, pop it and commit inline on the consumer thread — the
+        fence was about to pay for the whole transfer anyway, and running
+        it here skips the thread handoff (a starved transfer thread can
+        never make the async path slower than synchronous uploads). If the
+        transfer thread already owns the job, fall through to the fence."""
+        job = ticket._job
+        if job is None:
+            return
+        ticket._job = None
+        with self._jobs_cv:
+            found = False
+            for q in self._jobs:
+                for k, item in enumerate(q):
+                    if item is job:
+                        del q[k]
+                        found = True
+                        break
+                if found:
+                    break
+            if found:
+                # a producer may be parked in submit() backpressure waiting
+                # for exactly this queue slot — wake it
+                self._jobs_cv.notify_all()
+        if not found:
+            return
+        with self._lock:
+            for s, rows in job.items():
+                self.store.commit_loads(s, [(g, sl, e) for g, sl, e, _ in rows])
+                for g, sl, e, ev in rows:
+                    pend = self._pending[(g, s)]
+                    if pend.get(e) is ev:
+                        del pend[e]
+            self.stats.uploads += sum(len(r) for r in job.values())
+            self.stats.stolen += 1
+        for rows in job.values():
+            for *_, ev in rows:
+                ev.set()
+
+    def _refresh(self, ticket: PrefetchTicket, timeout: Optional[float] = None) -> bool:
+        """Consume-time reconciliation for one ticket (see `wait`).
+
+        Loop until every needed expert is resident (or genuinely
+        unplannable, e.g. pinned-full — where the sync path drops too):
+        re-plan missing experts with priority over later tickets' refs
+        (their refresh will re-fetch in turn), never evicting an expert
+        whose upload is mid-flight; commit re-planned loads synchronously;
+        then clear ready fences and rebuild the translation snapshot from
+        live residency (an expert can have moved slots via evict+reload).
+        The elapsed time is the pipeline's stall — the only upload time
+        the forward path actually pays under async prefetch."""
+        store = self.store
+        t0 = time.perf_counter()
+        self._steal(ticket)
+
+        def _left() -> Optional[float]:
+            if timeout is None:
+                return None
+            return max(0.0, timeout - (time.perf_counter() - t0))
+
+        ok = True
+        for _ in range(64):  # in-flight uploads strictly drain between rounds
+            drain: List[threading.Event] = []
+            with self._lock:
+                progressed_all = True
+                for l, ids in ticket.needed.items():
+                    g, s = store.layer_to_gs(l)
+                    res = store.resident[(g, s)]
+                    missing = [int(e) for e in ids if int(e) not in res]
+                    if not missing:
+                        continue
+                    pend = self._pending[(g, s)]
+                    # protect own needed residents + mid-copy uploads; later
+                    # tickets' prefetched experts are fair eviction game
+                    extra = set(pend.keys()) | {int(e) for e in ids}
+                    loads = store.plan_layer(
+                        l, np.asarray(missing, np.int64), extra_protected=extra
+                    )
+                    if loads:
+                        store.commit_loads(s, loads)
+                    if any(int(e) not in res for e in missing):
+                        progressed_all = False
+                        drain.extend(pend.values())
+                fences = self.events_for(ticket.needed)
+            for _, ev in fences:
+                if not ev.wait(_left()):
+                    ok = False
+                    break
+            if not ok or (progressed_all and not drain):
+                break
+            done = all(ev.wait(_left()) for ev in drain)
+            if not done:
+                ok = False
+                break
+            if not drain:
+                break  # unplannable without pending uploads: sync drops too
+        with self._lock:
+            for l in ticket.needed:
+                ticket.trans[l] = store.trans_row(l)
+        self.stats.stall_s += time.perf_counter() - t0
+        return ok
+
+    def _release(self, ticket: PrefetchTicket) -> None:
+        if not ticket._protect:
+            return
+        with self._lock:
+            for l, ids in ticket.needed.items():
+                g, s = self.store.layer_to_gs(l)
+                refs = self._refs[(g, s)]
+                refs.subtract(int(e) for e in ids)
+                for e in [e for e, c in refs.items() if c <= 0]:
+                    del refs[e]
+
+    # -- transfer side (background thread) ------------------------------
+    def _next_job(self) -> Optional[Dict[int, List[tuple]]]:
+        with self._jobs_cv:
+            while True:
+                q = next((q for q in self._jobs if q), None)
+                if q is not None:
+                    job = q.popleft()
+                    break
+                if self._closed:
+                    return None
+                self._jobs_cv.wait()
+            self._jobs_cv.notify_all()
+            return job
+
+    def _transfer_loop(self) -> None:
+        while True:
+            job = self._next_job()
+            if job is None:
+                return
+            t0 = time.perf_counter()
+            for s, rows in job.items():
+                self._upload(s, rows)
+            self.stats.transfer_s += time.perf_counter() - t0
+
+    def _stage(
+        self,
+        buf: Dict[tuple, np.ndarray],
+        key: tuple,
+        arr: np.ndarray,
+        gs: np.ndarray,
+        es: np.ndarray,
+    ) -> np.ndarray:
+        """Gather rows (g, e) of a host tensor [G, E, ...] straight into
+        this buffer's persistent slab (grown on demand), so H2D always
+        reads from a stable, reusable host region — the staging write."""
+        n = len(gs)
+        tail = arr.shape[2:]
+        slab = buf.get(key)
+        if (
+            slab is None or slab.shape[0] < n
+            or slab.shape[1:] != tail or slab.dtype != arr.dtype
+        ):
+            slab = np.empty((n,) + tail, dtype=arr.dtype)
+            buf[key] = slab
+        view = slab[:n]
+        flat = arr.reshape((-1,) + tail)
+        np.take(flat, gs.astype(np.int64) * arr.shape[1] + es, axis=0, out=view)
+        return view
+
+    def _upload(self, s: int, rows: List[tuple]) -> None:
+        store = self.store
+        i = self._buf_i
+        self._buf_i = (self._buf_i + 1) % self.n_staging
+        # double-buffer fence: the slab is free once the device pulled the
+        # previous transfer staged in it
+        for dev in self._staging_inflight[i]:
+            ready = dev.is_ready() if hasattr(dev, "is_ready") else False
+            if not ready:
+                self.stats.staging_waits += 1
+            jax.block_until_ready(dev)
+        staging = self._staging[i]
+        consumed: List[Array] = []
+
+        gs = np.array([r[0] for r in rows], np.int32)
+        sl = np.array([r[1] for r in rows], np.int32)
+        es = np.array([r[2] for r in rows], np.int32)
+        # stage + H2D outside the lock: host arrays are immutable and the
+        # staging slabs are transfer-thread-private, so only the slot-pool
+        # read-modify-write below needs to serialize with other commits
+        staged = []
+        for t in EXPERT_TENSORS:
+            w_view = self._stage(staging, (s, t), store.host[f"sub{s}"][t], gs, es)
+            dev = _staged_put(w_view)
+            consumed.append(dev)
+            nbytes = w_view.nbytes
+            dscale = None
+            if store.quant == "int8":
+                s_view = self._stage(
+                    staging, (s, t, "scale"), store.host_scale[f"sub{s}"][t], gs, es
+                )
+                dscale = _staged_put(s_view)
+                consumed.append(dscale)
+                nbytes += s_view.nbytes
+            staged.append((t, dev, dscale, nbytes))
+        dgs, dsl = jnp.asarray(gs), jnp.asarray(sl)
+        with self._lock:
+            moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
+            for t, dev, dscale, nbytes in staged:
+                store.stats.bytes_h2d += nbytes
+                if dscale is not None:
+                    moe_p[t] = _slot_write_q_cow(moe_p[t], dgs, dsl, dev, dscale)
+                else:
+                    moe_p[t] = _slot_write_cow(moe_p[t], dgs, dsl, dev)
+            # every tensor of every expert in this batch is committed:
+            # ready fences may fire now (no half-written slot is observable)
+            for g, slot, e, ev in rows:
+                pend = self._pending[(g, s)]
+                if pend.get(e) is ev:
+                    del pend[e]
+            self.stats.uploads += len(rows)
+        self._staging_inflight[i] = consumed
+        for _, _, _, ev in rows:
+            ev.set()
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        """Drain queued uploads and join the transfer thread."""
+        if self._closed:
+            return
+        with self._jobs_cv:
+            self._closed = True
+            self._jobs_cv.notify_all()
+        self._thread.join()
+        self.store._prefetcher = None
+        self._release_switch_interval()
+
+    def __enter__(self) -> "PrefetchPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

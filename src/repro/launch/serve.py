@@ -30,7 +30,8 @@ from repro.core.hash_fn import init_hash_fn
 from repro.models.transformer import init_params, n_moe_layers
 
 
-def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo"):
+def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
+                 prefetch_depth: int = 0, staging_buffers: int = 2):
     if engine == "standard":
         return StandardServer(cfg, params)
     if engine == "ondemand":
@@ -41,7 +42,10 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo"):
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
         cfg.moe.num_experts, d_h=64,
     )
-    return SiDAEngine(cfg, params, hp, slots_per_layer=slots, eviction=eviction)
+    return SiDAEngine(
+        cfg, params, hp, slots_per_layer=slots, eviction=eviction,
+        prefetch_depth=prefetch_depth, staging_buffers=staging_buffers,
+    )
 
 
 def run_request_server(cfg, params, args) -> None:
@@ -59,6 +63,8 @@ def run_request_server(cfg, params, args) -> None:
         max_lanes=args.lanes, max_prefill_batch=args.prefill_batch,
         buckets=tuple(buckets), eviction=args.eviction,
         drop_expired=args.drop_expired,
+        prefetch_depth=args.prefetch_depth,
+        staging_buffers=args.staging_buffers,
     )
     rng = np.random.default_rng(0)
     reqs = poisson_requests(
@@ -68,10 +74,12 @@ def run_request_server(cfg, params, args) -> None:
     )
     srv.run(reqs, realtime=not args.no_realtime)
     print(f"engine=server slots={args.slots} lanes={args.lanes} "
-          f"eviction={args.eviction} rate={args.rate}rps")
+          f"eviction={args.eviction} rate={args.rate}rps "
+          f"prefetch_depth={args.prefetch_depth}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
+    srv.close()
 
 
 def main():
@@ -87,6 +95,10 @@ def main():
     ap.add_argument("--full", action="store_true", help="full-size config")
     ap.add_argument("--eviction", default="fifo",
                     choices=["fifo", "lru", "alpha"])
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="async prefetch lookahead (0 = synchronous uploads)")
+    ap.add_argument("--staging-buffers", type=int, default=2,
+                    help="host staging slabs for the transfer thread")
     # request-server mode
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")
@@ -114,7 +126,8 @@ def main():
         rng.integers(0, cfg.vocab_size, (args.batch, args.seq)).astype(np.int32)
         for _ in range(args.batches)
     ]
-    srv = build_engine(args.engine, cfg, params, args.slots, args.eviction)
+    srv = build_engine(args.engine, cfg, params, args.slots, args.eviction,
+                       args.prefetch_depth, args.staging_buffers)
     metrics = srv.serve(batches)
     print(f"engine={args.engine} slots={args.slots}")
     for k, v in metrics.summary().items():
@@ -125,7 +138,11 @@ def main():
             print(f"  {k:20s} {v:.4f}")
         st = srv.store.stats
         print(f"  loads={st.loads} hits={st.hits} evictions={st.evictions} "
-              f"h2d_mb={st.bytes_h2d/1e6:.2f}")
+              f"h2d_mb={st.bytes_h2d/1e6:.2f} sync_upload_s={st.prepare_time:.4f}")
+        if srv.prefetcher is not None:
+            for k, v in srv.prefetcher.stats.summary().items():
+                print(f"  {k:22s} {v:.4f}")
+        srv.close()
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ class Request:
 
     lane: int = -1                     # decode lane while state == DECODE
     prefill_logits: Optional[np.ndarray] = None  # kept only when asked
+    decode_logits: Optional[List[np.ndarray]] = None  # per-step, when asked
 
     # lifecycle timestamps (server-clock seconds; -1 = not reached)
     t_queued: float = -1.0

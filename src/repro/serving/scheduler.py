@@ -7,7 +7,10 @@ Two scheduling decisions live here, both SLA-aware:
   ordered earliest-deadline-first; within the same urgency band, requests
   whose hash-ahead tables overlap the resident expert cache the most go
   first (the cache-affinity score generalized out of the batch engine's
-  lookahead scheduling onto `ExpertStore.cache_affinity`).
+  lookahead scheduling onto `ExpertStore.cache_affinity`; with the async
+  pipeline the server passes the `PrefetchPipeline` instead, whose
+  affinity also credits uploads still in flight — work the cache already
+  paid for ranks as if it were resident).
 * **Decode lane occupancy** — the `LaneTable` tracks which request holds
   which decode-batch row; requests join a free lane as soon as prefill
   completes and leave the moment they finish, so the running decode batch
@@ -97,8 +100,11 @@ class Scheduler:
         return expired
 
     # ------------------------------------------------------------------
-    def _order(self, reqs: List[Request], now: float, store: Optional[ExpertStore]):
-        """EDF first; inside a slack band, highest cache affinity first."""
+    def _order(self, reqs: List[Request], now: float, store):
+        """EDF first; inside a slack band, highest cache affinity first.
+        `store` is any affinity provider with `cache_affinity(table)` —
+        an ExpertStore (residency only) or a PrefetchPipeline (residency
+        plus in-flight uploads)."""
 
         def key(r: Request):
             band = (
@@ -117,7 +123,7 @@ class Scheduler:
         self,
         now: float,
         max_batch: int,
-        store: Optional[ExpertStore] = None,
+        store: Optional[ExpertStore] = None,  # or PrefetchPipeline (duck-typed)
     ) -> Tuple[List[Request], int]:
         """Compose the next prefill batch: the most urgent request anchors
         it, its length bucket fixes the padded shape, and remaining slots

@@ -21,6 +21,13 @@ moment they finish, so the decode batch re-fills continuously instead of
 draining to its slowest member. The hash function's look-ahead property is
 what makes admission-time expert prediction (and therefore cache-affinity
 scheduling and prefetch) possible before any model compute runs.
+
+With `prefetch_depth > 0` the server attaches an async `PrefetchPipeline`
+to the shared store: the hash-ahead thread becomes the prefetch *producer*
+(each admitted request's predicted experts start uploading immediately as a
+fire-and-forget warming prefetch), prefill and decode ticks go through
+tickets whose ready fences replace inline uploads, and the scheduler's
+cache-affinity score credits uploads still in flight.
 """
 from __future__ import annotations
 
@@ -36,7 +43,7 @@ from repro.configs.base import ModelConfig
 from repro.core.decode_engine import hash_fn_step, hash_state_init
 from repro.core.engine import SiDAEngine
 from repro.core.hash_table import HashTable
-from repro.core.offload import ExpertStore
+from repro.core.offload import ExpertStore, PrefetchPipeline
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import decode_step, init_cache, n_moe_layers
 from repro.serving.request import Request, RequestState
@@ -74,7 +81,10 @@ class RequestServer:
         eviction: str = "lru",
         drop_expired: bool = False,
         keep_prefill_logits: bool = False,
+        keep_decode_logits: bool = False,
         telemetry: Optional[Telemetry] = None,
+        prefetch_depth: Optional[int] = None,
+        staging_buffers: Optional[int] = None,
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
@@ -85,9 +95,15 @@ class RequestServer:
         self.store = ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction
         )
+        self.prefetch: Optional[PrefetchPipeline] = PrefetchPipeline.maybe_create(
+            self.store, cfg, prefetch_depth, staging_buffers
+        )
+        # prefetch_depth=0 keeps the engine from building a second pipeline
+        # off cfg.prefetch when the server decided to run synchronously
         self.engine = SiDAEngine(
             cfg, params, hash_params, slots_per_layer,
             serve_top_k=serve_top_k, ctx=ctx, store=self.store,
+            prefetcher=self.prefetch, prefetch_depth=0,
         )
         self.hash_params = hash_params
         self.embed_table = params["embed"]
@@ -107,6 +123,7 @@ class RequestServer:
         self.max_prefill_batch = max_prefill_batch
         self.drop_expired = drop_expired
         self.keep_prefill_logits = keep_prefill_logits
+        self.keep_decode_logits = keep_decode_logits
 
         self.scheduler = Scheduler(buckets=self.buckets)
         self.lanes = LaneTable(max_lanes)
@@ -118,6 +135,7 @@ class RequestServer:
         self.hstate = hash_state_init(hash_params, max_lanes)
         self.lane_tokens = np.zeros((max_lanes,), np.int32)
         self._active = np.zeros((max_lanes,), bool)
+        self._pending_pred = None  # (ids, alpha, active, ticket) for next tick
         self._step = 0
         self._t0 = time.perf_counter()  # rebased at run(); fallback for direct use
         self.completed: List[Request] = []
@@ -167,7 +185,7 @@ class RequestServer:
             for key in cache:
                 if key.startswith("sub"):
                     merged[key] = _mask_batch(active, new_cache[key], cache[key], 1)
-            return jnp.argmax(logits, -1).astype(jnp.int32), merged
+            return jnp.argmax(logits, -1).astype(jnp.int32), logits, merged
 
         @jax.jit
         def _seed_lanes(cache, hstate, kv, hjoin, lanes, pos):
@@ -199,8 +217,16 @@ class RequestServer:
     # ------------------------------------------------------------------
     def build_request_table(self, req: Request) -> None:
         """Hash-ahead: predict the request's per-token expert activations
-        before any model compute (runs on the hash thread)."""
+        before any model compute (runs on the hash thread). With the async
+        pipeline attached, the hash thread doubles as the prefetch producer:
+        the predicted experts start uploading immediately as a
+        fire-and-forget warming prefetch (`protect=False` — a warmed expert
+        may still be evicted before the request is scheduled; later tickets
+        fence on any of its uploads still in flight)."""
         req.table = self.engine.build_table(req.rid, req.prompt[None, :])
+        if self.prefetch is not None:
+            self.prefetch.submit(req.table, protect=False)
+            self.telemetry.counter("prefetch_warm_submits").inc()
 
     def admit(self, req: Request, now: float) -> None:
         req.t_queued = now
@@ -223,7 +249,10 @@ class RequestServer:
             w[:, i, :P] = r.table.weights[:, 0]
         return HashTable(self._step, ids, w)
 
-    def _prefill_and_join(self, batch: List[Request], bucket: int, now: float):
+    def _prefill_and_join(
+        self, batch: List[Request], bucket: int, now: float,
+        table: Optional[HashTable] = None, ticket=None,
+    ):
         n = len(batch)
         tokens = np.zeros((n, bucket), np.int32)
         lengths = np.zeros((n,), np.int32)
@@ -231,13 +260,17 @@ class RequestServer:
             tokens[i, : r.prompt_len] = r.prompt
             lengths[i] = r.prompt_len
             r.t_prefill = now
-        table = self._combined_table(batch, bucket)
+        if table is None:
+            table = self._combined_table(batch, bucket)
 
-        logits, kv = self.engine.prefill(tokens, table)
+        # dispatch the hash-prefill scan first: it is independent of the
+        # routing translation, so its device time overlaps the prefill
+        # ticket's remaining upload fence (async) or the inline prepare
         hjoin = self._hash_prefill(
             self.hash_params, self.embed_table, jnp.asarray(tokens),
             jnp.asarray(lengths),
         )
+        logits, kv = self.engine.prefill(tokens, table, ticket=ticket)
         logits = np.asarray(logits)
 
         lanes = np.zeros((n,), np.int32)
@@ -272,28 +305,62 @@ class RequestServer:
     # ------------------------------------------------------------------
     # decode: one continuous-batch step
     # ------------------------------------------------------------------
-    def _decode_tick(self, now: float) -> None:
-        active = self._active.copy()
+    def _predict_tick(self, mask: np.ndarray):
+        """Advance the hash predictor for `mask` lanes; returns np arrays."""
         ids, alpha, self.hstate = self._predict_masked(
             self.hash_params, self.embed_table,
-            jnp.asarray(self.lane_tokens), self.hstate, jnp.asarray(active),
+            jnp.asarray(self.lane_tokens), self.hstate, jnp.asarray(mask),
         )
-        ids_np, alpha_np = np.asarray(ids), np.asarray(alpha)
+        return np.asarray(ids), np.asarray(alpha)
+
+    def _decode_tick(self, now: float) -> None:
+        active = self._active.copy()
+        ticket = None
+        if self._pending_pred is not None:
+            # predictions (and their uploads) were pre-submitted at the end
+            # of the previous tick — the transfer overlapped whatever ran
+            # in between (prefill forwards, scheduling, arrival waits)
+            ids_np, alpha_np, pred_active, ticket = self._pending_pred
+            self._pending_pred = None
+            joined = active & ~pred_active
+            if joined.any():
+                # lanes that joined since the pre-predict: predict just them
+                # and fold into the tick (their uploads go out urgently now)
+                ids2, alpha2 = self._predict_tick(joined)
+                ids_np = np.where(joined[None, :, None], ids2, ids_np)
+                alpha_np = np.where(joined[None, :, None], alpha2, alpha_np)
+                ticket.release()
+                ticket = self.prefetch.submit(HashTable(
+                    self._step,
+                    ids_np[:, active, None, :], alpha_np[:, active, None, :],
+                ))
+        else:
+            ids_np, alpha_np = self._predict_tick(active)
 
         # prefetch only what active lanes predict; translate for all lanes
         prep = HashTable(
             self._step, ids_np[:, active, None, :], alpha_np[:, active, None, :]
         )
-        trans = self.store.prepare(prep)
+        if self.prefetch is not None:
+            if ticket is None:
+                ticket = self.prefetch.submit(prep)
+            with self.telemetry.timer("prefetch_fence_s"):
+                ticket.wait()
+            trans = ticket.trans
+        else:
+            trans = self.store.prepare(prep)
         full = HashTable(self._step, ids_np[:, :, None, :], alpha_np[:, :, None, :])
         slot_ids, w = self.store.translate(full, trans)
 
-        next_tok, self.cache = self._decode_masked(
+        next_tok, logits, self.cache = self._decode_masked(
             self.store.serve_params, self.cache, jnp.asarray(self.lane_tokens),
             jnp.asarray(slot_ids[:, :, 0, :]), jnp.asarray(w[:, :, 0, :]),
             jnp.asarray(active),
         )
-        next_tok = np.asarray(next_tok)
+        next_tok = np.asarray(next_tok)  # forces the step; slots consumed
+        if ticket is not None:
+            ticket.release()
+        logits_np = np.asarray(logits) if self.keep_decode_logits else None
         self._step += 1
         self.telemetry.counter("decode_steps").inc()
 
@@ -302,10 +369,25 @@ class RequestServer:
                 continue  # joined after this tick's snapshot
             req = self.lanes.requests[lane]
             req.emit(int(next_tok[lane]))
+            if logits_np is not None:
+                if req.decode_logits is None:
+                    req.decode_logits = []
+                req.decode_logits.append(logits_np[lane].copy())
             self.lane_tokens[lane] = next_tok[lane]
             self.telemetry.counter("tokens_generated").inc()
             if req.finished():
                 self._finish(lane)
+
+        # pipeline the next tick: predict it now (tokens are final) and
+        # submit its uploads so they transfer while prefill forwards and
+        # scheduling run between ticks — the next fence finds them landed
+        if self.prefetch is not None and self._active.any():
+            nxt = self._active.copy()
+            n_ids, n_alpha = self._predict_tick(nxt)
+            tkt = self.prefetch.submit(HashTable(
+                self._step, n_ids[:, nxt, None, :], n_alpha[:, nxt, None, :]
+            ))
+            self._pending_pred = (n_ids, n_alpha, nxt, tkt)
 
     def _finish(self, lane: int) -> None:
         req = self.lanes.release(lane)
@@ -356,19 +438,32 @@ class RequestServer:
                     free = self.lanes.free_count()
                     batch, bucket = ([], 0)
                     if free:
+                        # affinity provider: the pipeline (residency + in-
+                        # flight uploads) when async, the bare store when not
                         batch, bucket = self.scheduler.next_prefill_batch(
-                            now, min(free, self.max_prefill_batch), self.store
+                            now, min(free, self.max_prefill_batch),
+                            self.prefetch or self.store,
                         )
                     depth = self.scheduler.pending()
                 self.telemetry.gauge("queue_depth").set(depth)
                 self.telemetry.gauge("active_lanes").set(len(self.lanes.active()))
 
                 progressed = False
+                pf_table, pf_ticket = None, None
                 if batch:
-                    self._prefill_and_join(batch, bucket, now)
-                    progressed = True
+                    pf_table = self._combined_table(batch, bucket)
+                    if self.prefetch is not None:
+                        # submit prefill uploads before the decode tick so
+                        # the tick's compute covers the transfer; priority 1
+                        # keeps them behind the tick's own urgent uploads
+                        pf_ticket = self.prefetch.submit(pf_table, priority=1)
                 if self._active.any():
                     self._decode_tick(now)
+                    progressed = True
+                if batch:
+                    self._prefill_and_join(
+                        batch, bucket, now, table=pf_table, ticket=pf_ticket
+                    )
                     progressed = True
                 if not progressed:
                     # hash_done is set only after the last admit, so a
@@ -386,7 +481,17 @@ class RequestServer:
         self.telemetry.counter("expert_loads").inc(st.loads)
         self.telemetry.counter("expert_hits").inc(st.hits)
         self.telemetry.counter("expert_evictions").inc(st.evictions)
+        if self.prefetch is not None:
+            for k, v in self.prefetch.stats.summary().items():
+                c = self.telemetry.counter(k)
+                c.value = 0  # stats are cumulative; snapshot, don't double-count
+                c.inc(v)
         return self.telemetry
+
+    def close(self) -> None:
+        """Join the async prefetch transfer thread (no-op when sync)."""
+        if self.prefetch is not None:
+            self.prefetch.close()
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -399,6 +504,14 @@ class RequestServer:
             "requests_completed"
         ).value  # first tokens are emitted at prefill
         wall = t.wall_s()
+        # upload-stall: sync path pays for every upload inline
+        # (stats.prepare_time); async pays only for ready fences that had
+        # not landed yet (pipeline stall_s) plus any residual sync preps
+        stall = st.prepare_time
+        overlap = 0.0
+        if self.prefetch is not None:
+            stall += self.prefetch.stats.stall_s
+            overlap = self.prefetch.stats.overlap_s
         return {
             "completed": t.counter("requests_completed").value,
             "rejected": t.counter("requests_rejected").value,
@@ -412,4 +525,7 @@ class RequestServer:
             "cache_hit_rate": st.hits / refs if refs else 0.0,
             "h2d_mb": st.bytes_h2d / 1e6,
             "max_queue_depth": t.gauge("queue_depth").max,
+            "upload_stall_s": stall,
+            "upload_overlap_s": overlap,
+            "async_prefetch": 1.0 if self.prefetch is not None else 0.0,
         }

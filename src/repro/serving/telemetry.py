@@ -7,6 +7,7 @@ p50/p95/p99 latency, TTFT, queue depth, H2D bytes, cache hit rate, …
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import time
 from typing import Dict, List, Optional
@@ -89,6 +90,19 @@ class Telemetry:
 
     def wall_s(self) -> float:
         return time.perf_counter() - self._t0
+
+    @contextlib.contextmanager
+    def timer(self, name: str):
+        """Time a block into histogram `name` and accumulate the total into
+        counter `name + "_total"` — the serving loop wraps prefetch-fence
+        waits with this so stall time shows up in every snapshot."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self.histogram(name).observe(dt)
+            self.counter(name + "_total").inc(dt)
 
     def snapshot(self) -> dict:
         return {

@@ -97,6 +97,98 @@ def test_scan_vs_assoc(name):
     assert err < 1e-4, err
 
 
+def test_server_lanes_match_one_shot_prefill_at_staggered_positions():
+    """Differential: decode via continuous-batch lanes == one-shot prefill
+    of the same token stream (tolerance-bounded logits), with lanes at
+    DIFFERENT sequence positions — prompts of different lengths join and
+    leave mid-flight, so the masked decode batch mixes positions."""
+    import dataclasses as dc
+
+    from repro.core.decode_engine import hash_fn_step
+    from repro.core.hash_fn import init_hash_fn
+    from repro.core.offload import ExpertStore
+    from repro.models.transformer import n_moe_layers
+    from repro.serving import Request, RequestServer
+
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dc.replace(
+        cfg, n_layers=2,
+        moe=dc.replace(cfg.moe, capacity_factor=100.0),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    E, L = cfg.moe.num_experts, n_moe_layers(cfg)
+
+    rng = np.random.default_rng(5)
+    plens = [5, 9, 13]          # different buckets => staggered joins
+    gens = [7, 5, 4]
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, (p,)).astype(np.int32),
+            max_new_tokens=g,
+        )
+        for i, (p, g) in enumerate(zip(plens, gens))
+    ]
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=E, max_lanes=3,
+        max_prefill_batch=2, buckets=(8, 16), cache_len=32,
+        keep_decode_logits=True,
+    )
+    srv.run(reqs, realtime=False)
+    assert len(srv.completed) == 3
+    # the point of the test: decode actually interleaved lanes that sit at
+    # different sequence positions (different prompt lengths + join times)
+    assert srv.telemetry.gauge("active_lanes").max > 1
+
+    k = srv.k
+    for req in srv.completed:
+        P, gen = req.prompt_len, req.generated
+        seq = np.concatenate([req.prompt, np.asarray(gen[:-1], np.int32)])
+        # replay the routing the server used: bidirectional table over the
+        # prompt + incremental causal predictions per generated position
+        table = srv.engine.build_table(req.rid, req.prompt[None, :])
+        ids = np.zeros((L, 1, len(seq), k), np.int32)
+        w = np.zeros((L, 1, len(seq), k), np.float32)
+        ids[:, :, :P] = table.expert_ids
+        w[:, :, :P] = table.weights
+        state = srv._hash_prefill(
+            hp, params["embed"], jnp.asarray(req.prompt[None, :]),
+            jnp.asarray(np.array([P], np.int32)),
+        )
+        for j, tok in enumerate(gen[:-1]):
+            emb = jnp.take(params["embed"], jnp.asarray([tok]), axis=0)
+            logits_h, state = hash_fn_step(hp, emb, state, E)
+            vals, top = jax.lax.top_k(logits_h, k)
+            ids[:, 0, P + j] = np.asarray(top)[0]
+            w[:, 0, P + j] = np.asarray(jax.nn.softmax(vals, axis=-1))[0]
+
+        from repro.core.hash_table import HashTable
+
+        store = ExpertStore(cfg, params, slots_per_layer=E)
+        full = HashTable(0, ids, w)
+        slot_ids, ww = store.translate(full, store.prepare(full))
+        out = forward(
+            store.serve_params, cfg, CTX, jnp.asarray(seq[None, :]),
+            routing_override=(jnp.asarray(slot_ids), jnp.asarray(ww)),
+        )["logits"]
+        ref = np.asarray(out, np.float32)[0]
+
+        # tokens must match exactly; decode-lane logits within tolerance
+        pred = np.argmax(ref[P - 1:], axis=-1)
+        np.testing.assert_array_equal(pred, np.asarray(gen))
+        assert req.decode_logits is not None
+        assert len(req.decode_logits) == len(gen) - 1
+        for j, lane_logits in enumerate(req.decode_logits):
+            one_shot = ref[P + j]
+            err = np.abs(lane_logits.astype(np.float32) - one_shot).max()
+            denom = max(np.abs(one_shot).max(), 1e-9)
+            assert err / denom < 5e-3, (req.rid, j, err / denom)
+
+
 def test_encdec_decode_with_cross_cache():
     """seamless: decoder decode with precomputed cross-attention caches."""
     from repro.models.attention import _project_kv

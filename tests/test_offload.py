@@ -215,3 +215,75 @@ def test_cache_affinity_score():
     assert store.cache_affinity(_pair(L, 0, 1)) == 1.0
     assert store.cache_affinity(_pair(L, 2, 3)) == 0.0
     assert abs(store.cache_affinity(_pair(L, 0, 2)) - 0.5) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# miss renormalization, part 2 (regression for the PR-1 fix): the forward
+# output must not shrink when a predicted expert misses residency
+# ---------------------------------------------------------------------------
+
+
+def test_forced_miss_weights_sum_to_one_and_output_does_not_shrink():
+    """With a forced residency miss, surviving per-token weights sum back
+    to the predicted α mass, and the MoE output is EXACTLY what a
+    weight-1.0 route to the surviving expert produces — no silent shrink
+    toward zero (pre-fix, the survivor kept only its own 0.7)."""
+    from repro.models.attention import ShardingCtx
+    from repro.models.transformer import forward
+
+    cfg, store = _store(2)
+    L, E = store.L, store.E
+    warm = _pair(L, 0, 1)
+    trans = store.prepare(warm)  # residents: {0, 1}
+
+    # every token routes to resident 0 (α=.7) and non-resident 3 (α=.3)
+    S = 6
+    ids = np.zeros((L, 1, S, 2), np.int32)
+    ids[..., 1] = 3
+    w = np.zeros((L, 1, S, 2), np.float32)
+    w[..., 0], w[..., 1] = 0.7, 0.3
+    miss_table = HashTable(1, ids, w)
+    slot_ids, got_w = store.translate(miss_table, trans)
+
+    # weights: survivor absorbs the dropped α mass, per token
+    np.testing.assert_allclose(got_w.sum(axis=-1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(got_w[..., 1], 0.0, atol=1e-6)
+
+    # forward parity: the miss-renormalized override equals an explicit
+    # weight-1.0 route to the surviving expert — identical logits, so the
+    # output norm provably did not shrink
+    ctx = ShardingCtx()
+    toks = np.arange(S, dtype=np.int32)[None, :] % cfg.vocab_size
+    out_miss = forward(
+        store.serve_params, cfg, ctx, jnp.asarray(toks),
+        routing_override=(jnp.asarray(slot_ids), jnp.asarray(got_w)),
+    )["logits"]
+    ref_ids = np.zeros((L, 1, S, 2), np.int32)
+    ref_ids[..., 1] = 3
+    ref_w = np.zeros((L, 1, S, 2), np.float32)
+    ref_w[..., 0] = 1.0
+    ref_slots, ref_ww = store.translate(HashTable(2, ref_ids, ref_w), trans)
+    out_ref = forward(
+        store.serve_params, cfg, ctx, jnp.asarray(toks),
+        routing_override=(jnp.asarray(ref_slots), jnp.asarray(ref_ww)),
+    )["logits"]
+    np.testing.assert_allclose(
+        np.asarray(out_miss, np.float32), np.asarray(out_ref, np.float32),
+        atol=1e-5,
+    )
+    # and the un-renormalized weights (the pre-fix behavior) measurably
+    # shrink the output — the regression this test pins down
+    shrunk_w = got_w.copy()
+    shrunk_w[..., 0] = 0.7
+    out_shrunk = forward(
+        store.serve_params, cfg, ctx, jnp.asarray(toks),
+        routing_override=(jnp.asarray(slot_ids), jnp.asarray(shrunk_w)),
+    )["logits"]
+    norm_ref = float(jnp.linalg.norm(out_ref.astype(jnp.float32)))
+    norm_shrunk = float(jnp.linalg.norm(out_shrunk.astype(jnp.float32)))
+    assert norm_shrunk != norm_ref
+
+
+# eviction-policy property tests (hypothesis) live in
+# tests/test_offload_properties.py so this module stays collectable when
+# hypothesis is absent

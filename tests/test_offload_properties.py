@@ -1,0 +1,165 @@
+"""Eviction-policy invariants (hypothesis property tests).
+
+Under arbitrary admit/touch/evict sequences: a pinned expert is never the
+victim, the resident set never exceeds capacity, FIFO/LRU victims match
+executable reference models, and α-mass eviction always picks a
+minimal-score candidate. A final integration property drives
+ExpertStore.plan_layer directly.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_params
+from repro.core.offload import EVICTION_POLICIES, ExpertStore
+
+N_EXPERTS = 8
+
+
+class PolicyHarness:
+    """Drives one EvictionPolicy exactly like ExpertStore.plan_layer:
+    resident hit -> touch; miss with space -> admit; miss when full ->
+    pick_victim(protected) then admit, or drop when every resident is
+    protected."""
+
+    def __init__(self, name, capacity, pinned):
+        self.policy = EVICTION_POLICIES[name]()
+        self.capacity = capacity
+        self.pinned = frozenset(pinned)
+        self.resident = set()
+        self.victims = []
+
+    def access(self, e, w=0.0):
+        if e in self.resident:
+            self.policy.touch(e, w)
+            return None
+        protected = {e} | set(self.pinned)
+        if len(self.resident) < self.capacity:
+            self.resident.add(e)
+            self.policy.admit(e, w)
+            return None
+        victim = self.policy.pick_victim(protected)
+        if victim is None:
+            return None  # dropped: everything resident is protected
+        assert victim in self.resident, "victim must be resident"
+        assert victim not in self.pinned, "pinned expert evicted"
+        self.resident.discard(victim)
+        self.victims.append(victim)
+        self.resident.add(e)
+        self.policy.admit(e, w)
+        return victim
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.integers(0, N_EXPERTS - 1),
+        st.floats(0.0, 1.0, allow_nan=False, width=32),
+    ),
+    min_size=1, max_size=60,
+)
+pinned_strategy = st.sets(st.integers(0, N_EXPERTS - 1), max_size=2)
+capacity_strategy = st.integers(1, 4)
+
+
+@settings(max_examples=80, deadline=None)
+@given(name=st.sampled_from(sorted(EVICTION_POLICIES)),
+       ops=ops_strategy, capacity=capacity_strategy, pinned=pinned_strategy)
+def test_policy_invariants_under_arbitrary_sequences(name, ops, capacity, pinned):
+    """For every policy: resident-set size never exceeds capacity and a
+    pinned expert is never the victim, under arbitrary access sequences."""
+    h = PolicyHarness(name, capacity, pinned)
+    for e, w in ops:
+        h.access(e, w)
+        assert len(h.resident) <= capacity
+    assert not set(h.victims) & h.pinned
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=ops_strategy, capacity=capacity_strategy, pinned=pinned_strategy)
+def test_fifo_victims_match_reference(ops, capacity, pinned):
+    """FIFO victim = the earliest-admitted non-pinned resident (pinned
+    entries are recycled without disturbing the relative order of the
+    rest)."""
+    h = PolicyHarness("fifo", capacity, pinned)
+    order = []  # admission order of residents
+    for e, w in ops:
+        if e in h.resident:
+            h.access(e, w)
+            continue
+        expect = None
+        if len(h.resident) >= capacity:
+            expect = next((x for x in order if x not in pinned), None)
+        victim = h.access(e, w)
+        assert victim == expect
+        if expect is not None:
+            order.remove(expect)
+        if e in h.resident and e not in order:
+            order.append(e)
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=ops_strategy, capacity=capacity_strategy, pinned=pinned_strategy)
+def test_lru_victims_match_reference(ops, capacity, pinned):
+    """LRU victim = the least-recently admitted-or-touched non-pinned
+    resident."""
+    h = PolicyHarness("lru", capacity, pinned)
+    recency = []  # least-recent first
+    for e, w in ops:
+        if e in h.resident:
+            h.access(e, w)
+            recency.remove(e)
+            recency.append(e)
+            continue
+        expect = None
+        if len(h.resident) >= capacity:
+            expect = next((x for x in recency if x not in pinned), None)
+        victim = h.access(e, w)
+        assert victim == expect
+        if expect is not None:
+            recency.remove(expect)
+        if e in h.resident and e not in recency:
+            recency.append(e)
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=ops_strategy, pinned=pinned_strategy)
+def test_alpha_mass_victim_is_minimal_scored_resident(ops, pinned):
+    """α-mass eviction always picks a non-protected resident whose decayed
+    score is minimal among the candidates at eviction time."""
+    capacity = 2
+    h = PolicyHarness("alpha", capacity, pinned)
+    for e, w in ops:
+        was_resident = e in h.resident
+        scores = dict(h.policy.score)
+        victim = h.access(e, w)
+        if victim is not None:
+            assert not was_resident
+            candidates = {
+                x: s for x, s in scores.items()
+                if x not in pinned and x != e and x in (h.resident | {victim})
+            }
+            assert scores[victim] == min(candidates.values())
+
+
+@settings(max_examples=25, deadline=None)
+@given(seqs=st.lists(
+    st.lists(st.integers(0, 3), min_size=1, max_size=4),
+    min_size=1, max_size=6,
+))
+def test_store_plan_layer_invariants(seqs):
+    """Integration property: driving ExpertStore.plan_layer with arbitrary
+    needed-sets keeps (a) resident count <= slots, (b) slot assignments
+    unique, (c) every currently-needed expert resident after planning."""
+    cfg, params = reduced_params("switch-base-8")
+    store = ExpertStore(cfg, params, slots_per_layer=2, eviction="lru")
+    g, s = store.layer_to_gs(0)
+    for needed in seqs:
+        uniq = np.unique(np.asarray(needed, np.int64))[: store.S]
+        store.plan_layer(0, uniq)
+        res = store.resident[(g, s)]
+        assert len(res) <= store.S
+        slots = list(res.values())
+        assert len(slots) == len(set(slots)), "slot double-assigned"
+        assert all(int(e) in res for e in uniq)

@@ -1,0 +1,410 @@
+"""Async prefetch pipeline: correctness under concurrency.
+
+Covers the PrefetchPipeline protocol end to end — ready fences block only
+on the experts a step needs, no consumer ever observes a half-written
+slot, shutdown joins cleanly, eviction protection for outstanding
+tickets, staging-buffer reuse, warm-submit backpressure, work stealing,
+and sync-vs-async output equality for both batch serving and the request
+server under tight slot budgets.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.offload as offload
+from conftest import reduced_params
+from repro.core.engine import SiDAEngine
+from repro.core.hash_fn import init_hash_fn
+from repro.core.hash_table import HashTable
+from repro.core.offload import EXPERT_TENSORS, ExpertStore, PrefetchPipeline
+from repro.models.transformer import n_moe_layers
+
+
+def _store(slots, **kw):
+    cfg, params = reduced_params("switch-base-8")
+    return cfg, ExpertStore(cfg, params, slots_per_layer=slots, **kw)
+
+
+def _table(L, experts, idx=0):
+    """Table routing every token of one sequence to `experts` (one per
+    position) at every MoE layer."""
+    n = len(experts)
+    ids = np.zeros((L, 1, n, 1), np.int32)
+    for j, e in enumerate(experts):
+        ids[:, 0, j, 0] = e
+    return HashTable(idx, ids, np.ones((L, 1, n, 1), np.float32))
+
+
+def _assert_resident_matches_host(store):
+    for l in range(store.L):
+        g, s = store.layer_to_gs(l)
+        moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
+        for e, slot in store.resident[(g, s)].items():
+            for t in EXPERT_TENSORS:
+                np.testing.assert_array_equal(
+                    np.asarray(moe_p[t][g, slot]),
+                    store.host[f"sub{s}"][t][g, e],
+                    err_msg=f"layer {l} expert {e} tensor {t}",
+                )
+
+
+# ---------------------------------------------------------------------------
+# basic protocol
+# ---------------------------------------------------------------------------
+
+
+def test_submit_wait_release_roundtrip():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=2, staging_buffers=2)
+    rng = np.random.default_rng(0)
+    try:
+        for it in range(8):
+            experts = rng.integers(0, store.E, size=2)
+            t = _table(store.L, experts, it)
+            tk = pipe.submit(t)
+            assert tk.wait(timeout=20), "fence timed out"
+            slot_ids, w = store.translate(t, tk.trans)
+            assert (w > 0).all()  # every needed expert resident
+            _assert_resident_matches_host(store)
+            tk.release()
+    finally:
+        pipe.close()
+    assert pipe.stats.uploads > 0
+    assert pipe.stats.submitted == 8
+
+
+def test_async_matches_sync_batch_serving():
+    """The flagship differential: SiDAEngine.serve with the async pipeline
+    produces the same logits as synchronous uploads, under eviction."""
+    cfg, params = reduced_params("switch-base-8")
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+               for _ in range(4)]
+    ea = SiDAEngine(cfg, params, hp, slots_per_layer=2, prefetch_depth=2)
+    ea.serve(batches, threaded=True, lookahead=2)
+    got = [np.asarray(x) for x in ea.results]
+    ea.close()
+    es = SiDAEngine(cfg, params, hp, slots_per_layer=2)
+    es.serve(batches, threaded=True, lookahead=2)
+    ref = [np.asarray(x) for x in es.results]
+    for i, (a, b) in enumerate(zip(got, ref)):
+        err = np.abs(a - b).max() / max(np.abs(b).max(), 1e-9)
+        assert err < 1e-4, (i, err)
+
+
+# ---------------------------------------------------------------------------
+# concurrency: slow transfers, partial fences, half-written slots
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def slow_link(monkeypatch):
+    """Model a saturated H2D link: every staged put sleeps first."""
+
+    def patch(delay):
+        real = offload._staged_put
+
+        def slow(x):
+            time.sleep(delay)
+            return real(x)
+
+        monkeypatch.setattr(offload, "_staged_put", slow)
+
+    return patch
+
+
+def test_fence_blocks_only_on_needed_experts(slow_link):
+    slow_link(0.15)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=2)
+    try:
+        warm = pipe.submit(_table(store.L, [0, 1]))
+        warm.wait(timeout=60)
+        warm.release()
+        tk = pipe.submit(_table(store.L, [2]))  # slow upload in flight
+        t0 = time.perf_counter()
+        tk.wait_experts(0, [0, 1])  # resident, no pending upload
+        fast = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tk.wait_experts(0, [2])  # must wait for the slow transfer
+        slow = time.perf_counter() - t0
+        assert fast < 0.1, f"fence on resident experts blocked {fast:.3f}s"
+        assert slow >= 0.05 or pipe.stats.uploads >= 3, (
+            "fence on the in-flight expert should block until its upload"
+        )
+        tk.wait(timeout=60)
+        tk.release()
+    finally:
+        pipe.close()
+
+
+def test_no_half_written_slot_is_observable(slow_link):
+    """The ready fence fires only after ALL expert tensors are committed:
+    with a slow per-tensor link, waiting the fences and then reading every
+    needed expert's three tensors must always match the host copy."""
+    slow_link(0.02)
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=2)
+    rng = np.random.default_rng(1)
+    try:
+        for it in range(5):
+            t = _table(store.L, rng.integers(0, store.E, size=2), it)
+            tk = pipe.submit(t)
+            # fence-only wait (no work stealing): exercises the async commit
+            for l, ids in tk.needed.items():
+                tk.wait_experts(l, ids)
+            _assert_resident_matches_host(store)
+            tk.release()
+    finally:
+        pipe.close()
+
+
+def test_shutdown_drains_and_joins(slow_link):
+    slow_link(0.05)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=4)
+    tk = pipe.submit(_table(store.L, [0, 1, 2]))
+    pipe.close()  # must drain the queued upload, then join
+    assert not pipe._thread.is_alive()
+    assert tk.wait(timeout=0.1), "all fences must be set after close()"
+    _assert_resident_matches_host(store)
+    assert store._prefetcher is None  # detached: store reusable
+
+
+def test_close_is_idempotent():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=1)
+    pipe.close()
+    pipe.close()
+    assert not pipe._thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# eviction protection + consume-time refresh
+# ---------------------------------------------------------------------------
+
+
+def test_outstanding_ticket_protects_experts_from_planning():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=2)
+    try:
+        t1 = pipe.submit(_table(store.L, [0, 1]))
+        t1.wait(timeout=20)
+        # t1 unreleased: its experts cannot be planned out by a new submit
+        t2 = pipe.submit(_table(store.L, [2, 3]))
+        assert (t2.trans[0][[2, 3]] < 0).all(), (
+            "t2's loads must be dropped at plan time while t1 is live"
+        )
+        res = store.resident[(0, store.moe_subs[0])]
+        assert 0 in res and 1 in res
+        # release t1: t2's consume-time refresh now re-plans and loads
+        t1.release()
+        t2.wait(timeout=20)
+        assert t2.trans[0][2] >= 0 and t2.trans[0][3] >= 0
+        _assert_resident_matches_host(store)
+        t2.release()
+    finally:
+        pipe.close()
+
+
+def test_refresh_reloads_expert_evicted_after_planning():
+    """An expert evicted between a ticket's plan and its consumption is
+    re-uploaded at wait() — the translation snapshot self-heals."""
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=4)
+    try:
+        t1 = pipe.submit(_table(store.L, [0, 1]))
+        t1.wait(timeout=20)
+        t1.release()
+        t2 = pipe.submit(_table(store.L, [0]))
+        t2.wait(timeout=20)
+        # consume-time priority: a later consumer may displace t2's expert
+        t3 = pipe.submit(_table(store.L, [2, 3]))
+        t2.release()
+        t3.wait(timeout=20)
+        t3.release()
+        # t2's expert 0 was evicted by t3's refresh; a new consumer of 0
+        # reloads it with a fresh slot assignment
+        t4 = pipe.submit(_table(store.L, [0]))
+        t4.wait(timeout=20)
+        assert t4.trans[0][0] >= 0
+        _assert_resident_matches_host(store)
+        t4.release()
+    finally:
+        pipe.close()
+
+
+def test_pinned_experts_survive_async_planning():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=2)
+    try:
+        t1 = pipe.submit(_table(store.L, [0, 1]))
+        t1.wait(timeout=20)
+        t1.release()
+        for l in range(store.L):
+            store.pin_experts(l, [0, 1])
+        t2 = pipe.submit(_table(store.L, [2, 3]))
+        t2.wait(timeout=20)
+        res = store.resident[(0, store.moe_subs[0])]
+        assert 0 in res and 1 in res, "pinned experts were evicted"
+        assert (t2.trans[0][[2, 3]] < 0).all()
+        t2.release()
+    finally:
+        pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# staging buffers, warm submits, work stealing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_staging", [1, 2, 3])
+def test_staging_buffer_counts(n_staging):
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=2, staging_buffers=n_staging)
+    rng = np.random.default_rng(2)
+    try:
+        for it in range(6):
+            t = _table(store.L, rng.integers(0, store.E, size=2), it)
+            tk = pipe.submit(t)
+            tk.wait(timeout=20)
+            _assert_resident_matches_host(store)
+            tk.release()
+    finally:
+        pipe.close()
+
+
+def test_warm_submit_is_fire_and_forget(slow_link):
+    slow_link(0.1)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=1)
+    try:
+        tickets = [pipe.submit(_table(store.L, [i % 4]), protect=False)
+                   for i in range(6)]
+        # backpressure: with depth=1 and a slow link, some warming submits
+        # must be skipped instead of queueing behind the backlog
+        assert any(t is None for t in tickets) or pipe.stats.warm_skipped > 0
+        # warm tickets hold no protection: a consumer can take every slot
+        tk = pipe.submit(_table(store.L, [0, 1, 2, 3]))
+        tk.wait(timeout=60)
+        assert (tk.trans[0][[0, 1, 2, 3]] >= 0).all()
+        _assert_resident_matches_host(store)
+        tk.release()
+    finally:
+        pipe.close()
+
+
+def test_fence_steals_queued_job_from_starved_thread(slow_link):
+    """If the transfer thread has not started a ticket's job by fence
+    time, the consumer commits it inline — async is never slower than the
+    synchronous path because of a starved background thread."""
+    slow_link(0.3)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=4)
+    try:
+        # occupy the transfer thread with a slow job
+        t1 = pipe.submit(_table(store.L, [0]))
+        time.sleep(0.05)  # let the thread take t1's job
+        t2 = pipe.submit(_table(store.L, [1]))  # sits queued behind t1
+        t2.wait(timeout=60)
+        assert pipe.stats.stolen >= 1, "queued job should have been stolen"
+        t2.release()
+        t1.wait(timeout=60)  # t1's slow upload is still the thread's to finish
+        t1.release()
+        _assert_resident_matches_host(store)
+    finally:
+        pipe.close()
+
+
+def test_steal_wakes_blocked_producer(slow_link):
+    """Regression: stealing a queued job frees a queue slot — a producer
+    parked in submit() backpressure (depth=1) must be woken, or the
+    producer/consumer/transfer trio deadlocks."""
+    import threading
+
+    slow_link(0.2)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=1)
+    try:
+        t1 = pipe.submit(_table(store.L, [0]))
+        time.sleep(0.05)  # transfer thread takes t1's job
+        t2 = pipe.submit(_table(store.L, [1]))  # fills the depth-1 queue
+        produced = []
+
+        def producer():
+            produced.append(pipe.submit(_table(store.L, [2])))  # blocks
+
+        th = threading.Thread(target=producer)
+        th.start()
+        time.sleep(0.05)  # let the producer park in backpressure
+        t2.wait(timeout=60)  # steals t2's queued job -> must notify
+        th.join(timeout=10)
+        assert not th.is_alive(), "producer never woke after steal"
+        t2.release()
+        t1.wait(timeout=60)
+        t1.release()
+        t3 = produced[0]
+        t3.wait(timeout=60)
+        t3.release()
+        _assert_resident_matches_host(store)
+    finally:
+        pipe.close()
+
+
+def test_switch_interval_restored_after_close():
+    import sys
+
+    before = sys.getswitchinterval()
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=1)
+    assert sys.getswitchinterval() <= PrefetchPipeline.SWITCH_INTERVAL_S
+    pipe.close()
+    assert sys.getswitchinterval() == before
+
+
+def test_int8_quantized_async_uploads():
+    cfg, store = _store(2, host_quant="int8")
+    pipe = PrefetchPipeline(store, depth=2)
+    rng = np.random.default_rng(3)
+    try:
+        for it in range(4):
+            t = _table(store.L, rng.integers(0, store.E, size=2), it)
+            tk = pipe.submit(t)
+            tk.wait(timeout=20)
+            tk.release()
+        # dequantised slot contents match host dequantisation
+        g, s = store.layer_to_gs(0)
+        moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
+        for e, slot in store.resident[(g, s)].items():
+            q = store.host[f"sub{s}"]["w_in"][g, e].astype(np.float32)
+            scale = store.host_scale[f"sub{s}"]["w_in"][g, e]
+            np.testing.assert_allclose(
+                np.asarray(moe_p["w_in"][g, slot], np.float32),
+                (q * scale).astype(np.float32), rtol=1e-2, atol=1e-2,
+            )
+    finally:
+        pipe.close()
+
+
+def test_inflight_cache_affinity_credits_uploads(slow_link):
+    slow_link(0.2)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=2)
+    try:
+        t = _table(store.L, [0, 1])
+        tk = pipe.submit(t)
+        # uploads still in flight: pipeline affinity credits them, the
+        # bare store does not
+        assert pipe.cache_affinity(t) == 1.0
+        assert store.cache_affinity(t) <= 1.0  # may complete quickly
+        tk.wait(timeout=60)
+        tk.release()
+        assert store.cache_affinity(t) == 1.0
+    finally:
+        pipe.close()
