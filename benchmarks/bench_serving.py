@@ -6,6 +6,10 @@ Poisson arrivals through the continuous-batching RequestServer vs
                          only on ready fences);
 * ``server_sync``      — same server, inline synchronous uploads (isolates
                          the async-prefetch win);
+* ``server_quant``     — async server with int8 device-resident slots at the
+                         SAME slot-byte budget as server_async (so ~2–4×
+                         the resident experts; isolates the quantized-slots
+                         capacity win — see the ``quantized_slots`` block);
 * ``sequential``       — same machinery, one lane, FCFS (isolates the win
                          from continuous batching + SLA/affinity scheduling);
 * ``ondemand_prefill`` — router-inline OnDemand baseline serving each
@@ -48,12 +52,12 @@ def _requests(cfg, n: int, rate: float, seed: int, slo: float) -> List[Request]:
 
 
 def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
-                   prefetch_depth=0, realtime=True):
+                   prefetch_depth=0, realtime=True, quantized_slots=False):
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=slots,
         max_lanes=lanes, max_prefill_batch=lanes,
         buckets=(8, 16, 32), cache_len=48, eviction=eviction,
-        prefetch_depth=prefetch_depth,
+        prefetch_depth=prefetch_depth, quantized_slots=quantized_slots,
     )
     # warm every jit shape outside the timed stream, then reset the clocks
     warm_rng = np.random.default_rng(99)
@@ -144,6 +148,17 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     result["engines"]["server_sync"] = serve_requests(
         cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
         slots, lanes,
+    )
+    # int8 device-resident slots: spend the SAME slot-byte budget the fp
+    # server gets, which buys ~4x the resident experts (f32 miniatures) —
+    # the capacity -> hit-rate -> latency leg of the quantized-slots story
+    from benchmarks.common import quant_capacity_info
+
+    result["quantized_slots"] = quant_capacity_info(cfg, params, slots)
+    q_slots = result["quantized_slots"]["int8_slots_at_equal_bytes"]
+    result["engines"]["server_quant"] = serve_requests(
+        cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
+        q_slots, lanes, prefetch_depth=2, quantized_slots=True,
     )
     # same eviction policy as the server so the delta isolates continuous
     # batching + scheduling, not cache replacement

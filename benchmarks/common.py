@@ -105,6 +105,27 @@ def profile_batches(cfg, profile: str, n: int, batch: int, seed=0):
     return [data.sample(batch)[0] for _ in range(n)]
 
 
+def quant_capacity_info(cfg, params, slots: int) -> Dict[str, float]:
+    """fp vs int8-resident slot cost and the int8 slot count the SAME byte
+    budget buys — the single source of the capacity-at-equal-bytes math
+    shared by bench_memory and bench_serving (so their JSON/CSV rows can
+    never disagree on what "equal bytes" means)."""
+    from repro.core.offload import ExpertStore
+
+    st_fp = ExpertStore(cfg, params, slots_per_layer=slots)
+    st_q = ExpertStore(cfg, params, slots_per_layer=slots, quantized_slots=True)
+    fp_b, q_b = st_fp.expert_slot_bytes(), st_q.expert_slot_bytes()
+    return {
+        "fp_slot_bytes_per_expert": fp_b,
+        "int8_slot_bytes_per_expert": q_b,
+        "capacity_ratio_at_equal_bytes": round(fp_b / q_b, 3),
+        "fp_slots": slots,
+        "int8_slots_at_equal_bytes": min(
+            int(slots * fp_b // q_b), cfg.moe.num_experts
+        ),
+    }
+
+
 def warmed(engine, batches):
     """Compile/warm an engine outside the timed region, reset its stats."""
     from repro.core.engine import SiDAEngine

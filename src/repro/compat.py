@@ -1,0 +1,18 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The repo targets current jax but must degrade gracefully on the versions
+CI and laptops actually have (e.g. 0.4.3x, where `shard_map` still lives
+under `jax.experimental` and `jax.sharding.AxisType` does not exist yet).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(*args, **kwargs):
+    """`jax.shard_map` where available, `jax.experimental.shard_map` before
+    it was promoted (jax < 0.6)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore
+    return fn(*args, **kwargs)

@@ -63,6 +63,23 @@ class PrefetchConfig:
 
 
 @dataclass(frozen=True)
+class QuantConfig:
+    """Expert-weight quantization settings (serving-time).
+
+    `quantized_slots` makes int8 the *native residency format*: device slot
+    pools hold int8 expert weights plus per-expert scale planes, uploads move
+    quantized slabs with no dequant hop, and the expert FFN dequantizes
+    in-kernel (fused) — so a fixed slot-byte budget holds 2–4× more experts
+    than fp slots. `scale_granularity` picks how scales are computed:
+    "channel" (per-output-channel absmax, tighter) or "tensor" (one scale per
+    expert tensor, coarser but smaller metadata); storage is always a
+    per-channel plane so kernels stay uniform."""
+
+    quantized_slots: bool = False
+    scale_granularity: str = "channel"  # "channel" | "tensor"
+
+
+@dataclass(frozen=True)
 class SSMConfig:
     """State-space / recurrent block settings (mamba + xLSTM)."""
 
@@ -107,6 +124,7 @@ class ModelConfig:
     attn: AttnConfig = field(default_factory=AttnConfig)
     ssm: SSMConfig = field(default_factory=SSMConfig)
     prefetch: PrefetchConfig = field(default_factory=PrefetchConfig)
+    quant: QuantConfig = field(default_factory=QuantConfig)
 
     # block layout: "attn" (transformer), "hymba" (parallel attn+ssm),
     # "xlstm" (recurrent-only stack)

@@ -124,6 +124,8 @@ class SiDADecodeEngine:
         prefetch_depth: Optional[int] = None,
         staging_buffers: Optional[int] = None,
         prefetcher: Optional[PrefetchPipeline] = None,
+        quantized_slots: Optional[bool] = None,
+        scale_granularity: Optional[str] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
@@ -131,6 +133,7 @@ class SiDADecodeEngine:
         self.hash_params = hash_params
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
+            quantized_slots=quantized_slots, scale_granularity=scale_granularity,
         )
         self._owns_prefetcher = False
         if prefetcher is not None:

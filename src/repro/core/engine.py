@@ -74,6 +74,8 @@ class SiDAEngine:
         prefetch_depth: Optional[int] = None,
         staging_buffers: Optional[int] = None,
         prefetcher: Optional[PrefetchPipeline] = None,
+        quantized_slots: Optional[bool] = None,
+        scale_granularity: Optional[str] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
@@ -84,6 +86,7 @@ class SiDAEngine:
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer,
             host_quant=host_quant, spill_dir=spill_dir, eviction=eviction,
+            quantized_slots=quantized_slots, scale_granularity=scale_granularity,
         )
         # async prefetch: explicit args > cfg.prefetch knobs > off. A
         # caller-supplied pipeline (the request server's) is shared as-is.

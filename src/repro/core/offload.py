@@ -72,9 +72,25 @@ def _slot_write_q_cow(buf: Array, g: Array, slots: Array, q: Array, scale: Array
     return buf.at[g, slots].set(w)
 
 
-def quantize_expert(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Symmetric per-output-channel int8 quantisation. w: [..., d_in, d_out]."""
-    absmax = np.abs(w).max(axis=-2, keepdims=True).astype(np.float32)
+def quantize_expert(
+    w: np.ndarray, granularity: str = "channel"
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric int8 quantisation. w: [..., d_in, d_out].
+
+    granularity="channel": one scale per output channel (absmax over d_in) —
+    the tight default. granularity="tensor": one scale per expert tensor
+    (absmax over both trailing axes) — coarser, but the scale plane is
+    constant. Either way the returned scale is a [..., 1, d_out] per-channel
+    plane so slot storage and the fused-dequant kernel stay uniform.
+    """
+    if granularity == "tensor":
+        absmax = np.abs(w).max(axis=(-2, -1), keepdims=True).astype(np.float32)
+        absmax = np.broadcast_to(
+            absmax, w.shape[:-2] + (1, w.shape[-1])
+        ).copy()
+    else:
+        assert granularity == "channel", granularity
+        absmax = np.abs(w).max(axis=-2, keepdims=True).astype(np.float32)
     scale = np.maximum(absmax, 1e-8) / 127.0
     q = np.clip(np.round(w.astype(np.float32) / scale), -127, 127).astype(np.int8)
     return q, scale
@@ -210,6 +226,13 @@ class ExpertStore:
     — here it composes directly with the offloading path, halving H2D
     bytes vs bf16). spill_dir enables the paper's §6 hierarchical tier:
     host arrays live in disk-backed memmaps instead of RAM.
+
+    quantized_slots=True makes int8 the *native residency format*: the device
+    slot pools themselves are int8 (plus per-expert per-output-channel f32
+    scale planes `w_*_scale`), uploads move the quantized slabs with no
+    dequant hop, and the expert FFN dequantizes in-kernel (fused) — so the
+    same slot-byte budget holds 2–4× more resident experts than fp slots.
+    Implies host_quant="int8". Defaults resolve from `cfg.quant`.
     """
 
     def __init__(
@@ -220,6 +243,8 @@ class ExpertStore:
         host_quant: str = "none",      # "none" | "int8"
         spill_dir: Optional[str] = None,
         eviction: str = "fifo",        # "fifo" | "lru" | "alpha"
+        quantized_slots: Optional[bool] = None,   # None => cfg.quant
+        scale_granularity: Optional[str] = None,  # "channel" | "tensor"
     ):
         assert cfg.moe.enabled, "ExpertStore requires an MoE config"
         assert eviction in EVICTION_POLICIES, eviction
@@ -230,6 +255,12 @@ class ExpertStore:
         self.L = n_moe_layers(cfg)
         self.E = cfg.moe.num_experts
         self.S = min(slots_per_layer, self.E)
+        self.quantized_slots = (
+            cfg.quant.quantized_slots if quantized_slots is None else quantized_slots
+        )
+        self.scale_granularity = scale_granularity or cfg.quant.scale_granularity
+        if self.quantized_slots:
+            host_quant = "int8"  # int8 residency requires the int8 host tier
         self.quant = host_quant
         self.stats = TransferStats()
 
@@ -257,7 +288,7 @@ class ExpertStore:
             for t in EXPERT_TENSORS:
                 w = np.asarray(moe_p[t])
                 if host_quant == "int8":
-                    q, scale = quantize_expert(w)
+                    q, scale = quantize_expert(w, self.scale_granularity)
                     self.host[f"sub{s}"][t] = _spill(f"sub{s}_{t}", q)
                     self.host_scale[f"sub{s}"][t] = scale
                 else:
@@ -265,7 +296,15 @@ class ExpertStore:
             for t in EXPERT_TENSORS:
                 full = moe_p[t]
                 G, E = full.shape[:2]
-                moe_p[t] = jnp.zeros((G, self.S, *full.shape[2:]), full.dtype)
+                if self.quantized_slots:
+                    # int8 slot pool + per-expert scale plane: the residency
+                    # format IS the transfer format (no dequant hop anywhere)
+                    moe_p[t] = jnp.zeros((G, self.S, *full.shape[2:]), jnp.int8)
+                    moe_p[t + "_scale"] = jnp.zeros(
+                        (G, self.S, 1, full.shape[-1]), jnp.float32
+                    )
+                else:
+                    moe_p[t] = jnp.zeros((G, self.S, *full.shape[2:]), full.dtype)
             moe_p.pop("router", None)  # routers never participate in forward
         self.serve_params = serve_params
 
@@ -294,12 +333,32 @@ class ExpertStore:
 
     # ------------------------------------------------------------------
     def device_bytes(self) -> int:
-        """Bytes of expert weights resident on device (the paper's metric)."""
+        """Bytes of expert weights resident on device (the paper's metric),
+        including the scale planes when slots are int8-resident."""
         tot = 0
         for s in self.moe_subs:
+            moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
             for t in EXPERT_TENSORS:
-                tot += self.serve_params["blocks"][f"sub{s}"]["moe"][t].nbytes
+                tot += moe_p[t].nbytes
+                sc = moe_p.get(t + "_scale")
+                if sc is not None:
+                    tot += sc.nbytes
         return tot
+
+    def expert_slot_bytes(self) -> int:
+        """Device bytes one expert slot costs per MoE layer in the current
+        residency format (fp vs int8+scales) — the denominator of the
+        capacity-at-equal-bytes comparison the quantized-slot benches make."""
+        tot = 0
+        for s in self.moe_subs:
+            moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
+            for t in EXPERT_TENSORS:
+                arr = moe_p[t]
+                tot += arr.nbytes // (arr.shape[0] * arr.shape[1])
+                sc = moe_p.get(t + "_scale")
+                if sc is not None:
+                    tot += sc.nbytes // (sc.shape[0] * sc.shape[1])
+        return tot // len(self.moe_subs)
 
     def full_expert_bytes(self) -> int:
         return sum(
@@ -379,20 +438,27 @@ class ExpertStore:
         sl = np.array([i[1] for i in items], np.int32)
         es = np.array([i[2] for i in items], np.int32)
         moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
+        gs_j, sl_j = jnp.asarray(gs), jnp.asarray(sl)
         for t in EXPERT_TENSORS:
             w_host = self.host[f"sub{s}"][t][gs, es]              # [n, d, f]
-            if self.quant == "int8":
+            if self.quantized_slots:
+                # int8-native slots: the quantized rows land as-is and the
+                # scale plane rides along — no dequant anywhere on this path
+                scale = self.host_scale[f"sub{s}"][t][gs, es]
+                self.stats.bytes_h2d += w_host.nbytes + scale.nbytes
+                moe_p[t] = write(moe_p[t], gs_j, sl_j, jnp.asarray(w_host))
+                moe_p[t + "_scale"] = write(
+                    moe_p[t + "_scale"], gs_j, sl_j, jnp.asarray(scale)
+                )
+            elif self.quant == "int8":
                 scale = self.host_scale[f"sub{s}"][t][gs, es]
                 self.stats.bytes_h2d += w_host.nbytes + scale.nbytes
                 moe_p[t] = write_q(
-                    moe_p[t], jnp.asarray(gs), jnp.asarray(sl),
-                    jnp.asarray(w_host), jnp.asarray(scale),
+                    moe_p[t], gs_j, sl_j, jnp.asarray(w_host), jnp.asarray(scale),
                 )
             else:
                 self.stats.bytes_h2d += w_host.nbytes
-                moe_p[t] = write(
-                    moe_p[t], jnp.asarray(gs), jnp.asarray(sl), jnp.asarray(w_host)
-                )
+                moe_p[t] = write(moe_p[t], gs_j, sl_j, jnp.asarray(w_host))
 
     def trans_row(self, l: int) -> np.ndarray:
         g, s = self.layer_to_gs(l)
@@ -1020,7 +1086,15 @@ class PrefetchPipeline:
             moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
             for t, dev, dscale, nbytes in staged:
                 store.stats.bytes_h2d += nbytes
-                if dscale is not None:
+                if store.quantized_slots:
+                    # int8-native slots: commit the quantized slab and its
+                    # scale plane directly — no on-device dequant hop, so the
+                    # staged bytes are the resident bytes
+                    moe_p[t] = _slot_write_cow(moe_p[t], dgs, dsl, dev)
+                    moe_p[t + "_scale"] = _slot_write_cow(
+                        moe_p[t + "_scale"], dgs, dsl, dscale
+                    )
+                elif dscale is not None:
                     moe_p[t] = _slot_write_q_cow(moe_p[t], dgs, dsl, dev, dscale)
                 else:
                     moe_p[t] = _slot_write_cow(moe_p[t], dgs, dsl, dev)

@@ -13,6 +13,12 @@ tile the whole slot stack through one systolic-friendly kernel:
 
 Weights stream expert-by-expert from HBM; compute per expert scales with
 its occupied capacity — the TPU analogue of "only invoke activated experts".
+
+`expert_ffn_q` is the fused-dequant variant for int8 device-resident slots
+(SiDA quantized slots): weight operands stream from HBM as int8 (2–4×
+fewer bytes), widen to the compute dtype one [d, bf] tile at a time in
+VMEM, and the per-output-channel scales fold into the f32 matmul epilogue
+— a materialized fp expert copy never exists at any memory tier.
 """
 from __future__ import annotations
 
@@ -51,6 +57,93 @@ def _ffn_kernel(x_ref, wi_ref, wg_ref, wo_ref, o_ref, *, act: str, glu: bool):
     o_ref[...] += jnp.dot(
         h.astype(x.dtype), wo_ref[0], preferred_element_type=jnp.float32
     )[None].astype(o_ref.dtype)
+
+
+def _ffn_kernel_q(
+    x_ref, wi_ref, wis_ref, wg_ref, wgs_ref, wo_ref, wos_ref, o_ref,
+    *, act: str, glu: bool,
+):
+    """Fused-dequant variant: weight tiles arrive int8 and are widened to the
+    compute dtype *in VMEM* (a [d, bf] tile at a time — the full fp expert
+    copy never exists anywhere), and the per-output-channel scales are folded
+    into the f32 matmul product. Scales are per output channel, so
+    (x @ (q·s)) == (x @ q)·s exactly — the MXU contracts raw int8-widened
+    tiles and the epilogue applies s to the [bc, bf] block."""
+    j = pl.program_id(2)  # f-tile index (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                               # [bc, d]
+    wi = wi_ref[0].astype(x.dtype)                             # int8 -> VMEM tile
+    h = jnp.dot(x, wi, preferred_element_type=jnp.float32)
+    h = h * wis_ref[...].astype(jnp.float32)                   # [bc,bf] * [1,bf]
+    if glu:
+        wg = wg_ref[0].astype(x.dtype)
+        g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+        g = g * wgs_ref[...].astype(jnp.float32)
+        h = _act(g, act) * h
+    else:
+        h = _act(h, act)
+    wo = wo_ref[0].astype(x.dtype)
+    out = jnp.dot(h.astype(x.dtype), wo, preferred_element_type=jnp.float32)
+    out = out * wos_ref[...].astype(jnp.float32)               # [bc,d] * [1,d]
+    o_ref[...] += out[None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "glu", "bc", "bf", "interpret")
+)
+def expert_ffn_q(
+    xe: Array,                      # [E, C, d]
+    w_in_q: Array,                  # [E, d, F] int8
+    w_in_scale: Array,              # [E, 1, F] or [E, F] f32
+    w_gate_q: Optional[Array],      # [E, d, F] int8 (None => non-gated)
+    w_gate_scale: Optional[Array],  # [E, 1, F] or [E, F] f32
+    w_out_q: Array,                 # [E, F, d] int8
+    w_out_scale: Array,             # [E, 1, d] or [E, d] f32
+    act: str = "silu",
+    bc: int = 128,
+    bf: int = 128,
+    interpret: bool = False,
+    glu: Optional[bool] = None,
+) -> Array:
+    """Slot-stacked expert FFN over int8-resident weights (SiDA quantized
+    slots): same grid/accumulation scheme as `expert_ffn`, but the weight
+    operands stream from HBM as int8 (2–4× fewer bytes than fp slots) and
+    dequantization is fused into the kernel epilogue."""
+    E, C, d = xe.shape
+    F = w_in_q.shape[-1]
+    glu = (w_gate_q is not None) if glu is None else glu
+    bc = min(bc, C)
+    bf = min(bf, F)
+    assert C % bc == 0 and F % bf == 0, (C, bc, F, bf)
+    w_in_scale = w_in_scale.reshape(E, F)
+    w_out_scale = w_out_scale.reshape(E, d)
+    if w_gate_q is None:
+        w_gate_q = w_in_q          # placeholder operands (never read)
+        w_gate_scale = w_in_scale
+    else:
+        w_gate_scale = w_gate_scale.reshape(E, F)
+
+    grid = (E, C // bc, F // bf)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel_q, act=act, glu=glu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, bf), lambda e, i, j: (e, j)),
+            pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, bf), lambda e, i, j: (e, j)),
+            pl.BlockSpec((1, bf, d), lambda e, i, j: (e, j, 0)),
+            pl.BlockSpec((1, d), lambda e, i, j: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), xe.dtype),
+        interpret=interpret,
+    )(xe, w_in_q, w_in_scale, w_gate_q, w_gate_scale, w_out_q, w_out_scale)
 
 
 @functools.partial(

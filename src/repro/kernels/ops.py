@@ -29,6 +29,15 @@ def expert_ffn(xe, w_in, w_gate, w_out, act: str = "silu", **kw):
     )
 
 
+def expert_ffn_q(xe, w_in_q, w_in_scale, w_gate_q, w_gate_scale,
+                 w_out_q, w_out_scale, act: str = "silu", **kw):
+    """Fused-dequant expert FFN over int8-resident weights (quantized slots)."""
+    return _eg.expert_ffn_q(
+        xe, w_in_q, w_in_scale, w_gate_q, w_gate_scale, w_out_q, w_out_scale,
+        act=act, interpret=_interpret(), **kw
+    )
+
+
 def sparsemax(z, **kw):
     return _sm.sparsemax(z, interpret=_interpret(), **kw)
 

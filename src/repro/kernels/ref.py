@@ -29,6 +29,36 @@ def expert_ffn_ref(
     return jnp.einsum("ecf,efd->ecd", h, w_out)
 
 
+def dequantize_ref(q: Array, scale: Array) -> Array:
+    """int8 tensor + per-output-channel scale plane -> f32 weights."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def expert_ffn_q_ref(
+    xe: Array,             # [E, C, d]
+    w_in_q: Array,         # [E, d, F] int8
+    w_in_scale: Array,     # [E, 1, F] (or [E, F])
+    w_gate_q: Array,       # [E, d, F] int8 or None
+    w_gate_scale: Array,   # [E, 1, F] or None
+    w_out_q: Array,        # [E, F, d] int8
+    w_out_scale: Array,    # [E, 1, d] (or [E, d])
+    act: str = "silu",
+) -> Array:
+    """Fused-dequant expert FFN oracle: dequantize-then-compute in pure jnp.
+
+    Because scales are per *output* channel, (x @ (q·s)) == (x @ q)·s exactly
+    (s is constant along the contraction), so this materialized-dequant form
+    is the mathematical contract for the in-kernel fused path.
+    """
+    E = xe.shape[0]
+    wi = dequantize_ref(w_in_q, w_in_scale.reshape(E, 1, -1)).astype(xe.dtype)
+    wg = None
+    if w_gate_q is not None:
+        wg = dequantize_ref(w_gate_q, w_gate_scale.reshape(E, 1, -1)).astype(xe.dtype)
+    wo = dequantize_ref(w_out_q, w_out_scale.reshape(E, 1, -1)).astype(xe.dtype)
+    return expert_ffn_ref(xe, wi, wg, wo, act=act)
+
+
 def sparsemax_ref(z: Array) -> Array:
     """Row-wise Euclidean projection onto the simplex (Martins & Astudillo)."""
     K = z.shape[-1]

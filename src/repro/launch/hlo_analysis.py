@@ -124,12 +124,15 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
             out_elems *= d
         break  # single result
     mcd = _CONTRACT_RE.search(ins.line)
-    # operand shapes: first operand name inside parens
+    # operand shapes: first operand name inside parens. Operands may be
+    # bare (`dot(%a, %b)`) or typed (`dot(f32[64,64]{1,0} %a, ...)`,
+    # newer XLA) — and typed shapes contain commas, so pull the %names
+    # out by token instead of comma-splitting the operand list.
     mop = re.search(r"\(([^)]*)\)", ins.line[ins.line.index(ins.op) :])
     k = 1
     if mcd and mop:
-        lhs_name = mop.group(1).split(",")[0].strip()
-        lhs_shape = comp.defs.get(lhs_name)
+        names = re.findall(r"%[\w.\-]+", mop.group(1))
+        lhs_shape = comp.defs.get(names[0]) if names else None
         if lhs_shape:
             dims = _dims(lhs_shape)[0][1]
             for ci in (int(c) for c in mcd.group(1).split(",") if c):

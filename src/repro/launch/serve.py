@@ -31,7 +31,9 @@ from repro.models.transformer import init_params, n_moe_layers
 
 
 def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
-                 prefetch_depth: int = 0, staging_buffers: int = 2):
+                 prefetch_depth: int = 0, staging_buffers: int = 2,
+                 host_quant: str = "none", quantized_slots: bool = False,
+                 scale_granularity: str = "channel"):
     if engine == "standard":
         return StandardServer(cfg, params)
     if engine == "ondemand":
@@ -45,6 +47,8 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
     return SiDAEngine(
         cfg, params, hp, slots_per_layer=slots, eviction=eviction,
         prefetch_depth=prefetch_depth, staging_buffers=staging_buffers,
+        host_quant=host_quant, quantized_slots=quantized_slots,
+        scale_granularity=scale_granularity,
     )
 
 
@@ -65,6 +69,9 @@ def run_request_server(cfg, params, args) -> None:
         drop_expired=args.drop_expired,
         prefetch_depth=args.prefetch_depth,
         staging_buffers=args.staging_buffers,
+        host_quant=args.host_quant,
+        quantized_slots=args.quantized_slots,
+        scale_granularity=args.scale_granularity,
     )
     rng = np.random.default_rng(0)
     reqs = poisson_requests(
@@ -75,7 +82,8 @@ def run_request_server(cfg, params, args) -> None:
     srv.run(reqs, realtime=not args.no_realtime)
     print(f"engine=server slots={args.slots} lanes={args.lanes} "
           f"eviction={args.eviction} rate={args.rate}rps "
-          f"prefetch_depth={args.prefetch_depth}")
+          f"prefetch_depth={args.prefetch_depth} "
+          f"quantized_slots={args.quantized_slots}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
@@ -99,6 +107,16 @@ def main():
                     help="async prefetch lookahead (0 = synchronous uploads)")
     ap.add_argument("--staging-buffers", type=int, default=2,
                     help="host staging slabs for the transfer thread")
+    ap.add_argument("--host-quant", default="none", choices=["none", "int8"],
+                    help="host expert tier format (int8 halves H2D bytes; "
+                         "dequantised at slot write unless --quantized-slots)")
+    ap.add_argument("--quantized-slots", action="store_true",
+                    help="int8 device-resident slots + fused-dequant expert "
+                         "FFN (2-4x resident experts per slot byte; implies "
+                         "--host-quant int8)")
+    ap.add_argument("--scale-granularity", default="channel",
+                    choices=["channel", "tensor"],
+                    help="int8 scale granularity per expert tensor")
     # request-server mode
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")
@@ -127,7 +145,9 @@ def main():
         for _ in range(args.batches)
     ]
     srv = build_engine(args.engine, cfg, params, args.slots, args.eviction,
-                       args.prefetch_depth, args.staging_buffers)
+                       args.prefetch_depth, args.staging_buffers,
+                       args.host_quant, args.quantized_slots,
+                       args.scale_granularity)
     metrics = srv.serve(batches)
     print(f"engine={args.engine} slots={args.slots}")
     for k, v in metrics.summary().items():

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
 
@@ -299,7 +300,7 @@ def decode_attention(
         o, l, m = decode_attention_local(q, k, v, slot_pos, pos, window, cap)
         return _merge_partials(o, l, m, ax).astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         inner,
         mesh=ctx.mesh,
         in_specs=(

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.attention import ShardingCtx
 from repro.models.layers import act_fn, dense_init
@@ -204,11 +205,15 @@ def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch):
     # [n, blk, d] f32 combine per device and all-reduces ~17 GB per MoE
     # layer over the full mesh. Inside shard_map every index op is local
     # and the only collective is one psum_scatter over `model`.
+    # int8-resident expert stacks take the single-shard path: the EP inner
+    # einsums below contract fp weights directly; fused dequant under
+    # shard_map is future work (ROADMAP: expert-parallel sharded serving)
     if (
         dispatch == "gather"
         and ctx.mesh is not None
         and ctx.model_axis is not None
         and E % ctx.mesh.shape[ctx.model_axis] == 0
+        and not expert_params_quantized(params)
     ):
         return _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C)
 
@@ -355,7 +360,7 @@ def _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C):
         return jax.lax.psum(y0, maxis)
 
     wspec = P(maxis, None, None)
-    y = jax.shard_map(
+    y = shard_map(
         inner,
         mesh=mesh,
         in_specs=(
@@ -370,32 +375,78 @@ def _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C):
     return y.reshape(T, d)
 
 
+def expert_params_quantized(p: dict) -> bool:
+    """True when the expert stack is int8-resident (SiDA quantized slots):
+    the ExpertStore publishes `w_*_scale` planes alongside the int8 pools."""
+    return "w_in_scale" in p
+
+
+def _use_pallas_default() -> bool:
+    """Serving-path default for routing the expert FFN through the Pallas
+    kernels: opt-in via REPRO_MOE_PALLAS=1 (the kernels need MXU-aligned
+    capacity/d_expert tilings, so auto-enabling would turn a perf knob into
+    a shape constraint). On CPU the kernels run in interpret mode — slow,
+    but exactly the fused-dequant code path, which CI exercises."""
+    import os
+
+    return os.environ.get("REPRO_MOE_PALLAS", "").lower() in ("1", "true")
+
+
 def apply_expert_stack_blocked(
-    p: dict, xe: Array, cfg: ModelConfig, use_pallas: bool = False
+    p: dict, xe: Array, cfg: ModelConfig, use_pallas: Optional[bool] = None
 ) -> Array:
     """xe: [n, E, C, d] -> [n, E, C, d].
 
     use_pallas routes through the TPU kernel (repro/kernels/expert_gemm.py,
     MXU-aligned VMEM tiling); requires C and d_expert multiples of the
     block sizes — the jnp path is the oracle and the CPU fallback.
+    None defers to the REPRO_MOE_PALLAS env knob (serving deployments set
+    it; tests and CPU runs default to the jnp oracle).
+
+    When the expert stack is int8-resident (quantized slots), the Pallas
+    path uses the fused-dequant kernel — weight tiles stream as int8 and
+    widen in VMEM, so no materialized fp expert copy ever exists — and the
+    jnp path dequantizes inline (transient fp, fused by XLA; the oracle).
     """
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    quantized = expert_params_quantized(p)
     if use_pallas:
         from repro.kernels import ops
 
         n, E, C, d = xe.shape
-        out = ops.expert_ffn(
-            xe.transpose(1, 0, 2, 3).reshape(E, n * C, d),
-            p["w_in"], p["w_gate"] if cfg.glu else None, p["w_out"],
-            act=cfg.act,
-        )
+        x2 = xe.transpose(1, 0, 2, 3).reshape(E, n * C, d)
+        if quantized:
+            out = ops.expert_ffn_q(
+                x2,
+                p["w_in"], p["w_in_scale"],
+                p["w_gate"] if cfg.glu else None,
+                p["w_gate_scale"] if cfg.glu else None,
+                p["w_out"], p["w_out_scale"],
+                act=cfg.act,
+            )
+        else:
+            out = ops.expert_ffn(
+                x2, p["w_in"], p["w_gate"] if cfg.glu else None, p["w_out"],
+                act=cfg.act,
+            )
         return out.reshape(E, n, C, d).transpose(1, 0, 2, 3)
-    h = jnp.einsum("necd,edf->necf", xe, p["w_in"])
+    if quantized:
+        dq = lambda t: (
+            p[t].astype(jnp.float32) * p[t + "_scale"].astype(jnp.float32)
+        ).astype(xe.dtype)
+        wi, wo = dq("w_in"), dq("w_out")
+        wg = dq("w_gate") if cfg.glu else None
+    else:
+        wi, wo = p["w_in"], p["w_out"]
+        wg = p["w_gate"] if cfg.glu else None
+    h = jnp.einsum("necd,edf->necf", xe, wi)
     if cfg.glu:
-        g = jnp.einsum("necd,edf->necf", xe, p["w_gate"])
+        g = jnp.einsum("necd,edf->necf", xe, wg)
         h = act_fn(cfg.act)(g) * h
     else:
         h = act_fn(cfg.act)(h)
-    return jnp.einsum("necf,efd->necd", h, p["w_out"])
+    return jnp.einsum("necf,efd->necd", h, wo)
 
 
 def _constrain_necd(x: Array, ctx: ShardingCtx, P_dims: int = 4) -> Array:

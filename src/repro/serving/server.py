@@ -85,6 +85,8 @@ class RequestServer:
         telemetry: Optional[Telemetry] = None,
         prefetch_depth: Optional[int] = None,
         staging_buffers: Optional[int] = None,
+        quantized_slots: Optional[bool] = None,
+        scale_granularity: Optional[str] = None,
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
@@ -93,7 +95,8 @@ class RequestServer:
         self.cfg = cfg
         self.ctx = ctx
         self.store = ExpertStore(
-            cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction
+            cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
+            quantized_slots=quantized_slots, scale_granularity=scale_granularity,
         )
         self.prefetch: Optional[PrefetchPipeline] = PrefetchPipeline.maybe_create(
             self.store, cfg, prefetch_depth, staging_buffers

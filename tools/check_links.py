@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for README.md / docs/ (CI step).
+
+Checks every relative link target ([text](path), [text](path#anchor)) in
+the given markdown files/directories:
+  * the target file or directory must exist (relative to the linking file);
+  * a #anchor into a markdown file must match one of its headings under
+    GitHub's slug rules (lowercase, spaces -> dashes, punctuation dropped).
+External (http/https/mailto) links are skipped — CI stays hermetic.
+
+    python tools/check_links.py README.md docs ROADMAP.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    h = re.sub(r"`([^`]*)`", r"\1", heading)       # strip inline code ticks
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)  # links -> text
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: str) -> set:
+    text = open(md_path, encoding="utf-8").read()
+    text = CODE_FENCE_RE.sub("", text)
+    return {github_slug(m) for m in HEADING_RE.findall(text)}
+
+
+def check_file(md_path: str) -> list:
+    errors = []
+    text = open(md_path, encoding="utf-8").read()
+    text = CODE_FENCE_RE.sub("", text)
+    base = os.path.dirname(os.path.abspath(md_path))
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+            continue
+        path, _, anchor = target.partition("#")
+        if not path:  # same-file anchor
+            if anchor and github_slug(anchor) not in anchors_of(md_path):
+                errors.append(f"{md_path}: broken anchor #{anchor}")
+            continue
+        full = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(full):
+            errors.append(f"{md_path}: broken link {target!r} -> {full}")
+            continue
+        if anchor and full.endswith(".md"):
+            if github_slug(anchor) not in anchors_of(full):
+                errors.append(
+                    f"{md_path}: broken anchor {target!r} (no such heading)"
+                )
+    return errors
+
+
+def main(argv: list) -> int:
+    files = []
+    for arg in argv or ["README.md", "docs"]:
+        if os.path.isdir(arg):
+            for root, _, names in os.walk(arg):
+                files += [os.path.join(root, n) for n in names
+                          if n.endswith(".md")]
+        else:
+            files.append(arg)
+    errors = []
+    for f in sorted(files):
+        errors += check_file(f)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
