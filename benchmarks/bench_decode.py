@@ -35,6 +35,57 @@ def decode_rows() -> List[Row]:
     return rows
 
 
+def spec_rows() -> List[Row]:
+    """Paired spec-vs-sync decode probe on E8 at the SAME slot budget.
+
+    Both engines run async prefetch (depth 2) over all-resident-capable
+    slots so the comparison isolates speculation: the sync engine pays one
+    predict + one step dispatch (and one prefetch fence) per token, the
+    speculative engine pays one draft unroll + one verify per k-token block
+    and ships ONE superset ticket per block — the headline is tokens/s at
+    equal slots, with `identical=1` asserting byte-identical greedy output
+    and `accepted` the mean accepted tokens per verify step (> 1 means the
+    draft head is paying for itself)."""
+    rows = []
+    E = 8
+    cfg, params, hp = get_system(E, draft=True)
+    start = np.arange(4, dtype=np.int32) + 1
+    steps = 48
+
+    def run(**kw):
+        eng = SiDADecodeEngine(
+            cfg, params, hp, slots_per_layer=E, serve_top_k=1,
+            prefetch_depth=2, **kw,
+        )
+        eng.generate(start, steps=4, cache_len=64)      # warmup/compile
+        eng.store.stats.reset()
+        if eng.prefetcher is not None:
+            eng.prefetcher.stats.reset()
+        out, m = eng.generate(start, steps=steps, cache_len=64)
+        eng.close()
+        return out, m
+
+    out_sync, m_sync = run()
+    out_spec, m_spec = run(spec_mode="draft", spec_k=4)
+    identical = int(bool((out_sync == out_spec).all()))
+    rows.append(Row(
+        "decode/spec_sync_ref", m_sync.wall_s / max(m_sync.steps, 1) * 1e6,
+        tok_s=round(m_sync.tok_s, 1),
+        stall_s=round(m_sync.stall_s, 4),
+        loads=sum(m_sync.loads_per_step),
+    ))
+    rows.append(Row(
+        "decode/spec_k4", m_spec.wall_s / max(m_spec.steps, 1) * 1e6,
+        tok_s=round(m_spec.tok_s, 1),
+        accepted=round(m_spec.mean_accepted, 2),
+        acceptance=round(m_spec.acceptance_rate, 3),
+        identical=identical,
+        stall_s=round(m_spec.stall_s, 4),
+        loads=sum(m_spec.loads_per_step),
+    ))
+    return rows
+
+
 def scheduling_rows() -> List[Row]:
     rows = []
     E = 16
@@ -59,4 +110,4 @@ def scheduling_rows() -> List[Row]:
 
 
 def run() -> List[Row]:
-    return decode_rows() + scheduling_rows()
+    return decode_rows() + spec_rows() + scheduling_rows()

@@ -10,6 +10,12 @@ Poisson arrivals through the continuous-batching RequestServer vs
                          SAME slot-byte budget as server_async (so ~2–4×
                          the resident experts; isolates the quantized-slots
                          capacity win — see the ``quantized_slots`` block);
+* ``server_spec``      — async server with speculative decode: the hash
+                         predictor's tied-embedding draft head proposes k
+                         tokens per step, one jitted verify accepts a
+                         per-lane prefix, and ONE superset prefetch ticket
+                         covers all k positions (see the ``speculative``
+                         block for the closed-loop spec-vs-async probe);
 * ``sequential``       — same machinery, one lane, FCFS (isolates the win
                          from continuous batching + SLA/affinity scheduling);
 * ``ondemand_prefill`` — router-inline OnDemand baseline serving each
@@ -52,12 +58,14 @@ def _requests(cfg, n: int, rate: float, seed: int, slo: float) -> List[Request]:
 
 
 def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
-                   prefetch_depth=0, realtime=True, quantized_slots=False):
+                   prefetch_depth=0, realtime=True, quantized_slots=False,
+                   spec_mode="off", spec_k=4):
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=slots,
         max_lanes=lanes, max_prefill_batch=lanes,
         buckets=(8, 16, 32), cache_len=48, eviction=eviction,
         prefetch_depth=prefetch_depth, quantized_slots=quantized_slots,
+        spec_mode=spec_mode, spec_k=spec_k,
     )
     # warm every jit shape outside the timed stream, then reset the clocks
     warm_rng = np.random.default_rng(99)
@@ -97,6 +105,75 @@ def stall_probe(cfg, params, hp, n_requests, slots, lanes, seed, trials=3):
     return {k: min(v) for k, v in probe.items()}
 
 
+def _decode_requests(cfg, n: int, seed: int) -> List[Request]:
+    """Decode-bound stream for the speculative probe: speculation trades
+    extra verify positions for fewer per-token dispatches, so its regime is
+    decode-heavy serving (long generations), not the prefill-dominated
+    2-8-token stream the latency rows use."""
+    rng = np.random.default_rng(seed)
+    return poisson_requests(
+        rng, n, rate_rps=1e6, vocab_size=cfg.vocab_size,
+        prompt_len_range=(4, 24), max_new_range=(16, 32), slo_s=None,
+    )
+
+
+def spec_probe(cfg, params, hp, n_requests, slots, lanes, seed,
+               trials=5, spec_k=2):
+    """Paired spec-vs-async probe under saturating (closed-loop) decode-bound
+    load at the SAME slot budget: the identical request stream served
+    back-to-back by the async server and the speculative server (async +
+    draft/verify). All reported numbers come from the single trial pair
+    carrying the median decode-throughput ratio (see the aggregation note
+    below) — the headline is spec decode tokens/s >= async with lower
+    stall (one fence per verify block instead of one per token), plus the
+    acceptance telemetry that explains it. spec_k=2 is the sweet spot on
+    the E8 miniature's ~0.7-0.9 draft accuracy: rejected verify positions
+    are wasted compute, so k beyond the expected accepted run pays for
+    dispatch it can't save; deployments with stronger draft heads raise
+    it."""
+    pairs = []
+    for t in range(trials):
+        sa = serve_requests(cfg, params, hp,
+                            _decode_requests(cfg, n_requests, seed + t),
+                            slots, lanes, prefetch_depth=2, realtime=False)
+        sk = serve_requests(cfg, params, hp,
+                            _decode_requests(cfg, n_requests, seed + t),
+                            slots, lanes, prefetch_depth=2, realtime=False,
+                            spec_mode="draft", spec_k=spec_k)
+        pairs.append((sa, sk))
+    # PAIRED aggregation: host load on a shared CPU box swings absolute
+    # wall numbers 2-3x between trials, so any per-mode statistic across
+    # trials compares different machine conditions; the back-to-back pair
+    # inside one trial shares them, so the per-trial ratio is the
+    # noise-robust statistic and EVERY reported number comes from the one
+    # pair carrying the median ratio (never mixed across trials).
+    # decode_tok_s (tokens per second spent inside decode ticks) is the
+    # headline: it isolates the hot loop speculation optimizes from
+    # admission/prefill/scheduling wall time.
+    def ratio(pair):
+        return pair[1]["decode_tok_s"] / max(pair[0]["decode_tok_s"], 1e-9)
+
+    sa, sk = sorted(pairs, key=ratio)[len(pairs) // 2]
+    return {
+        "spec_k": spec_k,
+        "spec_decode_speedup": ratio((sa, sk)),
+        "async_decode_tok_s": sa["decode_tok_s"],
+        "spec_decode_tok_s": sk["decode_tok_s"],
+        "async_tok_s": sa["throughput_tok_s"],
+        "spec_tok_s": sk["throughput_tok_s"],
+        "async_stall_s": sa["upload_stall_s"],
+        "spec_stall_s": sk["upload_stall_s"],
+        "spec_acceptance_rate": sk["spec_acceptance_rate"],
+        "spec_accepted_per_step": sk["spec_accepted_per_step"],
+        "trials": [
+            {"async_decode_tok_s": p[0]["decode_tok_s"],
+             "spec_decode_tok_s": p[1]["decode_tok_s"],
+             "async_stall_s": p[0]["upload_stall_s"],
+             "spec_stall_s": p[1]["upload_stall_s"]} for p in pairs
+        ],
+    }
+
+
 def serve_prefill_fcfs(baseline_cls, cfg, params, reqs, slots) -> Dict[str, float]:
     """FCFS request-at-a-time prefill through a router-inline baseline."""
     from repro.serving.telemetry import Histogram
@@ -133,7 +210,7 @@ def serve_prefill_fcfs(baseline_cls, cfg, params, reqs, slots) -> Dict[str, floa
 
 
 def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
-    cfg, params, hp = get_system(E)
+    cfg, params, hp = get_system(E, draft=True)  # server_spec + spec_probe
     result = {
         "config": {
             "arch": cfg.name, "experts": E, "slots": slots, "lanes": lanes,
@@ -148,6 +225,13 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     result["engines"]["server_sync"] = serve_requests(
         cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
         slots, lanes,
+    )
+    # speculative decode over the async pipeline at the SAME slot budget:
+    # k-token draft/verify blocks + one superset prefetch ticket per block
+    # (k=2: see spec_probe on matching k to draft accuracy)
+    result["engines"]["server_spec"] = serve_requests(
+        cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
+        slots, lanes, prefetch_depth=2, spec_mode="draft", spec_k=2,
     )
     # int8 device-resident slots: spend the SAME slot-byte budget the fp
     # server gets, which buys ~4x the resident experts (f32 miniatures) —
@@ -178,6 +262,11 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     # forward path, sync (inline uploads) vs async (ready-fence waits only),
     # measured as a paired closed-loop probe (noise-robust)
     result["async_prefetch"] = stall_probe(
+        cfg, params, hp, n_requests, slots, lanes, seed
+    )
+    # the headline speculative delta: closed-loop spec-vs-async tokens/s and
+    # per-block-vs-per-token fence stall at equal slots, with acceptance
+    result["speculative"] = spec_probe(
         cfg, params, hp, n_requests, slots, lanes, seed
     )
     return result

@@ -64,8 +64,43 @@ def data_for(cfg, profile=None, seed=0) -> SyntheticLM:
     )
 
 
+def _with_draft_head(cfg, params, hp, ck: str, draft_steps: int):
+    """Attach + distill the tied-embedding draft head (speculative decode)
+    onto a trained predictor. Cached separately from the hash checkpoint so
+    pre-draft caches stay valid and the router heads stay bit-identical —
+    only `draft_proj` trains (see tkd.train_draft_head)."""
+    from repro.core.hash_fn import init_draft_head
+    from repro.core.tkd import train_draft_head
+
+    hp = init_draft_head(jax.random.PRNGKey(7), hp, cfg.d_model)
+    dck = os.path.join(ck, "draft")
+    if os.path.exists(os.path.join(dck, "manifest.json")):
+        dp, _ = load_checkpoint(dck, like={"draft_proj": hp["draft_proj"]})
+        return {**hp, **dp}
+
+    data = data_for(cfg, seed=1)
+
+    def batches():
+        while True:
+            toks, _, _ = data.sample(8)
+            out = forward(params, cfg, CTX, jnp.asarray(toks))
+            emb = jnp.take(params["embed"], jnp.asarray(toks), axis=0)
+            yield emb, out["logits"]
+
+    hp, _ = train_draft_head(
+        hp, params["embed"], batches(), steps=draft_steps,
+        num_experts=cfg.moe.num_experts, lr=3e-3,
+    )
+    save_checkpoint(dck, {"draft_proj": hp["draft_proj"]})
+    return hp
+
+
 @lru_cache(maxsize=None)
-def get_system(E: int, train_steps: int = 80, hash_steps: int = 150):
+def get_system(E: int, train_steps: int = 80, hash_steps: int = 150,
+               draft: bool = False, draft_steps: int = 300):
+    """draft=True additionally attaches + distills the speculative-decode
+    draft head (cached; only the spec suites pay for it — every other
+    consumer gets the plain predictor)."""
     cfg = bench_cfg(E)
     ck = os.path.join(CACHE, f"sys_E{E}")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -75,6 +110,8 @@ def get_system(E: int, train_steps: int = 80, hash_steps: int = 150):
     if os.path.exists(os.path.join(ck, "model", "manifest.json")):
         params, _ = load_checkpoint(os.path.join(ck, "model"), like=params)
         hp, _ = load_checkpoint(os.path.join(ck, "hash"), like=hp)
+        if draft:
+            hp = _with_draft_head(cfg, params, hp, ck, draft_steps)
         return cfg, params, hp
 
     data = data_for(cfg)
@@ -97,6 +134,8 @@ def get_system(E: int, train_steps: int = 80, hash_steps: int = 150):
     )
     save_checkpoint(os.path.join(ck, "model"), params)
     save_checkpoint(os.path.join(ck, "hash"), hp)
+    if draft:
+        hp = _with_draft_head(cfg, params, hp, ck, draft_steps)
     return cfg, params, hp
 
 

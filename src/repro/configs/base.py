@@ -63,6 +63,26 @@ class PrefetchConfig:
 
 
 @dataclass(frozen=True)
+class SpecConfig:
+    """Speculative multi-token decode settings (serving-time).
+
+    The LSTM hash predictor already runs ahead of the model; `mode="draft"`
+    additionally reads a tied-embedding next-token head off the same
+    predictor state, unrolls it `k` steps to propose a draft block, and
+    verifies the whole block in one jitted k-position decode. The union of
+    the k positions' predicted expert sets ships as a single multi-token
+    prefetch ticket (a strict superset of each per-step ticket), so
+    speculation deepens expert-prefetch lookahead for free."""
+
+    mode: str = "off"                 # "off" | "draft"
+    k: int = 4                        # draft tokens proposed per verify step
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off" and self.k > 1
+
+
+@dataclass(frozen=True)
 class QuantConfig:
     """Expert-weight quantization settings (serving-time).
 
@@ -125,6 +145,7 @@ class ModelConfig:
     ssm: SSMConfig = field(default_factory=SSMConfig)
     prefetch: PrefetchConfig = field(default_factory=PrefetchConfig)
     quant: QuantConfig = field(default_factory=QuantConfig)
+    spec: SpecConfig = field(default_factory=SpecConfig)
 
     # block layout: "attn" (transformer), "hymba" (parallel attn+ssm),
     # "xlstm" (recurrent-only stack)

@@ -28,11 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.hash_fn import sparsemax
+from repro.core.hash_fn import draft_logits_from_state, sparsemax
 from repro.core.hash_table import HashTable
 from repro.core.offload import ExpertStore, PrefetchPipeline
 from repro.models.attention import ShardingCtx
-from repro.models.transformer import decode_step, init_cache, n_moe_layers
+from repro.models.transformer import decode_step, init_cache, n_moe_layers, verify_step
 
 Array = jax.Array
 
@@ -65,9 +65,15 @@ def _lstm_cell(p, x, h, c):
 
 
 def hash_fn_step(
-    params: dict, emb_tok: Array, state: dict, num_experts: int
-) -> Tuple[Array, dict]:
-    """One-token advance. emb_tok: [B, d_model] -> logits [B, L, E]."""
+    params: dict, emb_tok: Array, state: dict, num_experts: int,
+    embed_table: Optional[Array] = None,
+):
+    """One-token advance. emb_tok: [B, d_model] -> logits [B, L, E].
+
+    With `embed_table` (and a draft head in `params`) additionally returns
+    tied-embedding next-token draft logits [B, V] between the expert logits
+    and the new state — the speculative decode loop reads both off the same
+    predictor pass."""
     E = num_experts
     L = params["heads"].shape[-1] // E
     x = jnp.tanh(emb_tok.astype(jnp.float32) @ params["compress"])
@@ -84,9 +90,86 @@ def hash_fn_step(
     scores = jnp.where(valid, scores, -1e30)
     w = sparsemax(scores, axis=-1)
     a = jnp.einsum("bk,bkd->bd", w, ring)
-    logits = (a + h2) @ params["heads"]
+    z = a + h2
+    logits = z @ params["heads"]
     new_state = {"h1": h1, "c1": c1, "h2": h2, "c2": c2, "ring": ring, "t": t + 1}
+    if embed_table is not None and "draft_proj" in params:
+        draft = draft_logits_from_state(params, z, embed_table)
+        return logits.reshape(-1, L, E), draft, new_state
     return logits.reshape(-1, L, E), new_state
+
+
+# ---------------------------------------------------------------------------
+# speculative draft unroll (shared by the engine and the request server)
+# ---------------------------------------------------------------------------
+
+
+def draft_unroll_fn(num_experts: int, top_k: int, K: int):
+    """Build the K-step draft unroll: from the last accepted token, advance
+    the predictor K times, reading BOTH heads off each state — router heads
+    for per-position expert ids/α, the tied-embedding draft head for the
+    next (greedy) draft token — and stack the per-position states the
+    accept/reject bookkeeping rolls back to.
+
+    One definition serves both consumers (jit each returned callable): the
+    engine calls it with `active=None`; the request server passes its lane
+    mask so inactive lanes' α is zeroed (their rows route nowhere and the
+    masked verify rolls them back entirely). The unroll recurrence and the
+    [L, B, K, k] layout are load-bearing for the engine-vs-server greedy
+    byte-equivalence, which is why they live in exactly one place.
+
+    Returns (inputs [B, K], ids [L, B, K, k], α [L, B, K, k],
+    states stacked [K, B, ...] leaves).
+    """
+
+    def unroll(hp, embed_table, tokens, hstate, active=None):
+        def step(carry, _):
+            tok, st = carry
+            emb = jnp.take(embed_table, tok, axis=0)
+            logits, dlog, st = hash_fn_step(hp, emb, st, num_experts, embed_table)
+            vals, ids = jax.lax.top_k(logits, top_k)         # [B, L, k]
+            alpha = jax.nn.softmax(vals, axis=-1)
+            if active is not None:
+                alpha = alpha * active[:, None, None]
+            nxt = jnp.argmax(dlog, -1).astype(jnp.int32)
+            return (nxt, st), (
+                tok,
+                jnp.moveaxis(ids, 1, 0).astype(jnp.int32),   # [L, B, k]
+                jnp.moveaxis(alpha, 1, 0).astype(jnp.float32),
+                st,
+            )
+
+        (_, _), (toks, ids, alpha, states) = jax.lax.scan(
+            step, (tokens, hstate), None, length=K
+        )
+        return (
+            jnp.moveaxis(toks, 0, 1),          # [B, K]
+            jnp.moveaxis(ids, 0, 2),           # [L, B, K, k]
+            jnp.moveaxis(alpha, 0, 2),
+            states,                            # stacked [K, B, ...] leaves
+        )
+
+    return unroll
+
+
+def select_accepted_state(states, n_acc: Array, old=None):
+    """Per-lane predictor rollback: from the unroll's stacked states
+    ([K, B, ...] leaves) pick each lane's state after its last accepted
+    input (stack index n_acc - 1). With `old`, lanes that accepted nothing
+    (n_acc == 0 — the masked server's inactive lanes) keep their old state.
+    Shared by the engine and the server so the rollback indexing cannot
+    drift between them."""
+    idx = jnp.maximum(n_acc - 1, 0)
+    bidx = jnp.arange(n_acc.shape[0])
+    if old is None:
+        return jax.tree.map(lambda s: s[idx, bidx], states)
+
+    def sel(stk, og):
+        chosen = stk[idx, bidx]
+        keep = (n_acc > 0).reshape(-1, *([1] * (og.ndim - 1)))
+        return jnp.where(keep, chosen, og)
+
+    return jax.tree.map(sel, states, old)
 
 
 # ---------------------------------------------------------------------------
@@ -96,15 +179,61 @@ def hash_fn_step(
 
 @dataclass
 class DecodeMetrics:
-    steps: int = 0
-    tokens: int = 0
+    """Decode accounting that stays honest under speculation.
+
+    `steps` counts verify blocks (jit dispatches), `tokens` counts tokens
+    actually *emitted* (accepted) — never B · steps, which over-reports the
+    moment a verify step can reject draft positions. `loads_per_step` is
+    attributed per verify block (the k-position superset ticket loads once
+    for the whole block). `proposed` counts positions verified, so
+    `acceptance_rate == tokens / proposed` is 1.0 for the sync path by
+    construction."""
+
+    steps: int = 0                 # verify blocks (== tokens/B when sync)
+    tokens: int = 0                # accepted tokens actually emitted
+    proposed: int = 0              # positions verified (B·k per spec block)
     wall_s: float = 0.0
     stall_s: float = 0.0           # time blocked on async prefetch fences
     loads_per_step: List[int] = field(default_factory=list)
+    accepted_per_step: List[float] = field(default_factory=list)  # mean n_acc/lane
 
     @property
     def tok_s(self) -> float:
         return self.tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.tokens / self.proposed if self.proposed else 0.0
+
+    @property
+    def mean_accepted(self) -> float:
+        xs = self.accepted_per_step
+        return float(np.mean(xs)) if xs else 0.0
+
+
+class TableBuffer:
+    """Reusable host backing store for per-step decode HashTables.
+
+    The decode hot loop used to allocate two fresh [L, B, S, k] numpy arrays
+    plus a HashTable per token; this keeps one persistent pair and copies
+    the device predictions into it in place — the only per-step host work
+    left is the unavoidable D2H of the prediction itself."""
+
+    def __init__(self, L: int, B: int, S: int, k: int):
+        self.ids = np.zeros((L, B, S, k), np.int32)
+        self.weights = np.zeros((L, B, S, k), np.float32)
+        self.table = HashTable(0, self.ids, self.weights)
+
+    def fill(self, batch_index: int, ids_dev, alpha_dev) -> HashTable:
+        """ids/alpha device arrays, [L, B, k] (S folded) or [L, B, S, k]."""
+        self.table.batch_index = batch_index
+        if ids_dev.ndim == 3:
+            np.copyto(self.ids[:, :, 0, :], np.asarray(ids_dev))
+            np.copyto(self.weights[:, :, 0, :], np.asarray(alpha_dev))
+        else:
+            np.copyto(self.ids, np.asarray(ids_dev))
+            np.copyto(self.weights, np.asarray(alpha_dev))
+        return self.table
 
 
 class SiDADecodeEngine:
@@ -126,11 +255,22 @@ class SiDADecodeEngine:
         prefetcher: Optional[PrefetchPipeline] = None,
         quantized_slots: Optional[bool] = None,
         scale_granularity: Optional[str] = None,
+        spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
+        spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
     ):
         self.cfg = cfg
         self.ctx = ctx
         self.k = serve_top_k or cfg.moe.top_k
         self.hash_params = hash_params
+        mode = spec_mode if spec_mode is not None else cfg.spec.mode
+        assert mode in ("off", "draft"), mode
+        self.spec_k = spec_k if spec_k is not None else cfg.spec.k
+        self.spec = mode == "draft" and self.spec_k > 1
+        if self.spec:
+            assert "draft_proj" in hash_params, (
+                "spec_mode='draft' needs a hash function with a draft head "
+                "(init_hash_fn(draft=True) or init_draft_head)"
+            )
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
@@ -170,50 +310,137 @@ class SiDADecodeEngine:
             )
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
+        @jax.jit
+        def _verify(serve_params, cache, tokens_blk, slot_ids, w):
+            out, n_acc, _, cache = verify_step(
+                serve_params, cache, tokens_blk, cfg_, ctx_,
+                routing_override=(slot_ids, w),
+            )
+            # next block starts from the last *accepted* model token
+            nxt = jnp.take_along_axis(out, (n_acc - 1)[:, None], axis=1)[:, 0]
+            return out, n_acc, nxt, cache
+
         self._predict_step = _predict_step
         self._step = _step
+        self._draft_unroll = jax.jit(draft_unroll_fn(E, self.k, self.spec_k))
+        self._verify = _verify
+        self._roll_hstate = jax.jit(select_accepted_state)
+
+    def _route_table(self, table: HashTable, m: DecodeMetrics):
+        """Resolve residency for one decode table: async ticket (fence-only)
+        or synchronous prepare. Returns (trans, ticket); loads/stall are
+        attributed to the current verify block in `m`."""
+        loads_before = self.store.stats.loads
+        if self.prefetcher is not None:
+            # per-lane decode predictions feed the transfer thread; the
+            # step only clears ready fences for the experts it needs
+            stall0 = self.prefetcher.stats.stall_s
+            ticket = self.prefetcher.submit(table)
+            ticket.wait()
+            m.stall_s += self.prefetcher.stats.stall_s - stall0
+            trans = ticket.trans
+        else:
+            ticket = None
+            trans = self.store.prepare(table)
+        m.loads_per_step.append(self.store.stats.loads - loads_before)
+        return trans, ticket
 
     def generate(
         self, prompt_last_tokens: np.ndarray, steps: int, cache_len: int = 256
     ) -> Tuple[np.ndarray, DecodeMetrics]:
         """Greedy-decode `steps` tokens for a batch, starting from the given
-        current tokens (fresh cache; prompts would be prefillled in prod)."""
+        current tokens (fresh cache; prompts would be prefillled in prod).
+
+        With speculation enabled (spec_mode="draft", spec_k > 1) each loop
+        iteration verifies a k-token draft block in one jitted step; outputs
+        are token-for-token identical to the sync path whenever every
+        predicted expert is resident (see docs/ARCHITECTURE.md)."""
+        if self.spec:
+            return self._generate_spec(prompt_last_tokens, steps, cache_len)
         B = prompt_last_tokens.shape[0]
         cache = init_cache(self.cfg, B, cache_len)
         hstate = hash_state_init(self.hash_params, B)
         tokens = jnp.asarray(prompt_last_tokens, jnp.int32)
         out = np.zeros((B, steps), np.int32)
         m = DecodeMetrics()
+        tbuf = TableBuffer(self.L, B, 1, self.k)
         t0 = time.perf_counter()
         for i in range(steps):
             ids, alpha, hstate = self._predict_step(
                 self.hash_params, self.embed_table, tokens, hstate
             )
-            table = HashTable(i, np.asarray(ids)[:, :, None, :],
-                              np.asarray(alpha)[:, :, None, :])
-            loads_before = self.store.stats.loads
-            if self.prefetcher is not None:
-                # per-lane decode predictions feed the transfer thread; the
-                # step only clears ready fences for the experts it needs
-                stall0 = self.prefetcher.stats.stall_s
-                ticket = self.prefetcher.submit(table)
-                ticket.wait()
-                m.stall_s += self.prefetcher.stats.stall_s - stall0
-                trans = ticket.trans
-            else:
-                ticket = None
-                trans = self.store.prepare(table)
-            m.loads_per_step.append(self.store.stats.loads - loads_before)
-            slot_ids, w = self.store.translate(table, trans)
+            table = tbuf.fill(i, ids, alpha)
+            trans, ticket = self._route_table(table, m)
+            # translation runs on device straight off the still-resident
+            # prediction (no per-step numpy slot gather / override upload)
+            slot_ids, w = self.store.translate_device(
+                ids[:, :, None, :], alpha[:, :, None, :], trans
+            )
             tokens, cache = self._step(
                 self.store.serve_params, cache, tokens,
-                jnp.asarray(slot_ids[:, :, 0, :]), jnp.asarray(w[:, :, 0, :]),
+                slot_ids[:, :, 0, :], w[:, :, 0, :],
             )
             out[:, i] = np.asarray(tokens)  # forces the step; slots consumed
             if ticket is not None:
                 ticket.release()
             m.steps += 1
-            m.tokens += B
+            m.tokens += B                   # every position emitted == accepted
+            m.proposed += B
+            m.accepted_per_step.append(1.0)
+        jax.block_until_ready(tokens)
+        m.wall_s = time.perf_counter() - t0
+        return out, m
+
+    def _generate_spec(
+        self, prompt_last_tokens: np.ndarray, steps: int, cache_len: int
+    ) -> Tuple[np.ndarray, DecodeMetrics]:
+        """Speculative decode: draft K tokens off the predictor's tied
+        next-token head, prefetch the union of all K positions' predicted
+        expert sets as ONE multi-token ticket (a strict superset of each
+        per-step ticket -> deeper prefetch lookahead for free), verify the
+        block in one jitted k-position `verify_step`, and keep per-lane
+        accepted prefixes. Lanes advance at different rates; the loop ends
+        when every lane has emitted `steps` tokens."""
+        B = prompt_last_tokens.shape[0]
+        K = self.spec_k
+        assert K <= cache_len, (K, cache_len)
+        cache = init_cache(self.cfg, B, cache_len)
+        hstate = hash_state_init(self.hash_params, B)
+        tokens = jnp.asarray(prompt_last_tokens, jnp.int32)
+        out = np.zeros((B, steps), np.int32)
+        filled = np.zeros((B,), np.int64)
+        m = DecodeMetrics()
+        tbuf = TableBuffer(self.L, B, K, self.k)
+        t0 = time.perf_counter()
+        while filled.min() < steps:
+            inputs, ids, alpha, states = self._draft_unroll(
+                self.hash_params, self.embed_table, tokens, hstate
+            )
+            table = tbuf.fill(m.steps, ids, alpha)
+            trans, ticket = self._route_table(table, m)
+            slot_ids, w = self.store.translate_device(ids, alpha, trans)
+            out_blk, n_acc, tokens, cache = self._verify(
+                self.store.serve_params, cache, inputs,
+                jnp.moveaxis(slot_ids, 2, 0), jnp.moveaxis(w, 2, 0),
+            )
+            hstate = self._roll_hstate(states, n_acc)
+            out_np = np.asarray(out_blk)    # forces the step; slots consumed
+            n_np = np.asarray(n_acc)
+            if ticket is not None:
+                ticket.release()
+            delivered = 0
+            for b in range(B):
+                take = int(min(n_np[b], steps - filled[b]))
+                out[b, filled[b] : filled[b] + take] = out_np[b, :take]
+                filled[b] += take
+                m.tokens += take
+                delivered += take
+            # delivered, not raw n_acc: a lane that hits its `steps` budget
+            # mid-block drops the tail of its accepted prefix, and the
+            # server-side accepted_per_step histogram truncates identically
+            m.accepted_per_step.append(delivered / B)
+            m.proposed += B * K
+            m.steps += 1
         jax.block_until_ready(tokens)
         m.wall_s = time.perf_counter() - t0
         return out, m

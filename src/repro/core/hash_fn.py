@@ -14,7 +14,7 @@ inference, and its argmax/top-k + softmax-α outputs populate the HashTable.
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,26 +108,55 @@ def _lstm_layer(p: dict, x: Array) -> Array:
 
 
 def init_hash_fn(
-    key, d_model: int, n_moe_layers: int, num_experts: int, d_h: int = 256
+    key, d_model: int, n_moe_layers: int, num_experts: int, d_h: int = 256,
+    draft: bool = False,
 ) -> dict:
     ks = jax.random.split(key, 6)
-    return {
+    p = {
         "compress": dense_init(ks[0], d_model, d_h, jnp.float32),
         "lstm1": _init_lstm_layer(ks[1], d_h, d_h),
         "lstm2": _init_lstm_layer(ks[2], d_h, d_h),
         "attn_q": dense_init(ks[3], d_h, d_h, jnp.float32),
         "heads": dense_init(ks[4], d_h, n_moe_layers * num_experts, jnp.float32),
     }
+    if draft:
+        # tied-embedding next-token draft head (speculative decode): the same
+        # predictor state z that feeds the per-layer router heads projects
+        # back to d_model and reads token logits off the model's embedding
+        # table — no separate vocab matrix, so the head stays tiny (d_h·d)
+        p["draft_proj"] = dense_init(ks[5], d_h, d_model, jnp.float32)
+    return p
+
+
+def init_draft_head(key, params: dict, d_model: int) -> dict:
+    """Attach a tied-embedding draft head to an existing (trained) hash fn —
+    lets cached predictor checkpoints gain speculative decode without
+    retraining the router heads."""
+    d_h = params["attn_q"].shape[0]
+    return {**params, "draft_proj": dense_init(key, d_h, d_model, jnp.float32)}
+
+
+def draft_logits_from_state(params: dict, z: Array, embed_table: Array) -> Array:
+    """z [..., d_h] predictor state -> next-token logits [..., V] through the
+    tied embedding (z @ draft_proj gives a d_model query; the embedding table
+    is the output matrix, exactly like a tied-softmax LM head)."""
+    q = z @ params["draft_proj"]                          # [..., d_model]
+    return q @ embed_table.astype(jnp.float32).T
 
 
 def hash_fn_apply(params: dict, emb: Array, num_experts: int,
-                  use_pallas: bool = False, causal: bool = False) -> Array:
+                  use_pallas: bool = False, causal: bool = False,
+                  embed_table: Optional[Array] = None):
     """emb: [B, S, d_model] token embeddings -> logits [B, S, L_moe, E].
 
     causal=True masks the SparseMax attention to the past — train with it
     when the predictor will run incrementally at decode time
     (core/decode_engine.py); the default bidirectional form is the paper's
     full-batch look-ahead setting.
+
+    With `embed_table` (and a draft head in `params`) additionally returns
+    tied-embedding next-token draft logits [B, S, V] — the full-sequence
+    (training) view of what `hash_fn_step` emits incrementally at decode.
     """
     E = num_experts
     L = params["heads"].shape[-1] // E
@@ -151,7 +180,10 @@ def hash_fn_apply(params: dict, emb: Array, num_experts: int,
     # residual: the current token is always the most crucial (paper §3.4.2)
     z = a + h
     logits = z @ params["heads"]
-    return logits.reshape(*emb.shape[:2], L, E)
+    logits = logits.reshape(*emb.shape[:2], L, E)
+    if embed_table is not None and "draft_proj" in params:
+        return logits, draft_logits_from_state(params, z, embed_table)
+    return logits
 
 
 def hash_fn_param_count(params: dict) -> int:

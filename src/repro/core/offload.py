@@ -42,6 +42,21 @@ Array = jax.Array
 EXPERT_TENSORS = ("w_in", "w_gate", "w_out")
 
 
+@jax.jit
+def _translate_dev(trans: Array, ids: Array, w: Array) -> Tuple[Array, Array]:
+    """Device-side expert->slot translation (see ExpertStore.translate for
+    the semantics, including per-token miss renormalization). trans [L, E],
+    ids/w [L, B, S, k] -> (slot_ids int32, weights f32), all on device."""
+    L = ids.shape[0]
+    slots = jnp.take_along_axis(trans, ids.reshape(L, -1), axis=1).reshape(ids.shape)
+    wz = w.astype(jnp.float32)
+    masked = wz * (slots >= 0)
+    orig = wz.sum(axis=-1, keepdims=True)
+    surv = masked.sum(axis=-1, keepdims=True)
+    scale = jnp.where(surv > 0, orig / jnp.maximum(surv, 1e-12), 1.0)
+    return jnp.maximum(slots, 0).astype(jnp.int32), masked * scale
+
+
 @partial(jax.jit, donate_argnums=(0,))
 def _slot_write(buf: Array, g: Array, slots: Array, w: Array) -> Array:
     """buf [G,S,...] <- w [n,...] at (g[n], slots[n]); donated => in-place."""
@@ -577,6 +592,15 @@ class ExpertStore:
         scale = np.where(surv > 0, orig / np.maximum(surv, 1e-12), 1.0)
         w = w * scale
         return np.maximum(slots, 0).astype(np.int32), w.astype(np.float32)
+
+    def translate_device(self, ids: Array, w: Array, trans: np.ndarray):
+        """Device-side `translate`: consumes the predictor's still-on-device
+        ids/α [L, B, S, k] plus the (host-planned) translation table and
+        returns device (slot_ids, weights). The decode hot loop uses this so
+        the only per-step D2H sync left is the ids copy planning itself
+        needs — the slot gather, miss renormalization, and the re-upload of
+        [L, B, S, k] overrides all stay on device."""
+        return _translate_dev(jnp.asarray(trans), ids, w)
 
 
 # ---------------------------------------------------------------------------

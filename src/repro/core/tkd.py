@@ -101,6 +101,67 @@ def train_hash_fn(
     return params, history
 
 
+@partial(jax.jit, static_argnames=("num_experts", "opt_update"))
+def _draft_step(draft_p, opt_state, base_params, emb, embed_table,
+                teacher_lm_logits, num_experts, opt_update):
+    labels = jnp.argmax(teacher_lm_logits.astype(jnp.float32), axis=-1)  # [B,S]
+
+    def loss_fn(dp):
+        p = {**base_params, **dp}
+        _, draft = hash_fn_apply(
+            p, emb, num_experts=num_experts, causal=True,
+            embed_table=embed_table,
+        )
+        lp = jax.nn.log_softmax(draft, axis=-1)
+        ce = -jnp.take_along_axis(lp, labels[..., None], axis=-1).mean()
+        acc = (jnp.argmax(draft, -1) == labels).mean()
+        return ce, acc
+
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(draft_p)
+    draft_p, opt_state = opt_update(grads, draft_p, opt_state)
+    return draft_p, opt_state, loss, acc
+
+
+def train_draft_head(
+    params: dict,
+    embed_table,
+    batches: Iterator[Tuple[Array, Array]],  # (embeddings, teacher LM logits)
+    steps: int,
+    num_experts: int,
+    lr: float = 3e-3,
+    verbose: bool = False,
+):
+    """Distill the serving model's greedy next-token behaviour into the
+    tied-embedding draft head (speculative decode, beyond paper).
+
+    Only `draft_proj` trains — the router heads and LSTM trunk are frozen,
+    so a cached/distilled predictor keeps its expert hit rate bit-for-bit
+    while gaining a draft head on the same state. The teacher signal is the
+    model's own next-token argmax (hard-label CE): greedy speculative
+    acceptance only cares about matching the model's argmax, not its full
+    distribution."""
+    from repro.optim.adamw import adamw_init, adamw_update
+
+    assert "draft_proj" in params, "attach a draft head first (init_draft_head)"
+    draft_p = {"draft_proj": params["draft_proj"]}
+    base = {k: v for k, v in params.items() if k != "draft_proj"}
+    opt_state = adamw_init(draft_p)
+    update = partial(adamw_update, lr=lr, weight_decay=0.0)
+    history = []
+    for step in range(steps):
+        emb, teacher_lm = next(batches)
+        draft_p, opt_state, loss, acc = _draft_step(
+            draft_p, opt_state, base, emb, embed_table, teacher_lm,
+            num_experts, update,
+        )
+        if step % 50 == 0 or step == steps - 1:
+            history.append({"step": step, "loss": float(loss), "acc": float(acc)})
+            if verbose:
+                print(f"  draft step {step:4d}  ce={float(loss):.4f} "
+                      f"argmax_match={float(acc):.3f}")
+    return {**base, **draft_p}, history
+
+
 def evaluate_hash_fn(params, emb, teacher_logits, top: int = 3) -> Dict[str, float]:
     s = hash_fn_apply(params, emb, num_experts=teacher_logits.shape[-1])
     labels = jnp.argmax(jnp.moveaxis(teacher_logits, 0, 2), axis=-1)

@@ -57,7 +57,7 @@ def run_request_server(cfg, params, args) -> None:
 
     hp = init_hash_fn(
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
-        cfg.moe.num_experts, d_h=64,
+        cfg.moe.num_experts, d_h=64, draft=args.spec_mode == "draft",
     )
     buckets = [8]
     while buckets[-1] < args.seq:
@@ -72,6 +72,8 @@ def run_request_server(cfg, params, args) -> None:
         host_quant=args.host_quant,
         quantized_slots=args.quantized_slots,
         scale_granularity=args.scale_granularity,
+        spec_mode=args.spec_mode,
+        spec_k=args.spec_k,
     )
     rng = np.random.default_rng(0)
     reqs = poisson_requests(
@@ -83,7 +85,8 @@ def run_request_server(cfg, params, args) -> None:
     print(f"engine=server slots={args.slots} lanes={args.lanes} "
           f"eviction={args.eviction} rate={args.rate}rps "
           f"prefetch_depth={args.prefetch_depth} "
-          f"quantized_slots={args.quantized_slots}")
+          f"quantized_slots={args.quantized_slots} "
+          f"spec={args.spec_mode}/k{args.spec_k}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
@@ -117,6 +120,14 @@ def main():
     ap.add_argument("--scale-granularity", default="channel",
                     choices=["channel", "tensor"],
                     help="int8 scale granularity per expert tensor")
+    ap.add_argument("--spec-mode", default="off", choices=["off", "draft"],
+                    help="speculative decode: 'draft' unrolls the hash "
+                         "predictor's tied-embedding next-token head and "
+                         "verifies k tokens per step (request-server mode)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify step; the union "
+                         "of all k positions' predicted experts ships as "
+                         "one superset prefetch ticket")
     # request-server mode
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")

@@ -500,3 +500,110 @@ def decode_step(
     new_cache.update(new_entries)
     new_cache["pos"] = pos + 1
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# speculative verify: k-position decode with accept/reject rollback
+# ---------------------------------------------------------------------------
+
+
+def verify_step(
+    params: dict,
+    cache: dict,
+    tokens: Array,            # [B, kb]: col 0 = last accepted token, 1.. = draft
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    routing_override=None,    # (ids [kb, L_moe, B, k], w [kb, L_moe, B, k])
+    active: Optional[Array] = None,   # [B] bool; False => lane fully rolled back
+) -> Tuple[Array, Array, Array, dict]:
+    """Verify a speculative draft block in ONE jitted program.
+
+    Runs `kb` sequential `decode_step`s under `lax.scan` — the per-position
+    math (decode attention over the growing ring cache, MoE with the
+    position's routing override) is exactly the vanilla one-token step, so
+    greedy outputs are bit-identical to `kb` separate decode_step dispatches;
+    only the Python/jit round trips collapse from 2·kb to 1.
+
+    Acceptance: position 0's input is the real last token, so its argmax is
+    always emitted; position i>0 consumed draft token `tokens[:, i]`, so its
+    output counts only while every earlier draft token matched the model's
+    argmax. `n_acc ∈ [1, kb]` per lane (0 for inactive lanes).
+
+    Rollback restores the cache to "only the accepted prefix ran":
+      * ring K/V — position i wrote slot (pos+i) % Sc; rejected positions'
+        slots are restored from the pre-verify cache (requires kb <= Sc so
+        block positions never collide in the ring);
+      * recurrent states (mamba/xLSTM entries) — the scan stacks each
+        position's post-update state and the lane selects position
+        n_acc-1's snapshot;
+      * pos advances by n_acc.
+
+    Returns (out_tokens [B, kb], n_acc [B], logits [kb, B, V], new_cache).
+    """
+    B, kb = tokens.shape
+    for skey in (k for k in cache if k.startswith("sub")):
+        if "k" in cache[skey]:
+            assert cache[skey]["k"].shape[2] >= kb, (
+                f"draft window {kb} exceeds {skey}'s ring cache "
+                f"({cache[skey]['k'].shape[2]} slots)"
+            )
+    orig = cache
+    pos0 = cache["pos"]
+    state_subs = [k for k in cache if k.startswith("sub") and "state" in cache[k]]
+
+    def body(c, xs):
+        if routing_override is not None:
+            tok, ro_ids, ro_w = xs
+            ro = (ro_ids, ro_w)
+        else:
+            tok = xs
+            ro = None
+        logits, c = decode_step(params, c, tok, cfg, ctx, routing_override=ro)
+        snap = {sk: c[sk]["state"] for sk in state_subs}
+        return c, (jnp.argmax(logits, -1).astype(jnp.int32), logits, snap)
+
+    toks_t = jnp.moveaxis(tokens, 1, 0)                   # [kb, B]
+    xs = toks_t if routing_override is None else (
+        toks_t, routing_override[0], routing_override[1]
+    )
+    scanned, (out_t, logits, snaps) = jax.lax.scan(body, cache, xs)
+    out = jnp.moveaxis(out_t, 0, 1)                       # [B, kb]
+
+    # longest accepted prefix: 1 (position 0 is real) + leading draft matches
+    # (kb == 1 degenerates to the vanilla step: the empty cumprod sums to 0)
+    match = (out[:, : kb - 1] == tokens[:, 1:]).astype(jnp.int32)
+    n_acc = (1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)).astype(jnp.int32)
+    if active is not None:
+        n_acc = jnp.where(active, n_acc, 0)
+
+    i_idx = jnp.arange(kb)
+    rejected = i_idx[None, :] >= n_acc[:, None]           # [B, kb]
+    bidx = jnp.arange(B)
+    new_cache = dict(scanned)
+    for skey in (k for k in cache if k.startswith("sub")):
+        entry = dict(new_cache[skey])
+        if "k" in entry:
+            Sc = entry["k"].shape[2]
+            slots = (pos0[:, None] + i_idx[None, :]) % Sc  # [B, kb]
+            restore = (
+                jnp.zeros((B, Sc), jnp.int32)
+                .at[bidx[:, None], slots]
+                .add(rejected.astype(jnp.int32))
+            ) > 0                                          # [B, Sc]
+            m = restore[None, :, :, None, None]
+            entry["k"] = jnp.where(m, orig[skey]["k"], entry["k"])
+            entry["v"] = jnp.where(m, orig[skey]["v"], entry["v"])
+        if "state" in entry:
+            sel_i = jnp.maximum(n_acc - 1, 0)
+
+            def sel(stk, og):
+                # stk [kb, G, B, ...] per-position snapshots; og [G, B, ...]
+                s2 = jnp.moveaxis(stk, 2, 0)               # [B, kb, G, ...]
+                chosen = jnp.moveaxis(s2[bidx, sel_i], 0, 1)
+                keep = (n_acc > 0).reshape(1, B, *([1] * (og.ndim - 2)))
+                return jnp.where(keep, chosen, og)
+
+            entry["state"] = jax.tree.map(sel, snaps[skey], orig[skey]["state"])
+        new_cache[skey] = entry
+    new_cache["pos"] = pos0 + n_acc
+    return out, n_acc, logits, new_cache

@@ -28,6 +28,13 @@ to the shared store: the hash-ahead thread becomes the prefetch *producer*
 fire-and-forget warming prefetch), prefill and decode ticks go through
 tickets whose ready fences replace inline uploads, and the scheduler's
 cache-affinity score credits uploads still in flight.
+
+With `spec_mode="draft"` decode ticks run speculatively: the predictor's
+tied-embedding draft head proposes `spec_k` tokens per lane, ONE superset
+prefetch ticket covers every draft position's predicted experts, and a
+single jitted k-position verify accepts a per-lane prefix — lanes at mixed
+positions accept different amounts, which continuous batching already
+handles (see docs/ARCHITECTURE.md, "Speculative decode").
 """
 from __future__ import annotations
 
@@ -40,12 +47,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.decode_engine import hash_fn_step, hash_state_init
+from repro.core.decode_engine import (
+    draft_unroll_fn,
+    hash_fn_step,
+    hash_state_init,
+    select_accepted_state,
+)
 from repro.core.engine import SiDAEngine
 from repro.core.hash_table import HashTable
 from repro.core.offload import ExpertStore, PrefetchPipeline
 from repro.models.attention import ShardingCtx
-from repro.models.transformer import decode_step, init_cache, n_moe_layers
+from repro.models.transformer import (
+    decode_step,
+    init_cache,
+    n_moe_layers,
+    verify_step,
+)
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import DEFAULT_BUCKETS, LaneTable, Scheduler
 from repro.serving.telemetry import Telemetry
@@ -87,6 +104,8 @@ class RequestServer:
         staging_buffers: Optional[int] = None,
         quantized_slots: Optional[bool] = None,
         scale_granularity: Optional[str] = None,
+        spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
+        spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
@@ -94,6 +113,15 @@ class RequestServer:
         )
         self.cfg = cfg
         self.ctx = ctx
+        mode = spec_mode if spec_mode is not None else cfg.spec.mode
+        assert mode in ("off", "draft"), mode
+        self.spec_k = spec_k if spec_k is not None else cfg.spec.k
+        self.spec = mode == "draft" and self.spec_k > 1
+        if self.spec:
+            assert "draft_proj" in hash_params, (
+                "spec_mode='draft' needs a hash function with a draft head "
+                "(init_hash_fn(draft=True) or init_draft_head)"
+            )
         self.store = ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
@@ -139,6 +167,7 @@ class RequestServer:
         self.lane_tokens = np.zeros((max_lanes,), np.int32)
         self._active = np.zeros((max_lanes,), bool)
         self._pending_pred = None  # (ids, alpha, active, ticket) for next tick
+        self._pending_spec = None  # pre-unrolled draft block for next spec tick
         self._step = 0
         self._t0 = time.perf_counter()  # rebased at run(); fallback for direct use
         self.completed: List[Request] = []
@@ -210,10 +239,31 @@ class RequestServer:
             )
             return new_cache, new_hstate
 
+        @jax.jit
+        def _verify_masked(
+            serve_params, cache, tokens_blk, slot_ids, w, active,
+            states, hstate_old,
+        ):
+            out, n_acc, logits, new_cache = verify_step(
+                serve_params, cache, tokens_blk, cfg_, ctx_,
+                routing_override=(slot_ids, w), active=active,
+            )
+            # per-lane predictor rollback: state after the last accepted
+            # input; inactive lanes (n_acc == 0) keep their old state
+            hstate = select_accepted_state(states, n_acc, hstate_old)
+            return out, n_acc, logits, new_cache, hstate
+
         self._hash_prefill = _hash_prefill
         self._predict_masked = _predict_masked
         self._decode_masked = _decode_masked
         self._seed_lanes = _seed_lanes
+        # one shared unroll definition with the decode engine (the lane
+        # mask is the only delta) so the draft recurrence cannot drift
+        # between the two greedy-equivalent consumers
+        self._spec_unroll_masked = jax.jit(
+            draft_unroll_fn(E, k, self.spec_k)
+        )
+        self._verify_masked = _verify_masked
 
     # ------------------------------------------------------------------
     # hash-ahead admission
@@ -316,7 +366,126 @@ class RequestServer:
         )
         return np.asarray(ids), np.asarray(alpha)
 
+    def _spec_tick(self, now: float) -> None:
+        """Speculative continuous-batch step: draft K tokens per lane, ship
+        ONE superset prefetch ticket for all K positions' predicted experts,
+        verify the block in a single jitted k-position decode, and emit each
+        lane's accepted prefix — lanes at mixed positions accept different
+        amounts, so the continuous batch stays continuous."""
+        active = self._active.copy()
+        act_dev = jnp.asarray(active)
+        unrolled = ticket = stale_ticket = None
+        if self._pending_spec is not None:
+            # the draft block (and its superset ticket) were pre-submitted at
+            # the end of the previous tick — the transfers overlapped the
+            # prefill forwards / scheduling that ran in between. A lane that
+            # joined since then invalidates the pre-unroll (its token and
+            # predictor state were reseeded), so redo it urgently — but keep
+            # the stale ticket alive until after the verify: the surviving
+            # lanes' predictions are unchanged, so its in-flight uploads are
+            # exactly what the redone submit would re-request, and holding
+            # the protection lets the new plan fence on them instead of
+            # re-issuing the transfers.
+            p_unrolled, pred_active, p_ticket = self._pending_spec
+            self._pending_spec = None
+            if (active & ~pred_active).any():
+                stale_ticket = p_ticket
+            else:
+                unrolled, ticket = p_unrolled, p_ticket
+        if unrolled is None:
+            inputs, ids, alpha, states = self._spec_unroll_masked(
+                self.hash_params, self.embed_table,
+                jnp.asarray(self.lane_tokens), self.hstate, act_dev,
+            )
+            ids_np = np.asarray(ids)                       # [L, B, K, k]
+            alpha_np = np.asarray(alpha)
+        else:
+            inputs, ids, alpha, states, ids_np, alpha_np = unrolled
+        if self.prefetch is not None:
+            if ticket is None:
+                # one multi-token ticket: the union over all K draft
+                # positions of every active lane — a strict superset of
+                # each per-step ticket
+                ticket = self.prefetch.submit(HashTable(
+                    self._step, ids_np[:, active], alpha_np[:, active]
+                ))
+            with self.telemetry.timer("prefetch_fence_s"):
+                ticket.wait()
+            trans = ticket.trans
+        else:
+            trans = self.store.prepare(HashTable(
+                self._step, ids_np[:, active], alpha_np[:, active]
+            ))
+        slot_ids, w = self.store.translate_device(ids, alpha, trans)
+        out_blk, n_acc, logits, self.cache, self.hstate = self._verify_masked(
+            self.store.serve_params, self.cache, inputs,
+            jnp.moveaxis(slot_ids, 2, 0), jnp.moveaxis(w, 2, 0), act_dev,
+            states, self.hstate,
+        )
+        out_np = np.asarray(out_blk)    # forces the step; slots consumed
+        n_np = np.asarray(n_acc)
+        if ticket is not None:
+            ticket.release()
+        if stale_ticket is not None:
+            stale_ticket.release()
+        logits_np = (
+            np.asarray(logits) if self.keep_decode_logits else None
+        )  # [K, B, V]
+        self._step += 1
+        n_active = int(active.sum())
+        self.telemetry.counter("decode_steps").inc()
+        self.telemetry.counter("spec_verify_steps").inc()
+        self.telemetry.counter("spec_proposed_tokens").inc(self.spec_k * n_active)
+
+        emitted = 0
+        for lane in self.lanes.active():
+            if not active[lane]:
+                continue  # joined after this tick's snapshot
+            req = self.lanes.requests[lane]
+            for i in range(int(n_np[lane])):
+                req.emit(int(out_np[lane, i]))
+                emitted += 1
+                if logits_np is not None:
+                    if req.decode_logits is None:
+                        req.decode_logits = []
+                    req.decode_logits.append(logits_np[i, lane].copy())
+                self.lane_tokens[lane] = out_np[lane, i]
+                self.telemetry.counter("tokens_generated").inc()
+                if req.finished():
+                    self._finish(lane)
+                    break
+        # accepted counts what was actually DELIVERED: a lane whose request
+        # finished mid-block drops the rest of its accepted prefix, and
+        # counting those would over-report acceptance vs tokens_generated
+        # (and vs the engine-side DecodeMetrics, which truncates the same way)
+        self.telemetry.counter("spec_accepted_tokens").inc(float(emitted))
+        if n_active:
+            self.telemetry.histogram("accepted_per_step").observe(
+                emitted / n_active
+            )
+
+        # pipeline the next block: the accepted tokens and rolled-back
+        # predictor state are final, so the next draft unroll (and its
+        # superset ticket's uploads) can overlap whatever runs between
+        # ticks — mirrors the vanilla tick's pre-predict
+        if self.prefetch is not None and self._active.any():
+            nxt = self._active.copy()
+            n_inp, n_ids, n_alpha, n_states = self._spec_unroll_masked(
+                self.hash_params, self.embed_table,
+                jnp.asarray(self.lane_tokens), self.hstate, jnp.asarray(nxt),
+            )
+            n_ids_np, n_alpha_np = np.asarray(n_ids), np.asarray(n_alpha)
+            tkt = self.prefetch.submit(HashTable(
+                self._step, n_ids_np[:, nxt], n_alpha_np[:, nxt]
+            ))
+            self._pending_spec = (
+                (n_inp, n_ids, n_alpha, n_states, n_ids_np, n_alpha_np),
+                nxt, tkt,
+            )
+
     def _decode_tick(self, now: float) -> None:
+        if self.spec:
+            return self._spec_tick(now)
         active = self._active.copy()
         ticket = None
         if self._pending_pred is not None:
@@ -461,7 +630,12 @@ class RequestServer:
                         # keeps them behind the tick's own urgent uploads
                         pf_ticket = self.prefetch.submit(pf_table, priority=1)
                 if self._active.any():
-                    self._decode_tick(now)
+                    # timed so summaries can report decode-phase throughput
+                    # (tokens per second spent inside decode ticks) — the
+                    # quantity speculative decode optimizes, separated from
+                    # admission/prefill/scheduling wall time
+                    with self.telemetry.timer("decode_tick_s"):
+                        self._decode_tick(now)
                     progressed = True
                 if batch:
                     self._prefill_and_join(
@@ -515,11 +689,27 @@ class RequestServer:
         if self.prefetch is not None:
             stall += self.prefetch.stats.stall_s
             overlap = self.prefetch.stats.overlap_s
+        acc_hist = t.histogram("accepted_per_step")
+        tick_s = t.counter("decode_tick_s_total").value
         return {
             "completed": t.counter("requests_completed").value,
             "rejected": t.counter("requests_rejected").value,
             "deadline_miss": t.counter("deadline_miss").value,
             "throughput_tok_s": toks / wall if wall else 0.0,
+            # decode-phase throughput: generated tokens per second of decode
+            # ticks — excludes admission/prefill/scheduling wall time, so it
+            # isolates the hot loop (and is far less noisy on shared hosts)
+            "decode_tok_s": (
+                t.counter("tokens_generated").value / tick_s if tick_s else 0.0
+            ),
+            "spec_k": float(self.spec_k if self.spec else 0),
+            # 0.0 when spec is off: no positions were ever proposed
+            "spec_acceptance_rate": t.ratio(
+                "spec_accepted_tokens", "spec_proposed_tokens"
+            ),
+            "spec_accepted_per_step": (
+                sum(acc_hist.samples) / acc_hist.count if acc_hist.count else 0.0
+            ),
             "p50_latency_s": lat.percentile(50),
             "p95_latency_s": lat.percentile(95),
             "p99_latency_s": lat.percentile(99),

@@ -91,6 +91,13 @@ class Telemetry:
     def wall_s(self) -> float:
         return time.perf_counter() - self._t0
 
+    def ratio(self, num: str, den: str) -> float:
+        """Counter ratio with a zero-denominator guard — acceptance rate
+        (spec_accepted_tokens / spec_proposed_tokens), hit rates, and any
+        other derived fraction the summaries report."""
+        d = self.counter(den).value
+        return self.counter(num).value / d if d else 0.0
+
     @contextlib.contextmanager
     def timer(self, name: str):
         """Time a block into histogram `name` and accumulate the total into

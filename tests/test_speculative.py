@@ -1,0 +1,331 @@
+"""Speculative decode differentials + superset-ticket properties.
+
+Greedy equivalence is the hard invariant: with every predicted expert
+resident, the speculative engine must emit token-for-token the same output
+as vanilla greedy decode — `verify_step` IS k sequential decode_steps under
+one jit, so any divergence is a bug, not a tolerance question. Covered for
+sync and async prefetch and for fp and int8-resident slots, at the engine
+and at the continuous-batching request server (per-lane acceptance at mixed
+positions). `verify_step`'s rollback is checked directly against running
+only the accepted prefix, including recurrent (mamba) state rollback on a
+hybrid arch, and a hypothesis property pins the superset-ticket claim: the
+k-step ticket's expert set always contains each per-step ticket's set.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.decode_engine import SiDADecodeEngine
+from repro.core.hash_fn import init_draft_head, init_hash_fn
+from repro.core.hash_table import HashTable
+from repro.models.attention import ShardingCtx
+from repro.models.transformer import (
+    decode_step,
+    init_cache,
+    init_params,
+    n_moe_layers,
+    verify_step,
+)
+
+CTX = ShardingCtx()
+
+
+def _sys(E=8, seed=0):
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, num_experts=E))
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg), E,
+        d_h=16, draft=True,
+    )
+    return cfg, params, hp
+
+
+# ---------------------------------------------------------------------------
+# greedy-equivalence differentials
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefetch_depth", [0, 2])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_spec_equals_vanilla_greedy(prefetch_depth, quantized):
+    """Spec output == vanilla greedy output, byte for byte, with all
+    predicted experts resident (slots == E), across sync/async prefetch and
+    fp/int8-resident slots."""
+    cfg, params, hp = _sys()
+    E = cfg.moe.num_experts
+    start = np.arange(3, dtype=np.int32) + 1
+    steps = 10
+
+    van = SiDADecodeEngine(
+        cfg, params, hp, slots_per_layer=E, serve_top_k=1,
+        prefetch_depth=prefetch_depth, quantized_slots=quantized,
+    )
+    out_ref, m_ref = van.generate(start, steps=steps, cache_len=32)
+    van.close()
+
+    spec = SiDADecodeEngine(
+        cfg, params, hp, slots_per_layer=E, serve_top_k=1,
+        prefetch_depth=prefetch_depth, quantized_slots=quantized,
+        spec_mode="draft", spec_k=3,
+    )
+    out_spec, m_spec = spec.generate(start, steps=steps, cache_len=32)
+    spec.close()
+
+    np.testing.assert_array_equal(out_ref, out_spec)
+    assert m_ref.tokens == start.shape[0] * steps
+    assert m_spec.tokens == start.shape[0] * steps
+
+
+def test_decode_metrics_count_accepted_tokens():
+    """tokens counts *accepted* (emitted) tokens — never B·steps·k — and
+    loads are attributed one entry per verify block."""
+    cfg, params, hp = _sys()
+    start = np.arange(2, dtype=np.int32) + 1
+    steps, K = 9, 3
+
+    van = SiDADecodeEngine(cfg, params, hp, slots_per_layer=4, serve_top_k=1)
+    _, m = van.generate(start, steps=steps, cache_len=32)
+    assert m.tokens == m.proposed == 2 * steps
+    assert m.steps == steps
+    assert m.acceptance_rate == 1.0
+    assert len(m.loads_per_step) == m.steps
+    assert m.accepted_per_step == [1.0] * steps
+
+    spec = SiDADecodeEngine(
+        cfg, params, hp, slots_per_layer=cfg.moe.num_experts, serve_top_k=1,
+        spec_mode="draft", spec_k=K,
+    )
+    _, ms = spec.generate(start, steps=steps, cache_len=32)
+    assert ms.tokens == 2 * steps          # exactly what was emitted
+    assert ms.proposed == 2 * K * ms.steps  # every position verified counts
+    assert ms.tokens <= ms.proposed
+    assert len(ms.loads_per_step) == ms.steps == len(ms.accepted_per_step)
+    assert 0.0 < ms.acceptance_rate <= 1.0
+
+
+@pytest.mark.parametrize("prefetch_depth", [0, 2])
+def test_server_spec_matches_vanilla_server(prefetch_depth):
+    """Continuous-batching server: speculative mode emits identical token
+    streams per request, with lanes at staggered positions accepting
+    different amounts per tick. depth=2 exercises the pipelined pre-unroll
+    (next block's superset ticket submitted at the end of each tick, redone
+    urgently when lanes join in between)."""
+    from repro.serving import Request, RequestServer
+
+    cfg, params, hp = _sys()
+    E = cfg.moe.num_experts
+
+    def mkreqs():
+        rng = np.random.default_rng(5)
+        plens, gens = [5, 9, 13], [7, 5, 4]
+        return [
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, (p,)).astype(np.int32),
+                max_new_tokens=g,
+            )
+            for i, (p, g) in enumerate(zip(plens, gens))
+        ]
+
+    outs = {}
+    for name, kw in (("off", {}), ("spec", dict(spec_mode="draft", spec_k=4))):
+        srv = RequestServer(
+            cfg, params, hp, slots_per_layer=E, max_lanes=3,
+            max_prefill_batch=2, buckets=(8, 16), cache_len=32,
+            prefetch_depth=prefetch_depth, **kw,
+        )
+        srv.run(mkreqs(), realtime=False)
+        srv.close()
+        assert len(srv.completed) == 3
+        outs[name] = {r.rid: list(r.generated) for r in srv.completed}
+        if name == "spec":
+            s = srv.summary()
+            assert s["spec_k"] == 4
+            assert 0.0 < s["spec_acceptance_rate"] <= 1.0
+            assert s["spec_accepted_per_step"] >= 1.0
+    assert outs["off"] == outs["spec"]
+
+
+# ---------------------------------------------------------------------------
+# verify_step rollback
+# ---------------------------------------------------------------------------
+
+
+def _routing_for(cfg, store, hp, params, tokens_blk):
+    """Per-position routing overrides for a draft block via the store's
+    device translate (all experts resident, so weights == α exactly)."""
+    from repro.core.decode_engine import hash_fn_step, hash_state_init
+
+    B, kb = tokens_blk.shape
+    E = cfg.moe.num_experts
+    state = hash_state_init(hp, B)
+    ids_l, a_l = [], []
+    for i in range(kb):
+        emb = jnp.take(params["embed"], jnp.asarray(tokens_blk[:, i]), axis=0)
+        logits, state = hash_fn_step(hp, emb, state, E)
+        vals, ids = jax.lax.top_k(logits, 1)
+        ids_l.append(jnp.moveaxis(ids, 1, 0))
+        a_l.append(jnp.moveaxis(jax.nn.softmax(vals, -1), 1, 0))
+    ids = jnp.stack(ids_l, axis=2)                      # [L, B, kb, 1]
+    alpha = jnp.stack(a_l, axis=2)
+    table = HashTable(0, np.asarray(ids), np.asarray(alpha))
+    trans = store.prepare(table)
+    slot_ids, w = store.translate_device(ids, alpha, trans)
+    return jnp.moveaxis(slot_ids, 2, 0), jnp.moveaxis(w, 2, 0)
+
+
+def test_verify_step_rollback_matches_accepted_prefix():
+    """new_cache after verify == cache after running ONLY the accepted
+    prefix through vanilla decode_step (ring K/V slots of rejected positions
+    restored exactly, pos advanced by n_acc)."""
+    from repro.core.offload import ExpertStore
+
+    cfg, params, hp = _sys()
+    E = cfg.moe.num_experts
+    store = ExpertStore(cfg, params, slots_per_layer=E)
+    B, kb = 2, 4
+    rng = np.random.default_rng(3)
+    # draft tokens are arbitrary (not the model's argmax) => forced rejects
+    blk = rng.integers(0, cfg.vocab_size, (B, kb)).astype(np.int32)
+    ro = _routing_for(cfg, store, hp, params, blk)
+
+    cache0 = init_cache(cfg, B, 16)
+    out, n_acc, logits, new_cache = verify_step(
+        store.serve_params, cache0, jnp.asarray(blk), cfg, CTX,
+        routing_override=ro,
+    )
+    out, n_acc = np.asarray(out), np.asarray(n_acc)
+    assert logits.shape[0] == kb
+    # recompute expected acceptance on host
+    for b in range(B):
+        exp = 1
+        while exp < kb and out[b, exp - 1] == blk[b, exp]:
+            exp += 1
+        assert n_acc[b] == exp
+
+    # reference: per-lane replay of only the accepted prefix
+    ref_cache = init_cache(cfg, B, 16)
+    for i in range(int(n_acc.max())):
+        _, stepped = decode_step(
+            store.serve_params, ref_cache, jnp.asarray(blk[:, i]), cfg, CTX,
+            routing_override=(ro[0][i], ro[1][i]),
+        )
+        act = jnp.asarray(i < n_acc)
+
+        def merge(nw, od):
+            if nw.ndim >= 2 and nw.shape[1] == B:   # [G, B, ...] entries
+                m = act.reshape((1, B) + (1,) * (nw.ndim - 2))
+            else:                                    # pos is [B]
+                m = act
+            return jnp.where(m, nw, od)
+
+        ref_cache = jax.tree.map(merge, stepped, ref_cache)
+    for a, b in zip(jax.tree.leaves(ref_cache), jax.tree.leaves(new_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_step_recurrent_state_rollback():
+    """Hybrid arch (mamba branch): rejected positions' recurrent state
+    updates roll back to the snapshot after the accepted prefix. No MoE =>
+    no routing override; drafts are deliberately wrong."""
+    cfg = get_config("hymba-1.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, kb = 2, 3
+    rng = np.random.default_rng(7)
+    blk = rng.integers(0, cfg.vocab_size, (B, kb)).astype(np.int32)
+
+    cache0 = init_cache(cfg, B, 16)
+    out, n_acc, _, new_cache = verify_step(
+        params, cache0, jnp.asarray(blk), cfg, CTX,
+    )
+    out, n_acc = np.asarray(out), np.asarray(n_acc)
+
+    ref_cache = init_cache(cfg, B, 16)
+    for i in range(int(n_acc.max())):
+        _, stepped = decode_step(
+            params, ref_cache, jnp.asarray(blk[:, i]), cfg, CTX,
+        )
+        act = jnp.asarray(i < n_acc)
+
+        def merge(nw, od):
+            if nw.ndim >= 2 and nw.shape[1] == B:
+                m = act.reshape((1, B) + (1,) * (nw.ndim - 2))
+            else:  # pos is [B]
+                m = act
+            return jnp.where(m, nw, od)
+
+        ref_cache = jax.tree.map(merge, stepped, ref_cache)
+    for a, b in zip(jax.tree.leaves(ref_cache), jax.tree.leaves(new_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_step_inactive_lane_fully_rolled_back():
+    """active=False => n_acc == 0, pos unchanged, cache bit-identical."""
+    cfg, params, hp = _sys()
+    from repro.core.offload import ExpertStore
+
+    store = ExpertStore(cfg, params, slots_per_layer=cfg.moe.num_experts)
+    B, kb = 2, 3
+    rng = np.random.default_rng(11)
+    blk = rng.integers(0, cfg.vocab_size, (B, kb)).astype(np.int32)
+    ro = _routing_for(cfg, store, hp, params, blk)
+    cache0 = init_cache(cfg, B, 16)
+    active = jnp.asarray(np.array([True, False]))
+    _, n_acc, _, new_cache = verify_step(
+        store.serve_params, cache0, jnp.asarray(blk), cfg, CTX,
+        routing_override=ro, active=active,
+    )
+    n_acc = np.asarray(n_acc)
+    assert n_acc[1] == 0 and n_acc[0] >= 1
+    assert np.asarray(new_cache["pos"])[1] == 0
+    for a, b in zip(jax.tree.leaves(cache0), jax.tree.leaves(new_cache)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.ndim >= 2 and a.shape[1] == B:
+            np.testing.assert_array_equal(a[:, 1], b[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# superset-ticket property
+# ---------------------------------------------------------------------------
+
+
+def test_superset_ticket_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        data=st.data(),
+        L=st.integers(1, 3),
+        B=st.integers(1, 3),
+        K=st.integers(1, 5),
+        topk=st.integers(1, 3),
+    )
+    def prop(data, L, B, K, topk):
+        ids = data.draw(
+            st.lists(
+                st.integers(0, 7), min_size=L * B * K * topk,
+                max_size=L * B * K * topk,
+            )
+        )
+        ids = np.asarray(ids, np.int32).reshape(L, B, K, topk)
+        w = np.abs(np.asarray(
+            data.draw(st.lists(
+                st.floats(0, 1, allow_nan=False),
+                min_size=L * B * K * topk, max_size=L * B * K * topk,
+            )), np.float32,
+        )).reshape(L, B, K, topk)
+        union = HashTable(0, ids, w)
+        for i in range(K):
+            step = HashTable(0, ids[:, :, i : i + 1], w[:, :, i : i + 1])
+            for l in range(L):
+                assert set(step.active_experts(l)) <= set(
+                    union.active_experts(l)
+                ), (i, l)
+
+    prop()
