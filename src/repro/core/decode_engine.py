@@ -30,7 +30,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.hash_fn import draft_logits_from_state, sparsemax
 from repro.core.hash_table import HashTable
-from repro.core.offload import ExpertStore, PrefetchPipeline
+from repro.core.offload import ExpertStore, PrefetchPipeline, ShardedStoreConfig
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import decode_step, init_cache, n_moe_layers, verify_step
 
@@ -257,6 +257,7 @@ class SiDADecodeEngine:
         scale_granularity: Optional[str] = None,
         spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
         spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
+        sharded: Optional[ShardedStoreConfig] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
@@ -274,6 +275,7 @@ class SiDADecodeEngine:
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
+            sharded=sharded, mesh=ctx.mesh,
         )
         self._owns_prefetcher = False
         if prefetcher is not None:

@@ -27,7 +27,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.hash_fn import hash_fn_apply, predict_topk
 from repro.core.hash_table import HashTable, HashTableQueue
-from repro.core.offload import ExpertStore, PrefetchPipeline, PrefetchTicket
+from repro.core.offload import (
+    ExpertStore,
+    PrefetchPipeline,
+    PrefetchTicket,
+    ShardedStoreConfig,
+)
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import forward, n_moe_layers
 
@@ -76,17 +81,22 @@ class SiDAEngine:
         prefetcher: Optional[PrefetchPipeline] = None,
         quantized_slots: Optional[bool] = None,
         scale_granularity: Optional[str] = None,
+        sharded: Optional["ShardedStoreConfig"] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx
         self.k = serve_top_k or cfg.moe.top_k
         self.hash_params = hash_params
         # a caller-supplied store lets prefill and decode engines share one
-        # device slot cache (the request server runs both against it)
+        # device slot cache (the request server runs both against it).
+        # `sharded` partitions the slot pools expert-parallel over ctx's
+        # mesh (see ShardedStoreConfig) — the forward then takes the
+        # shard_map EP dispatch automatically.
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer,
             host_quant=host_quant, spill_dir=spill_dir, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
+            sharded=sharded, mesh=ctx.mesh,
         )
         # async prefetch: explicit args > cfg.prefetch knobs > off. A
         # caller-supplied pipeline (the request server's) is shared as-is.

@@ -26,7 +26,6 @@ import sys
 import threading
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import jax
@@ -40,6 +39,43 @@ from repro.models.transformer import n_moe_layers, period, sub_kind
 Array = jax.Array
 
 EXPERT_TENSORS = ("w_in", "w_gate", "w_out")
+
+
+@dataclass(frozen=True)
+class ShardedStoreConfig:
+    """Expert-parallel partitioning of the serving slot pools.
+
+    With `ep_shards` > 1 every (group, sub) slot pool is split into
+    `ep_shards` per-shard partitions: each expert has a fixed *home shard*
+    (`placement`) and may only occupy slots in that shard's contiguous slot
+    range, with its own per-shard eviction policy, free list, and pinning
+    protection. Slot ids stay *global* (`shard * slots_per_shard + local`),
+    so the translation tables, tickets, and routing overrides the engines
+    already exchange keep working unchanged — the expert-parallel dispatch
+    derives each shard's local (id, slot) pairs from the global id's range.
+
+    When a `mesh` is attached to the store, the device slot-pool arrays are
+    placed with the slot dim sharded over `model_axis` (see
+    `sharding/policy.py::slot_pool_spec`), which is exactly the layout the
+    shard_map expert dispatch consumes without any resharding collective.
+    """
+
+    ep_shards: int = 1
+    model_axis: str = "model"
+    placement: str = "mod"            # "mod": e -> e % shards | "block": e -> e // (E/shards)
+
+    @property
+    def enabled(self) -> bool:
+        return self.ep_shards > 1
+
+    def home_shards(self, num_experts: int) -> np.ndarray:
+        """[E] expert -> home shard under the configured placement."""
+        e = np.arange(num_experts)
+        if self.placement == "block":
+            blk = max(num_experts // self.ep_shards, 1)
+            return np.minimum(e // blk, self.ep_shards - 1).astype(np.int32)
+        assert self.placement == "mod", self.placement
+        return (e % self.ep_shards).astype(np.int32)
 
 
 @jax.jit
@@ -57,14 +93,12 @@ def _translate_dev(trans: Array, ids: Array, w: Array) -> Tuple[Array, Array]:
     return jnp.maximum(slots, 0).astype(jnp.int32), masked * scale
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _slot_write(buf: Array, g: Array, slots: Array, w: Array) -> Array:
-    """buf [G,S,...] <- w [n,...] at (g[n], slots[n]); donated => in-place."""
+def _pool_set(buf: Array, g: Array, slots: Array, w: Array) -> Array:
+    """buf [G,S,...] <- w [n,...] at (g[n], slots[n])."""
     return buf.at[g, slots].set(w)
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _slot_write_q(buf: Array, g: Array, slots: Array, q: Array, scale: Array) -> Array:
+def _pool_set_q(buf: Array, g: Array, slots: Array, q: Array, scale: Array) -> Array:
     """int8 variant: dequantisation happens ON DEVICE, so the host->device
     transfer moves int8 + per-channel scales (2x fewer bytes than bf16,
     4x fewer than f32) — SiDA's critical path is exactly these transfers."""
@@ -72,19 +106,28 @@ def _slot_write_q(buf: Array, g: Array, slots: Array, q: Array, scale: Array) ->
     return buf.at[g, slots].set(w)
 
 
-# Non-donating variants for concurrent writers: the async transfer thread
-# commits while a forward may still hold (and read) the previous slot-pool
-# array, so the old buffer must stay alive — copy-on-write snapshot
-# semantics instead of in-place donation.
-@jax.jit
-def _slot_write_cow(buf: Array, g: Array, slots: Array, w: Array) -> Array:
-    return buf.at[g, slots].set(w)
+# One pure scatter pair, four jit wrappings. Donating variants update the
+# pool in place; the non-donating (copy-on-write) variants exist for
+# concurrent writers — the async transfer thread commits while a forward
+# may still hold (and read) the previous slot-pool array, so the old
+# buffer must stay alive.
+_slot_write = jax.jit(_pool_set, donate_argnums=(0,))
+_slot_write_q = jax.jit(_pool_set_q, donate_argnums=(0,))
+_slot_write_cow = jax.jit(_pool_set)
+_slot_write_q_cow = jax.jit(_pool_set_q)
 
 
-@jax.jit
-def _slot_write_q_cow(buf: Array, g: Array, slots: Array, q: Array, scale: Array) -> Array:
-    w = (q.astype(jnp.float32) * scale).astype(buf.dtype)
-    return buf.at[g, slots].set(w)
+def _make_pool_writes(sharding):
+    """The same four wrappings over a mesh-sharded pool: out_shardings is
+    pinned so the scatter's result keeps the slot dim partitioned over the
+    expert-parallel axis (GSPMD must not re-replicate the pool)."""
+    kw = dict(out_shardings=sharding)
+    return (
+        jax.jit(_pool_set, donate_argnums=(0,), **kw),
+        jax.jit(_pool_set_q, donate_argnums=(0,), **kw),
+        jax.jit(_pool_set, **kw),
+        jax.jit(_pool_set_q, **kw),
+    )
 
 
 def quantize_expert(
@@ -248,6 +291,11 @@ class ExpertStore:
     dequant hop, and the expert FFN dequantizes in-kernel (fused) — so the
     same slot-byte budget holds 2–4× more resident experts than fp slots.
     Implies host_quant="int8". Defaults resolve from `cfg.quant`.
+
+    `sharded` partitions the pools expert-parallel (see ShardedStoreConfig):
+    slots_per_layer stays the TOTAL per-layer slot count, split evenly into
+    per-shard partitions with independent eviction/pinning bookkeeping; with
+    a `mesh` the pool arrays are placed slot-dim-sharded over the model axis.
     """
 
     def __init__(
@@ -260,6 +308,8 @@ class ExpertStore:
         eviction: str = "fifo",        # "fifo" | "lru" | "alpha"
         quantized_slots: Optional[bool] = None,   # None => cfg.quant
         scale_granularity: Optional[str] = None,  # "channel" | "tensor"
+        sharded: Optional[ShardedStoreConfig] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
     ):
         assert cfg.moe.enabled, "ExpertStore requires an MoE config"
         assert eviction in EVICTION_POLICIES, eviction
@@ -270,6 +320,27 @@ class ExpertStore:
         self.L = n_moe_layers(cfg)
         self.E = cfg.moe.num_experts
         self.S = min(slots_per_layer, self.E)
+        self.sharded = sharded or ShardedStoreConfig()
+        self.shards = self.sharded.ep_shards
+        assert self.shards >= 1
+        if self.shards > 1:
+            assert self.E % self.shards == 0, (
+                f"experts ({self.E}) must divide over ep_shards ({self.shards})"
+            )
+            assert self.S >= self.shards, (
+                f"need >= 1 slot per shard (slots={self.S}, shards={self.shards})"
+            )
+            # round the total budget down to a per-shard-even split
+            self.S = (self.S // self.shards) * self.shards
+        self.S_loc = self.S // self.shards
+        # expert -> home shard (fixed placement => deterministic, local plans)
+        self.home = self.sharded.home_shards(self.E)
+        self.mesh = mesh
+        if self.shards > 1 and mesh is not None:
+            assert self.sharded.model_axis in mesh.axis_names, mesh
+            assert mesh.shape[self.sharded.model_axis] == self.shards, (
+                mesh.shape, self.shards,
+            )
         self.quantized_slots = (
             cfg.quant.quantized_slots if quantized_slots is None else quantized_slots
         )
@@ -278,6 +349,22 @@ class ExpertStore:
             host_quant = "int8"  # int8 residency requires the int8 host tier
         self.quant = host_quant
         self.stats = TransferStats()
+
+        # device slot writers: module-level jits for the single-shard case;
+        # per-store jits pinned to the pool NamedSharding when the pools are
+        # mesh-sharded (out_shardings keeps GSPMD from re-replicating the
+        # pool around the scatter, donation keeps the in-place update)
+        self._pool_sharding = None
+        self._set, self._set_q = _slot_write, _slot_write_q
+        self._set_cow, self._set_q_cow = _slot_write_cow, _slot_write_q_cow
+        if self.shards > 1 and mesh is not None:
+            from repro.sharding.policy import slot_pool_spec
+
+            self._pool_sharding = jax.sharding.NamedSharding(
+                mesh, slot_pool_spec(self.sharded.model_axis)
+            )
+            writes = _make_pool_writes(self._pool_sharding)
+            self._set, self._set_q, self._set_cow, self._set_q_cow = writes
 
         def _spill(name: str, arr: np.ndarray) -> np.ndarray:
             if spill_dir is None:
@@ -314,26 +401,40 @@ class ExpertStore:
                 if self.quantized_slots:
                     # int8 slot pool + per-expert scale plane: the residency
                     # format IS the transfer format (no dequant hop anywhere)
-                    moe_p[t] = jnp.zeros((G, self.S, *full.shape[2:]), jnp.int8)
-                    moe_p[t + "_scale"] = jnp.zeros(
-                        (G, self.S, 1, full.shape[-1]), jnp.float32
+                    moe_p[t] = self._place(
+                        jnp.zeros((G, self.S, *full.shape[2:]), jnp.int8)
+                    )
+                    moe_p[t + "_scale"] = self._place(
+                        jnp.zeros((G, self.S, 1, full.shape[-1]), jnp.float32)
                     )
                 else:
-                    moe_p[t] = jnp.zeros((G, self.S, *full.shape[2:]), full.dtype)
+                    moe_p[t] = self._place(
+                        jnp.zeros((G, self.S, *full.shape[2:]), full.dtype)
+                    )
             moe_p.pop("router", None)  # routers never participate in forward
         self.serve_params = serve_params
 
-        # --- cache state per (group, sub): expert->slot + eviction policy
+        # --- cache state per (group, sub): expert->slot + eviction policy.
+        # `resident` stays a single expert -> GLOBAL-slot map per (g, s)
+        # (readable regardless of sharding); free lists and eviction
+        # policies are per shard, indexed [shard], so replacement decisions
+        # never cross a shard boundary (an expert's slots come only from
+        # its home shard's partition).
         self.eviction = eviction
         self.resident: Dict[Tuple[int, int], Dict[int, int]] = {}
-        self.policy: Dict[Tuple[int, int], EvictionPolicy] = {}
-        self.free: Dict[Tuple[int, int], List[int]] = {}
+        self.policy: Dict[Tuple[int, int], List[EvictionPolicy]] = {}
+        self.free: Dict[Tuple[int, int], List[List[int]]] = {}
         self.pinned: Dict[Tuple[int, int], set] = {}
         for g in range(self.n_groups):
             for s in self.moe_subs:
                 self.resident[(g, s)] = {}
-                self.policy[(g, s)] = EVICTION_POLICIES[eviction]()
-                self.free[(g, s)] = list(range(self.S))
+                self.policy[(g, s)] = [
+                    EVICTION_POLICIES[eviction]() for _ in range(self.shards)
+                ]
+                self.free[(g, s)] = [
+                    list(range(m * self.S_loc, (m + 1) * self.S_loc))
+                    for m in range(self.shards)
+                ]
                 self.pinned[(g, s)] = set()
         # planning + device commits are serialized under this lock so the
         # async transfer thread and the forward thread never interleave slot
@@ -345,6 +446,31 @@ class ExpertStore:
     def layer_to_gs(self, l: int) -> Tuple[int, int]:
         j = l % len(self.moe_subs)
         return l // len(self.moe_subs), self.moe_subs[j]
+
+    # -- expert-parallel shard geometry ---------------------------------
+    def _place(self, arr: Array) -> Array:
+        """Pin a freshly built slot pool to the sharded layout (no-op when
+        the store is unsharded or meshless)."""
+        if self._pool_sharding is None:
+            return arr
+        return jax.device_put(arr, self._pool_sharding)
+
+    def shard_of(self, e: int) -> int:
+        """Home shard of expert `e` (every slot it may occupy lives there)."""
+        return int(self.home[e])
+
+    def shard_slots(self, shard: int) -> range:
+        """Global slot ids owned by `shard` (a contiguous partition, so the
+        mesh-sharded pool array needs no permutation)."""
+        return range(shard * self.S_loc, (shard + 1) * self.S_loc)
+
+    def local_trans(self, trans: np.ndarray) -> np.ndarray:
+        """Global translation table [L, E] -> per-shard LOCAL slot ids
+        (misses stay -1). The expert-parallel dispatch derives the same
+        thing on device from the global ids; this is the host-side view
+        (tests + debugging)."""
+        local = np.where(trans >= 0, trans - self.home[None, :] * self.S_loc, -1)
+        return local.astype(np.int32)
 
     # ------------------------------------------------------------------
     def device_bytes(self) -> int:
@@ -409,7 +535,7 @@ class ExpertStore:
         """
         g, s = self.layer_to_gs(l)
         res = self.resident[(g, s)]
-        policy = self.policy[(g, s)]
+        policies = self.policy[(g, s)]
         free = self.free[(g, s)]
         needed_set = set(int(e) for e in needed)
         protected = needed_set | self.pinned[(g, s)]
@@ -418,15 +544,19 @@ class ExpertStore:
         pending: List[Tuple[int, int, int]] = []
         for e in needed:
             e = int(e)
+            sh = int(self.home[e])          # slots only from the home shard
+            policy = policies[sh]
             w = float(mass[e]) if mass is not None else 0.0
             if e in res:
                 self.stats.hits += 1
                 policy.touch(e, w)
                 continue
-            if free:
-                slot = free.pop()
+            if free[sh]:
+                slot = free[sh].pop()
             else:
-                # evict per policy — never an expert needed right now or pinned
+                # evict per the home shard's policy — never an expert needed
+                # right now or pinned (victims are shard-local by
+                # construction: the policy only ever admitted home experts)
                 victim = policy.pick_victim(protected)
                 if victim is None:  # everything resident is protected => drop
                     self.stats.dropped += 1
@@ -447,8 +577,8 @@ class ExpertStore:
         so it cannot be donated out from under it."""
         if not items:
             return
-        write = _slot_write if self._prefetcher is None else _slot_write_cow
-        write_q = _slot_write_q if self._prefetcher is None else _slot_write_q_cow
+        write = self._set if self._prefetcher is None else self._set_cow
+        write_q = self._set_q if self._prefetcher is None else self._set_q_cow
         gs = np.array([i[0] for i in items], np.int32)
         sl = np.array([i[1] for i in items], np.int32)
         es = np.array([i[2] for i in items], np.int32)
@@ -625,12 +755,18 @@ class PrefetchStats:
     is transfer hidden behind compute, which is the pipeline's win."""
 
     submitted: int = 0          # tickets submitted
-    uploads: int = 0            # experts uploaded by the transfer thread
+    uploads: int = 0            # experts uploaded by the transfer threads
     stall_s: float = 0.0        # consumer time blocked on ready fences
     transfer_s: float = 0.0     # background gather+upload busy time
     staging_waits: int = 0      # gathers that waited for a staging slab to drain
     warm_skipped: int = 0       # warming prefetches dropped (transfer backlog)
     stolen: int = 0             # jobs a fence found still queued and ran inline
+    # per-shard upload counts under expert-parallel sharded pools (one
+    # transfer queue/thread per shard; `shards` is set by the pipeline so
+    # the summary emits a row per shard — zeros included, since an idle
+    # shard under skewed expert load is exactly what the counter detects)
+    shards: int = 1
+    uploads_by_shard: Dict[int, int] = field(default_factory=dict)
 
     @property
     def overlap_s(self) -> float:
@@ -640,9 +776,10 @@ class PrefetchStats:
         self.submitted = self.uploads = self.staging_waits = 0
         self.warm_skipped = self.stolen = 0
         self.stall_s = self.transfer_s = 0.0
+        self.uploads_by_shard = {}
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "prefetch_submitted": float(self.submitted),
             "prefetch_uploads": float(self.uploads),
             "prefetch_stall_s": self.stall_s,
@@ -652,6 +789,12 @@ class PrefetchStats:
             "prefetch_warm_skipped": float(self.warm_skipped),
             "prefetch_stolen": float(self.stolen),
         }
+        if self.shards > 1:
+            for sh in range(self.shards):
+                out[f"prefetch_uploads_shard{sh}"] = float(
+                    self.uploads_by_shard.get(sh, 0)
+                )
+        return out
 
 
 class PrefetchTicket:
@@ -679,7 +822,8 @@ class PrefetchTicket:
         self.needed = needed                  # layer -> expert ids planned
         self._fences = fences                 # ((g, s, e), event) to clear
         self._protect = protect
-        self._job: Optional[dict] = None      # queued transfer job (stealable)
+        # queued per-shard transfer jobs [(shard, {sub: rows})] (stealable)
+        self._job: Optional[List[Tuple[int, dict]]] = None
         self.released = False
 
     def wait(self, timeout: Optional[float] = None) -> bool:
@@ -721,6 +865,14 @@ class PrefetchPipeline:
     *planning* happens synchronously at `submit` (it is cheap, pure-Python
     bookkeeping), so the returned ticket carries the final translation
     table; only the byte movement is deferred.
+
+    Over an expert-parallel sharded store the pipeline fans each ticket out
+    into PER-SHARD transfer queues: one transfer thread + staging-slab ring
+    per shard (the software analogue of one H2D/ICI stream per device), so
+    a backlogged shard never head-of-line-blocks another shard's uploads,
+    and a ticket's ready fences clear shard-by-shard as each device's slab
+    lands. Fences stay per-expert — an expert's home shard is fixed, so a
+    fence IS a per-shard fence.
 
     Correctness invariants:
       * an expert referenced by an unreleased ticket, or with an upload in
@@ -782,17 +934,21 @@ class PrefetchPipeline:
         assert store._prefetcher is None, "store already has a prefetch pipeline"
         self._acquire_switch_interval()
         self.store = store
+        self.shards = store.shards
         self.depth = max(1, depth)
         self.n_staging = max(1, staging_buffers)
-        self.stats = PrefetchStats()
+        self.stats = PrefetchStats(shards=self.shards)
         self._lock = store._lock
-        # three-class transfer queue: urgent consumer jobs (a fence wait is
-        # imminent — decode ticks) > pre-submitted consumer jobs (prefill
-        # tickets whose fence comes after overlapped compute) > warming
-        # jobs — so neither admission bursts nor lookahead prefill ever
-        # head-of-line-blocks the decode path
+        # three-class transfer queue PER SHARD: urgent consumer jobs (a
+        # fence wait is imminent — decode ticks) > pre-submitted consumer
+        # jobs (prefill tickets whose fence comes after overlapped compute)
+        # > warming jobs — so neither admission bursts nor lookahead prefill
+        # ever head-of-line-blocks the decode path. One condition guards all
+        # queues; each shard's transfer thread drains only its own.
         self._jobs_cv = threading.Condition()
-        self._jobs: List[collections.deque] = [collections.deque() for _ in range(3)]
+        self._jobs: List[List[collections.deque]] = [
+            [collections.deque() for _ in range(3)] for _ in range(self.shards)
+        ]
         # (g, s) -> expert -> ready event for uploads still in flight
         self._pending: Dict[Tuple[int, int], Dict[int, threading.Event]] = (
             collections.defaultdict(dict)
@@ -801,20 +957,33 @@ class PrefetchPipeline:
         self._refs: Dict[Tuple[int, int], collections.Counter] = (
             collections.defaultdict(collections.Counter)
         )
-        # staging slabs: per buffer, (sub, tensor[, "scale"]) -> host slab,
-        # plus the device arrays that must land before the slab is reused
-        self._staging: List[Dict[tuple, np.ndarray]] = [
-            {} for _ in range(self.n_staging)
+        # staging slabs, per shard × buffer: (sub, tensor[, "scale"]) ->
+        # host slab, plus the device arrays that must land before the slab
+        # is reused. Each shard's thread owns its ring exclusively.
+        self._staging: List[List[Dict[tuple, np.ndarray]]] = [
+            [{} for _ in range(self.n_staging)] for _ in range(self.shards)
         ]
-        self._staging_inflight: List[List[Array]] = [[] for _ in range(self.n_staging)]
-        self._buf_i = 0
+        self._staging_inflight: List[List[List[Array]]] = [
+            [[] for _ in range(self.n_staging)] for _ in range(self.shards)
+        ]
+        self._buf_i = [0] * self.shards
         self._seq = 0
         self._closed = False
-        self._thread = threading.Thread(
-            target=self._transfer_loop, name="sida-prefetch", daemon=True
-        )
+        self._threads = [
+            threading.Thread(
+                target=self._transfer_loop, args=(m,),
+                name=f"sida-prefetch-{m}", daemon=True,
+            )
+            for m in range(self.shards)
+        ]
         store._prefetcher = self
-        self._thread.start()
+        for t in self._threads:
+            t.start()
+
+    @property
+    def _thread(self) -> threading.Thread:
+        """Back-compat alias: the (first) transfer thread."""
+        return self._threads[0]
 
     # -- planning side (consumer threads) -------------------------------
     def protected_experts(self, g: int, s: int) -> Set[int]:
@@ -865,8 +1034,23 @@ class PrefetchPipeline:
         assert not self._closed, "pipeline is closed"
         prio = priority if priority is not None else (0 if protect else 2)
         if not protect:
+            # backpressure only against the shards this table would actually
+            # upload to (its experts' home shards) — one backlogged shard
+            # must not suppress warming for idle devices. Reading the active
+            # experts is side-effect-free; what warming skips is the
+            # *planning* (slot assignment/eviction), which would commit the
+            # store to uploads that cannot be dropped. Unsharded stores keep
+            # the plain one-queue depth check (no scan).
+            if self.shards == 1:
+                dests = (0,)
+            else:
+                ids = np.unique(table.expert_ids)  # one pass, order-free
+                dests = (
+                    set(int(s) for s in np.unique(self.store.home[ids]))
+                    if ids.size else set(range(self.shards))
+                )
             with self._jobs_cv:
-                if len(self._jobs[2]) >= self.depth:
+                if any(len(self._jobs[sh][2]) >= self.depth for sh in dests):
                     self.stats.warm_skipped += 1
                     return None
         with self._lock:
@@ -875,16 +1059,18 @@ class PrefetchPipeline:
             trans, pending, needed = self.store.plan(
                 table, protect_fn=self.protected_experts
             )
-            job: Dict[int, List[tuple]] = {}
+            # fan the planned loads out per home shard: each shard's rows
+            # form one job on that shard's transfer queue (per-device
+            # uploads proceed independently; fences clear shard-by-shard)
+            jobs: Dict[int, Dict[int, List[tuple]]] = {}
             for s, items in pending.items():
-                if not items:
-                    continue
-                rows = []
                 for g, slot, e in items:
                     ev = threading.Event()
                     self._pending[(g, s)][e] = ev
-                    rows.append((g, slot, e, ev))
-                job[s] = rows
+                    sh = int(self.store.home[e])
+                    jobs.setdefault(sh, {}).setdefault(s, []).append(
+                        (g, slot, e, ev)
+                    )
             if protect:
                 for l, ids in needed.items():
                     g, s = self.store.layer_to_gs(l)
@@ -894,58 +1080,72 @@ class PrefetchPipeline:
             fences = self.events_for(needed)
             self.stats.submitted += 1
         ticket = PrefetchTicket(self, seq, trans, needed, fences, protect)
-        if job:
+        if jobs:
             # outside the store lock: the put may block at `depth` (consumer
             # backpressure); a planned job is never dropped — its slots are
             # already assigned, so the upload must eventually happen
-            ticket._job = job
+            ticket._job = [(sh, job) for sh, job in jobs.items()]
             with self._jobs_cv:
-                if protect:
-                    while len(self._jobs[prio]) >= self.depth:
-                        self._jobs_cv.wait()
-                self._jobs[prio].append(job)
+                for sh, job in jobs.items():
+                    if protect:
+                        while len(self._jobs[sh][prio]) >= self.depth:
+                            self._jobs_cv.wait()
+                    self._jobs[sh][prio].append(job)
                 self._jobs_cv.notify_all()
         return ticket
 
     def _steal(self, ticket: PrefetchTicket) -> None:
-        """If the ticket's transfer job is still queued when its fence is
-        reached, pop it and commit inline on the consumer thread — the
-        fence was about to pay for the whole transfer anyway, and running
-        it here skips the thread handoff (a starved transfer thread can
-        never make the async path slower than synchronous uploads). If the
-        transfer thread already owns the job, fall through to the fence."""
-        job = ticket._job
-        if job is None:
+        """If any of the ticket's per-shard transfer jobs are still queued
+        when its fence is reached, pop them and commit inline on the
+        consumer thread — the fence was about to pay for the whole transfer
+        anyway, and running it here skips the thread handoff (a starved
+        transfer thread can never make the async path slower than
+        synchronous uploads). Jobs a transfer thread already owns fall
+        through to the fence."""
+        entries = ticket._job
+        if entries is None:
             return
         ticket._job = None
+        stolen: List[Tuple[int, dict]] = []
         with self._jobs_cv:
-            found = False
-            for q in self._jobs:
-                for k, item in enumerate(q):
-                    if item is job:
-                        del q[k]
-                        found = True
+            for sh, job in entries:
+                found = False
+                for q in self._jobs[sh]:
+                    for k, item in enumerate(q):
+                        if item is job:
+                            del q[k]
+                            found = True
+                            break
+                    if found:
                         break
                 if found:
-                    break
-            if found:
+                    stolen.append((sh, job))
+            if stolen:
                 # a producer may be parked in submit() backpressure waiting
-                # for exactly this queue slot — wake it
+                # for exactly one of these queue slots — wake it
                 self._jobs_cv.notify_all()
-        if not found:
+        if not stolen:
             return
         with self._lock:
-            for s, rows in job.items():
-                self.store.commit_loads(s, [(g, sl, e) for g, sl, e, _ in rows])
-                for g, sl, e, ev in rows:
-                    pend = self._pending[(g, s)]
-                    if pend.get(e) is ev:
-                        del pend[e]
-            self.stats.uploads += sum(len(r) for r in job.values())
+            for sh, job in stolen:
+                for s, rows in job.items():
+                    self.store.commit_loads(
+                        s, [(g, sl, e) for g, sl, e, _ in rows]
+                    )
+                    for g, sl, e, ev in rows:
+                        pend = self._pending[(g, s)]
+                        if pend.get(e) is ev:
+                            del pend[e]
+                n = sum(len(r) for r in job.values())
+                self.stats.uploads += n
+                self.stats.uploads_by_shard[sh] = (
+                    self.stats.uploads_by_shard.get(sh, 0) + n
+                )
             self.stats.stolen += 1
-        for rows in job.values():
-            for *_, ev in rows:
-                ev.set()
+        for _, job in stolen:
+            for rows in job.values():
+                for *_, ev in rows:
+                    ev.set()
 
     def _refresh(self, ticket: PrefetchTicket, timeout: Optional[float] = None) -> bool:
         """Consume-time reconciliation for one ticket (see `wait`).
@@ -1021,11 +1221,11 @@ class PrefetchPipeline:
                 for e in [e for e, c in refs.items() if c <= 0]:
                     del refs[e]
 
-    # -- transfer side (background thread) ------------------------------
-    def _next_job(self) -> Optional[Dict[int, List[tuple]]]:
+    # -- transfer side (per-shard background threads) -------------------
+    def _next_job(self, shard: int) -> Optional[Dict[int, List[tuple]]]:
         with self._jobs_cv:
             while True:
-                q = next((q for q in self._jobs if q), None)
+                q = next((q for q in self._jobs[shard] if q), None)
                 if q is not None:
                     job = q.popleft()
                     break
@@ -1035,15 +1235,17 @@ class PrefetchPipeline:
             self._jobs_cv.notify_all()
             return job
 
-    def _transfer_loop(self) -> None:
+    def _transfer_loop(self, shard: int) -> None:
         while True:
-            job = self._next_job()
+            job = self._next_job(shard)
             if job is None:
                 return
             t0 = time.perf_counter()
             for s, rows in job.items():
-                self._upload(s, rows)
-            self.stats.transfer_s += time.perf_counter() - t0
+                self._upload(shard, s, rows)
+            dt = time.perf_counter() - t0
+            with self._jobs_cv:  # shard threads share the stats object
+                self.stats.transfer_s += dt
 
     def _stage(
         self,
@@ -1070,18 +1272,20 @@ class PrefetchPipeline:
         np.take(flat, gs.astype(np.int64) * arr.shape[1] + es, axis=0, out=view)
         return view
 
-    def _upload(self, s: int, rows: List[tuple]) -> None:
+    def _upload(self, shard: int, s: int, rows: List[tuple]) -> None:
         store = self.store
-        i = self._buf_i
-        self._buf_i = (self._buf_i + 1) % self.n_staging
+        i = self._buf_i[shard]
+        self._buf_i[shard] = (i + 1) % self.n_staging
         # double-buffer fence: the slab is free once the device pulled the
-        # previous transfer staged in it
-        for dev in self._staging_inflight[i]:
+        # previous transfer staged in it (per shard — each device's staging
+        # ring drains independently)
+        for dev in self._staging_inflight[shard][i]:
             ready = dev.is_ready() if hasattr(dev, "is_ready") else False
             if not ready:
-                self.stats.staging_waits += 1
+                with self._jobs_cv:
+                    self.stats.staging_waits += 1
             jax.block_until_ready(dev)
-        staging = self._staging[i]
+        staging = self._staging[shard][i]
         consumed: List[Array] = []
 
         gs = np.array([r[0] for r in rows], np.int32)
@@ -1114,14 +1318,14 @@ class PrefetchPipeline:
                     # int8-native slots: commit the quantized slab and its
                     # scale plane directly — no on-device dequant hop, so the
                     # staged bytes are the resident bytes
-                    moe_p[t] = _slot_write_cow(moe_p[t], dgs, dsl, dev)
-                    moe_p[t + "_scale"] = _slot_write_cow(
+                    moe_p[t] = store._set_cow(moe_p[t], dgs, dsl, dev)
+                    moe_p[t + "_scale"] = store._set_cow(
                         moe_p[t + "_scale"], dgs, dsl, dscale
                     )
                 elif dscale is not None:
-                    moe_p[t] = _slot_write_q_cow(moe_p[t], dgs, dsl, dev, dscale)
+                    moe_p[t] = store._set_q_cow(moe_p[t], dgs, dsl, dev, dscale)
                 else:
-                    moe_p[t] = _slot_write_cow(moe_p[t], dgs, dsl, dev)
+                    moe_p[t] = store._set_cow(moe_p[t], dgs, dsl, dev)
             # every tensor of every expert in this batch is committed:
             # ready fences may fire now (no half-written slot is observable)
             for g, slot, e, ev in rows:
@@ -1129,19 +1333,23 @@ class PrefetchPipeline:
                 if pend.get(e) is ev:
                     del pend[e]
             self.stats.uploads += len(rows)
-        self._staging_inflight[i] = consumed
+            self.stats.uploads_by_shard[shard] = (
+                self.stats.uploads_by_shard.get(shard, 0) + len(rows)
+            )
+        self._staging_inflight[shard][i] = consumed
         for _, _, _, ev in rows:
             ev.set()
 
     # -- lifecycle ------------------------------------------------------
     def close(self) -> None:
-        """Drain queued uploads and join the transfer thread."""
+        """Drain queued uploads and join every per-shard transfer thread."""
         if self._closed:
             return
         with self._jobs_cv:
             self._closed = True
             self._jobs_cv.notify_all()
-        self._thread.join()
+        for t in self._threads:
+            t.join()
         self.store._prefetcher = None
         self._release_switch_interval()
 

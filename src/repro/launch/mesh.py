@@ -38,3 +38,13 @@ def make_host_mesh() -> Optional[jax.sharding.Mesh]:
     if n == 1:
         return None
     return make_mesh((1, n), ("data", "model"))
+
+
+def make_ep_mesh(ep_shards: int) -> jax.sharding.Mesh:
+    """1-D expert-parallel serving mesh over the first `ep_shards` devices
+    (the sharded slot pools partition over its single "model" axis)."""
+    assert ep_shards >= 1
+    assert len(jax.devices()) >= ep_shards, (
+        f"need {ep_shards} devices, have {len(jax.devices())}"
+    )
+    return make_mesh((ep_shards,), ("model",))

@@ -27,13 +27,29 @@ from repro.configs.base import get_config
 from repro.core.baselines import OnDemandServer, PrefetchAllServer, StandardServer
 from repro.core.engine import SiDAEngine
 from repro.core.hash_fn import init_hash_fn
+from repro.core.offload import ShardedStoreConfig
+from repro.models.attention import ShardingCtx
 from repro.models.transformer import init_params, n_moe_layers
+
+
+def ep_setup(ep_shards: int):
+    """(ctx, sharded) for --ep-shards: a 1-D "model" mesh over `ep_shards`
+    devices with the expert-parallel serving context (slot pools + expert
+    FFN sharded, everything else replicated), or the single-device defaults
+    when ep_shards <= 1."""
+    if ep_shards <= 1:
+        return ShardingCtx(), None
+    from repro.launch.mesh import make_ep_mesh
+    from repro.sharding.policy import serve_ctx
+
+    mesh = make_ep_mesh(ep_shards)
+    return serve_ctx(mesh), ShardedStoreConfig(ep_shards=ep_shards)
 
 
 def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
                  prefetch_depth: int = 0, staging_buffers: int = 2,
                  host_quant: str = "none", quantized_slots: bool = False,
-                 scale_granularity: str = "channel"):
+                 scale_granularity: str = "channel", ep_shards: int = 1):
     if engine == "standard":
         return StandardServer(cfg, params)
     if engine == "ondemand":
@@ -44,11 +60,12 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
         cfg.moe.num_experts, d_h=64,
     )
+    ctx, sharded = ep_setup(ep_shards)
     return SiDAEngine(
         cfg, params, hp, slots_per_layer=slots, eviction=eviction,
         prefetch_depth=prefetch_depth, staging_buffers=staging_buffers,
         host_quant=host_quant, quantized_slots=quantized_slots,
-        scale_granularity=scale_granularity,
+        scale_granularity=scale_granularity, ctx=ctx, sharded=sharded,
     )
 
 
@@ -62,6 +79,7 @@ def run_request_server(cfg, params, args) -> None:
     buckets = [8]
     while buckets[-1] < args.seq:
         buckets.append(2 * buckets[-1])
+    ctx, sharded = ep_setup(args.ep_shards)
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=args.slots,
         max_lanes=args.lanes, max_prefill_batch=args.prefill_batch,
@@ -74,6 +92,7 @@ def run_request_server(cfg, params, args) -> None:
         scale_granularity=args.scale_granularity,
         spec_mode=args.spec_mode,
         spec_k=args.spec_k,
+        ctx=ctx, sharded=sharded,
     )
     rng = np.random.default_rng(0)
     reqs = poisson_requests(
@@ -86,7 +105,8 @@ def run_request_server(cfg, params, args) -> None:
           f"eviction={args.eviction} rate={args.rate}rps "
           f"prefetch_depth={args.prefetch_depth} "
           f"quantized_slots={args.quantized_slots} "
-          f"spec={args.spec_mode}/k{args.spec_k}")
+          f"spec={args.spec_mode}/k{args.spec_k} "
+          f"ep_shards={args.ep_shards}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
@@ -128,6 +148,12 @@ def main():
                     help="draft tokens proposed per verify step; the union "
                          "of all k positions' predicted experts ships as "
                          "one superset prefetch ticket")
+    ap.add_argument("--ep-shards", type=int, default=1,
+                    help="expert-parallel serving shards: partition the "
+                         "slot pools (and prefetch transfer queues) over a "
+                         "1-D 'model' mesh of this many devices; the expert "
+                         "FFN runs inside shard_map (fused dequant when "
+                         "--quantized-slots). 1 = single-device serving")
     # request-server mode
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")
@@ -158,7 +184,7 @@ def main():
     srv = build_engine(args.engine, cfg, params, args.slots, args.eviction,
                        args.prefetch_depth, args.staging_buffers,
                        args.host_quant, args.quantized_slots,
-                       args.scale_granularity)
+                       args.scale_granularity, args.ep_shards)
     metrics = srv.serve(batches)
     print(f"engine={args.engine} slots={args.slots}")
     for k, v in metrics.summary().items():

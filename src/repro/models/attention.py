@@ -39,6 +39,12 @@ class ShardingCtx:
     model_axis: Optional[str] = None               # e.g. "model"
     # axes the decode KV-cache seq dim is sharded over (flash-decode merge)
     decode_seq_axis: Optional[Tuple[str, ...]] = None
+    # expert-parallel serving: the mesh axis the MoE slot pools (and the
+    # expert FFN inside shard_map) shard over, WITHOUT also sharding
+    # attention heads / the residual stream the way `model_axis` does.
+    # Keeping every non-expert tensor replicated is what lets sharded
+    # serving stay byte-identical to the single-device path.
+    expert_axis: Optional[str] = None
 
     def constrain(self, x: Array, spec: P) -> Array:
         if self.mesh is None:

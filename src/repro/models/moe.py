@@ -156,7 +156,10 @@ def moe_layer(
         aux_loss = load_balance_loss(router_logits, ids, m.num_experts)
         z_loss = router_z_loss(router_logits)
 
-    y = _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch)
+    y = _dispatch_combine(
+        params, xt, ids, w, cfg, ctx, dispatch,
+        served=routing_override is not None,
+    )
 
     if m.num_shared_experts:
         h = xt @ params["shared_w_in"]
@@ -175,7 +178,7 @@ def moe_layer(
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 
-def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch):
+def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch, served=False):
     """Token-blocked dispatch -> expert compute -> combine.
 
     dispatch="einsum": classic one-hot dispatch/combine matmuls. Exact
@@ -186,6 +189,11 @@ def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch):
       scatter-adds per-expert outputs back (partial-sum + all-reduce under
       expert parallelism). This is the path the 235B dry-runs use.
     dispatch="auto": einsum for small working sets, gather otherwise.
+
+    `served=True` marks a slot-translated serving forward (routing override
+    present): under a mesh with an expert-parallel axis it ALWAYS takes the
+    shard_map EP path — the slot pools are partitioned over that axis, so
+    the single-shard paths would gather the whole pool per device.
     """
     m = cfg.moe
     T, d = xt.shape
@@ -205,17 +213,21 @@ def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch):
     # [n, blk, d] f32 combine per device and all-reduces ~17 GB per MoE
     # layer over the full mesh. Inside shard_map every index op is local
     # and the only collective is one psum_scatter over `model`.
-    # int8-resident expert stacks take the single-shard path: the EP inner
-    # einsums below contract fp weights directly; fused dequant under
-    # shard_map is future work (ROADMAP: expert-parallel sharded serving)
-    if (
-        dispatch == "gather"
-        and ctx.mesh is not None
-        and ctx.model_axis is not None
-        and E % ctx.mesh.shape[ctx.model_axis] == 0
-        and not expert_params_quantized(params)
-    ):
-        return _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C)
+    # int8-resident stacks take it too: apply_expert_stack_blocked runs the
+    # (fused-dequant) expert FFN on each shard's local slots inside the
+    # shard_map body, so quantized slot pools no longer force the
+    # single-shard path.
+    eax = ctx.expert_axis or ctx.model_axis
+    ep_ok = (
+        ctx.mesh is not None
+        and eax is not None
+        and ctx.mesh.shape[eax] > 1
+        and E % ctx.mesh.shape[eax] == 0
+    )
+    if ep_ok and (dispatch == "gather" or served):
+        return _dispatch_combine_ep(
+            params, xt, ids, w, cfg, ctx, blk, n, C, maxis=eax, served=served
+        )
 
     ids_b = ids.reshape(n, blk, K)
     w_b = w.reshape(n, blk, K)
@@ -289,26 +301,47 @@ def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch):
     return y.reshape(T, d)
 
 
-def _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C):
+def _dispatch_combine_ep(
+    params, xt, ids, w, cfg, ctx, blk, n, C, maxis=None, served=False
+):
     """Expert-parallel dispatch/combine under shard_map (see moe_layer).
 
     Per (data×model) shard: mask the token->expert assignments to the
-    shard's local expert range, build the local [E_loc, C] capacity table,
-    gather tokens, run the expert FFN, scatter-add the local partial y, and
-    psum_scatter it into the residual stream's d-sharded layout.
+    shard's local expert range — under slot-translated serving the global
+    ids ARE slot-pool indices, so this masking is exactly the per-shard
+    (id, slot) split of the routing override — build the local [E_loc, C]
+    capacity table, gather tokens, run the expert FFN over the shard's
+    local stack via `apply_expert_stack_blocked` (fp einsum, inline-dequant
+    einsum, or the fp/fused-dequant Pallas kernels — all INSIDE the
+    shard_map body), scatter-add the local partial y, and reduce over the
+    expert axis.
+
+    `served=True` (slot-translated serving) reduces with a plain psum into
+    a replicated y: every partial is exact (a token's contributions are the
+    products its resident experts computed, zeros elsewhere), so the
+    replicated sum is bitwise the single-device combine for top-k routing —
+    the sharded server's greedy byte-equivalence rests on this. Training
+    keeps the psum_scatter into the d-sharded residual layout.
     """
-    mesh, maxis = ctx.mesh, ctx.model_axis
+    mesh = ctx.mesh
+    maxis = maxis or ctx.expert_axis or ctx.model_axis
     mext = mesh.shape[maxis]
     E = params["w_in"].shape[0]
     E_loc = E // mext
     T, d = xt.shape
     K = ids.shape[-1]
     b_ax = ctx.batch_spec(n)
-    glu = cfg.glu
-    act = act_fn(cfg.act)
-    d_scatter = d % mext == 0  # psum_scatter needs d divisible
+    quantized = expert_params_quantized(params)
+    use_pallas = _use_pallas_default()
+    d_scatter = d % mext == 0 and not served  # psum_scatter needs d divisible
 
-    def inner(x_b, ids_b, w_b, wi, wg, wo):
+    wnames = ["w_in", "w_gate", "w_out"]
+    if quantized:
+        wnames += [t + "_scale" for t in ("w_in", "w_gate", "w_out")]
+    wvals = [params[t] for t in wnames]
+
+    def inner(x_b, ids_b, w_b, *wts):
+        p_loc = dict(zip(wnames, wts))      # this shard's slot-pool slice
         nl = x_b.shape[0]
         e0 = jax.lax.axis_index(maxis) * E_loc
         idsl = ids_b - e0                                   # [nl, blk, K]
@@ -333,12 +366,7 @@ def _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C):
         )
         xp = jnp.concatenate([x_b, jnp.zeros((nl, 1, d), x_b.dtype)], 1)
         xe = xp[jnp.arange(nl)[:, None, None], table]       # [nl, E_loc, C, d]
-        h = jnp.einsum("necd,edf->necf", xe, wi)
-        if glu:
-            h = act(jnp.einsum("necd,edf->necf", xe, wg)) * h
-        else:
-            h = act(h)
-        ye = jnp.einsum("necf,efd->necd", h, wo)
+        ye = apply_expert_stack_blocked(p_loc, xe, cfg, use_pallas=use_pallas)
         gate = (
             jnp.zeros((nl, E_loc * C + 1), jnp.float32)
             .at[nidx, slot].add(wk, mode="drop")[:, : E_loc * C]
@@ -359,18 +387,19 @@ def _dispatch_combine_ep(params, xt, ids, w, cfg, ctx, blk, n, C):
             return jax.lax.psum_scatter(y0, maxis, scatter_dimension=2, tiled=True)
         return jax.lax.psum(y0, maxis)
 
-    wspec = P(maxis, None, None)
+    wspecs = tuple(P(maxis, *([None] * (v.ndim - 1))) for v in wvals)
     y = shard_map(
         inner,
         mesh=mesh,
         in_specs=(
             P(b_ax, None, None), P(b_ax, None, None), P(b_ax, None, None),
-            wspec, wspec, wspec,
-        ),
+        ) + wspecs,
         out_specs=P(b_ax, None, maxis if d_scatter else None),
+        # pallas_call has no replication rule; the specs above are explicit
+        check_rep=False,
     )(
         xt.reshape(n, blk, d), ids.reshape(n, blk, K), w.reshape(n, blk, K),
-        params["w_in"], params["w_gate"], params["w_out"],
+        *wvals,
     )
     return y.reshape(T, d)
 
@@ -407,6 +436,11 @@ def apply_expert_stack_blocked(
     path uses the fused-dequant kernel — weight tiles stream as int8 and
     widen in VMEM, so no materialized fp expert copy ever exists — and the
     jnp path dequantizes inline (transient fp, fused by XLA; the oracle).
+
+    Under expert-parallel serving this runs INSIDE the `_dispatch_combine_ep`
+    shard_map body over each shard's local slot stack (`p` is the shard's
+    slice of the pool), so the fused-dequant kernel executes per device with
+    no cross-shard weight movement.
     """
     if use_pallas is None:
         use_pallas = _use_pallas_default()

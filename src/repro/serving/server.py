@@ -55,7 +55,7 @@ from repro.core.decode_engine import (
 )
 from repro.core.engine import SiDAEngine
 from repro.core.hash_table import HashTable
-from repro.core.offload import ExpertStore, PrefetchPipeline
+from repro.core.offload import ExpertStore, PrefetchPipeline, ShardedStoreConfig
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import (
     decode_step,
@@ -106,6 +106,7 @@ class RequestServer:
         scale_granularity: Optional[str] = None,
         spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
         spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
+        sharded: Optional[ShardedStoreConfig] = None,
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
@@ -122,9 +123,14 @@ class RequestServer:
                 "spec_mode='draft' needs a hash function with a draft head "
                 "(init_hash_fn(draft=True) or init_draft_head)"
             )
+        # `sharded` + a mesh in ctx: the one shared slot pool partitions
+        # expert-parallel; prefill, decode ticks, and speculative verify
+        # all route through the shard_map EP dispatch, and the prefetch
+        # pipeline fans tickets out into per-shard transfer queues.
         self.store = ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
+            sharded=sharded, mesh=ctx.mesh,
         )
         self.prefetch: Optional[PrefetchPipeline] = PrefetchPipeline.maybe_create(
             self.store, cfg, prefetch_depth, staging_buffers

@@ -53,6 +53,33 @@ def make_ctx(mesh: Optional[Mesh]) -> ShardingCtx:
     )
 
 
+def serve_ctx(mesh: Optional[Mesh], axis: str = "model") -> ShardingCtx:
+    """Expert-parallel SERVING context: only the MoE slot pools (and the
+    expert FFN inside shard_map) shard over `axis`; attention, the residual
+    stream, and every non-expert weight stay replicated. That restriction is
+    deliberate — it keeps the sharded serving path byte-identical to the
+    single-device path (the only cross-device reduction is the expert
+    combine psum, whose partials are exact), which the EP-serving
+    differentials pin down."""
+    if mesh is None:
+        return ShardingCtx()
+    return ShardingCtx(
+        mesh=mesh,
+        batch_axes=None,
+        model_axis=None,
+        expert_axis=axis if axis in mesh.axis_names else None,
+    )
+
+
+def slot_pool_spec(axis: str = "model") -> P:
+    """PartitionSpec of one serving slot pool [G, S, ...]: the slot dim
+    (dim 1) shards over the expert-parallel axis — shard m owns the
+    contiguous global-slot range [m*S_loc, (m+1)*S_loc). Scale planes
+    [G, S, 1, f] share the same spec, so int8-resident pools shard
+    identically (ExpertStore builds its pool NamedShardings from this)."""
+    return P(None, axis, None, None)
+
+
 # ---------------------------------------------------------------------------
 # parameter specs
 # ---------------------------------------------------------------------------
