@@ -123,6 +123,50 @@ def quantized_slot_capacity() -> List[Row]:
     return rows
 
 
+def kv_residency_budget() -> List[Row]:
+    """Beyond paper: capacity accounting with TWO residency classes. The
+    unified ResidencyManager holds expert slots AND the paged K/V pool in
+    one HBM budget, so "device bytes" rows must include the K/V pages or
+    they under-report serving footprint. Rows report each class's
+    allocated bytes at serving geometry plus the split_budget arbitration
+    (slots vs pages proportional to predicted α mass) at 1x/2x the
+    combined floor."""
+    from repro.core.offload import ExpertStore
+    from repro.core.residency import KVPagePool, PagedKVConfig, ResidencyManager
+    from repro.models.transformer import n_moe_layers
+
+    rows = []
+    for E in (8, 16):
+        cfg, params, hp = get_system(E)
+        t0 = time.perf_counter()
+        store = ExpertStore(cfg, params, slots_per_layer=2)
+        pool = KVPagePool(cfg, PagedKVConfig(page_size=16, kv_pages=32),
+                          n_lanes=4)
+        mgr = ResidencyManager(store, pool)
+        us = (time.perf_counter() - t0) * 1e6
+        total = mgr.device_bytes()
+        rows.append(Row(
+            f"kv_budget/E{E}", us,
+            expert_slot_mb=round(store.device_bytes() / 1e6, 3),
+            kv_pool_mb=round(pool.capacity_bytes() / 1e6, 3),
+            total_mb=round(total / 1e6, 3),
+            kv_share=round(pool.capacity_bytes() / total, 3),
+        ))
+        for mult in (1, 2):
+            slots, pages = ResidencyManager.split_budget(
+                mult * total, store.expert_slot_bytes(), pool.page_bytes(),
+                n_moe_layers(cfg),
+            )
+            rows.append(Row(
+                f"kv_budget/E{E}/split_{mult}x", 0.0,
+                budget_mb=round(mult * total / 1e6, 3),
+                slots_per_layer=slots,
+                kv_pages=pages,
+            ))
+    return rows
+
+
 def run() -> List[Row]:
     return (table2_memory_occupation() + fig2_fig4_sparsity()
-            + fig8_memory_reduction() + quantized_slot_capacity())
+            + fig8_memory_reduction() + quantized_slot_capacity()
+            + kv_residency_budget())

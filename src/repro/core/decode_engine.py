@@ -347,8 +347,36 @@ class SiDADecodeEngine:
         m.loads_per_step.append(self.store.stats.loads - loads_before)
         return trans, ticket
 
+    def _make_cache(self, B: int, cache_len: int, paged):
+        """Ring cache, or a paged cache + its KVPagePool when a
+        `residency.PagedKVConfig` is supplied. The pool shares the
+        engine's prefetch pipeline so page-ins ride the same transfer
+        queues/priorities as expert uploads."""
+        if paged is None:
+            return init_cache(self.cfg, B, cache_len), None
+        from repro.core.residency import KVPagePool
+
+        pool = KVPagePool(
+            self.cfg, paged, B, eviction="alpha", pipeline=self.prefetcher
+        )
+        return pool.init_cache(), pool
+
+    @staticmethod
+    def _page_tick(pool, cache, upto: np.ndarray):
+        """Pre-step paging: make each lane's positions resident up to
+        `upto[b]`, clear fences, refresh the device table."""
+        for b in range(upto.shape[0]):
+            cache = pool.ensure(cache, b, int(upto[b]))
+        cache = pool.sync(cache)
+        cache["page_table"] = pool.device_table()
+        return cache
+
     def generate(
-        self, prompt_last_tokens: np.ndarray, steps: int, cache_len: int = 256
+        self,
+        prompt_last_tokens: np.ndarray,
+        steps: int,
+        cache_len: int = 256,
+        paged=None,   # residency.PagedKVConfig => page-table K/V residency
     ) -> Tuple[np.ndarray, DecodeMetrics]:
         """Greedy-decode `steps` tokens for a batch, starting from the given
         current tokens (fresh cache; prompts would be prefillled in prod).
@@ -356,11 +384,16 @@ class SiDADecodeEngine:
         With speculation enabled (spec_mode="draft", spec_k > 1) each loop
         iteration verifies a k-token draft block in one jitted step; outputs
         are token-for-token identical to the sync path whenever every
-        predicted expert is resident (see docs/ARCHITECTURE.md)."""
+        predicted expert is resident (see docs/ARCHITECTURE.md). With
+        `paged`, the K/V cache lives in the shared page pool; greedy output
+        is byte-identical to the ring path while every page stays resident
+        (the paged-vs-ring differential in tests/test_paged_kv.py)."""
         if self.spec:
-            return self._generate_spec(prompt_last_tokens, steps, cache_len)
+            return self._generate_spec(
+                prompt_last_tokens, steps, cache_len, paged
+            )
         B = prompt_last_tokens.shape[0]
-        cache = init_cache(self.cfg, B, cache_len)
+        cache, pool = self._make_cache(B, cache_len, paged)
         hstate = hash_state_init(self.hash_params, B)
         tokens = jnp.asarray(prompt_last_tokens, jnp.int32)
         out = np.zeros((B, steps), np.int32)
@@ -368,6 +401,10 @@ class SiDADecodeEngine:
         tbuf = TableBuffer(self.L, B, 1, self.k)
         t0 = time.perf_counter()
         for i in range(steps):
+            if pool is not None:
+                cache = self._page_tick(
+                    pool, cache, np.full((B,), i + 1, np.int64)
+                )
             ids, alpha, hstate = self._predict_step(
                 self.hash_params, self.embed_table, tokens, hstate
             )
@@ -394,7 +431,11 @@ class SiDADecodeEngine:
         return out, m
 
     def _generate_spec(
-        self, prompt_last_tokens: np.ndarray, steps: int, cache_len: int
+        self,
+        prompt_last_tokens: np.ndarray,
+        steps: int,
+        cache_len: int,
+        paged=None,
     ) -> Tuple[np.ndarray, DecodeMetrics]:
         """Speculative decode: draft K tokens off the predictor's tied
         next-token head, prefetch the union of all K positions' predicted
@@ -405,16 +446,25 @@ class SiDADecodeEngine:
         when every lane has emitted `steps` tokens."""
         B = prompt_last_tokens.shape[0]
         K = self.spec_k
-        assert K <= cache_len, (K, cache_len)
-        cache = init_cache(self.cfg, B, cache_len)
+        cache, pool = self._make_cache(B, cache_len, paged)
+        assert K <= (pool.paged.seq_len if pool is not None else cache_len), (
+            K, cache_len
+        )
         hstate = hash_state_init(self.hash_params, B)
         tokens = jnp.asarray(prompt_last_tokens, jnp.int32)
         out = np.zeros((B, steps), np.int32)
         filled = np.zeros((B,), np.int64)
+        pos_np = np.zeros((B,), np.int64)   # per-lane cache position (paged)
         m = DecodeMetrics()
         tbuf = TableBuffer(self.L, B, K, self.k)
         t0 = time.perf_counter()
         while filled.min() < steps:
+            if pool is not None:
+                # verify writes the whole K-block before acceptance is known;
+                # pin each lane's pages so eviction can't race the rollback
+                cache = self._page_tick(pool, cache, pos_np + K)
+                for b in range(B):
+                    pool.pin_lane(b)
             inputs, ids, alpha, states = self._draft_unroll(
                 self.hash_params, self.embed_table, tokens, hstate
             )
@@ -428,6 +478,9 @@ class SiDADecodeEngine:
             hstate = self._roll_hstate(states, n_acc)
             out_np = np.asarray(out_blk)    # forces the step; slots consumed
             n_np = np.asarray(n_acc)
+            if pool is not None:
+                pool.unpin_all()
+                pos_np += n_np
             if ticket is not None:
                 ticket.release()
             delivered = 0

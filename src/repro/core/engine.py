@@ -25,7 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.hash_fn import hash_fn_apply, predict_topk
+from repro.core.hash_fn import (
+    HASH_SEG_LEN,
+    hash_fn_apply,
+    hash_fn_apply_segmented,
+    predict_topk,
+)
 from repro.core.hash_table import HashTable, HashTableQueue
 from repro.core.offload import (
     ExpertStore,
@@ -112,6 +117,7 @@ class SiDAEngine:
         self.L = n_moe_layers(cfg)
 
         E = cfg.moe.num_experts
+        self.E = E
 
         @jax.jit
         def _predict(hp, embed_table, tokens):
@@ -143,7 +149,15 @@ class SiDAEngine:
 
     # ------------------------------------------------------------------
     def build_table(self, batch_index: int, tokens: np.ndarray) -> HashTable:
-        ids, w = self._predict(self.hash_params, self.embed_table, tokens)
+        if tokens.shape[1] > HASH_SEG_LEN:
+            # long-prompt admission (chunked prefill): the one-shot
+            # predictor is O(S^2) in compute AND scores memory — take the
+            # segmented build (exact LSTM threading, per-segment SparseMax)
+            emb = jnp.take(self.embed_table, jnp.asarray(tokens), axis=0)
+            logits = hash_fn_apply_segmented(self.hash_params, emb, self.E)
+            ids, w = predict_topk(logits, self.k)
+        else:
+            ids, w = self._predict(self.hash_params, self.embed_table, tokens)
         return HashTable(batch_index, np.asarray(ids), np.asarray(w))
 
     def _route(self, table: HashTable, ticket: Optional[PrefetchTicket] = None):

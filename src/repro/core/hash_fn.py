@@ -83,8 +83,14 @@ def _init_lstm_layer(key, d_in: int, d_h: int) -> dict:
     }
 
 
-def _lstm_layer(p: dict, x: Array) -> Array:
-    """x: [B, S, d_in] -> [B, S, d_h]."""
+def _lstm_layer(
+    p: dict, x: Array, carry: Optional[Tuple[Array, Array]] = None
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """x: [B, S, d_in] -> ([B, S, d_h], final (h, c)).
+
+    `carry` resumes from a previous call's final (h, c) — the segmented
+    long-prompt path threads it across segments, so the recurrent half of
+    the predictor sees the whole sequence regardless of segmentation."""
     B, S, _ = x.shape
     d_h = p["wh"].shape[0]
     xg = x @ p["wx"] + p["b"]
@@ -97,9 +103,11 @@ def _lstm_layer(p: dict, x: Array) -> Array:
         h = jax.nn.sigmoid(o) * jnp.tanh(c)
         return (h, c), h
 
-    h0 = jnp.zeros((B, d_h), x.dtype)
-    (_, _), hs = jax.lax.scan(step, (h0, h0), xg.swapaxes(0, 1))
-    return hs.swapaxes(0, 1)
+    if carry is None:
+        h0 = jnp.zeros((B, d_h), x.dtype)
+        carry = (h0, h0)
+    carry, hs = jax.lax.scan(step, carry, xg.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), carry
 
 
 # ---------------------------------------------------------------------------
@@ -161,8 +169,8 @@ def hash_fn_apply(params: dict, emb: Array, num_experts: int,
     E = num_experts
     L = params["heads"].shape[-1] // E
     x = jnp.tanh(emb.astype(jnp.float32) @ params["compress"])   # [B,S,dh]
-    h = _lstm_layer(params["lstm1"], x)
-    h = _lstm_layer(params["lstm2"], h)
+    h, _ = _lstm_layer(params["lstm1"], x)
+    h, _ = _lstm_layer(params["lstm2"], h)
     # sparse attention: q=k=v=h (paper: all set to LSTM output sequence)
     q = h @ params["attn_q"]
     scores = jnp.einsum("bqd,bkd->bqk", q, h) / math.sqrt(h.shape[-1])
@@ -184,6 +192,60 @@ def hash_fn_apply(params: dict, emb: Array, num_experts: int,
     if embed_table is not None and "draft_proj" in params:
         return logits, draft_logits_from_state(params, z, embed_table)
     return logits
+
+
+# Default attention span for the segmented long-prompt path. Prompts at or
+# below this length take the one-shot O(S^2) build, so every pre-existing
+# consumer (buckets top out well under 1k) is bit-identical.
+HASH_SEG_LEN = 1024
+
+
+@jax.jit
+def _hash_segment(params: dict, emb_seg: Array, c1, c2):
+    """One segment of the long-prompt predictor: same math as
+    hash_fn_apply, but the LSTM starts from the previous segment's carries
+    and the SparseMax attention sees this segment only. Returns
+    (z [B,T,dh], new c1, new c2) — callers project z through whatever
+    heads they need."""
+    x = jnp.tanh(emb_seg.astype(jnp.float32) @ params["compress"])
+    h, c1 = _lstm_layer(params["lstm1"], x, c1)
+    h, c2 = _lstm_layer(params["lstm2"], h, c2)
+    q = h @ params["attn_q"]
+    scores = jnp.einsum("bqd,bkd->bqk", q, h) / math.sqrt(h.shape[-1])
+    w = sparsemax(scores, axis=-1)
+    a = jnp.einsum("bqk,bkd->bqd", w, h)
+    return a + h, c1, c2
+
+
+def hash_fn_apply_segmented(
+    params: dict, emb: Array, num_experts: int, seg_len: int = HASH_SEG_LEN
+) -> Array:
+    """Long-prompt variant of `hash_fn_apply`: O(S·seg_len) instead of
+    O(S^2) compute and scores memory (a 32k prompt one-shot would build a
+    [S, S] SparseMax score matrix — 4 GB — and dominates admission time
+    quadratically).
+
+    The LSTM carries thread across segment boundaries, so the recurrent
+    half of the predictor is EXACT over the full sequence; the SparseMax
+    attention is restricted to each `seg_len` segment. That mirrors the
+    decode-time predictor, whose attention already reads a bounded
+    HISTORY-slot ring (core/decode_engine.py) — the paper's sparse
+    cross-embedding dependency (c-hat ∈ [1,4] critical tokens, §3.4.1) is
+    what makes a bounded attention context faithful. For S <= seg_len the
+    result is identical to `hash_fn_apply`.
+    """
+    E = num_experts
+    L = params["heads"].shape[-1] // E
+    B, S, _ = emb.shape
+    d_h = params["attn_q"].shape[0]
+    zeros = jnp.zeros((B, d_h), jnp.float32)
+    c1, c2 = (zeros, zeros), (zeros, zeros)
+    outs = []
+    for s0 in range(0, S, seg_len):
+        z, c1, c2 = _hash_segment(params, emb[:, s0:s0 + seg_len], c1, c2)
+        outs.append(z @ params["heads"])
+    logits = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    return logits.reshape(B, S, L, E)
 
 
 def hash_fn_param_count(params: dict) -> int:

@@ -797,6 +797,23 @@ class PrefetchStats:
         return out
 
 
+class _CallableJob:
+    """A non-expert transfer job on the pipeline's per-shard queues.
+
+    `fn` runs on the shard's transfer thread (typically staging an H2D
+    page copy for the paged K/V pool — see core/residency.py), then `done`
+    is set. Callable jobs ride the same three-class priority deques as
+    expert upload jobs, so K/V page-ins and expert slabs share one
+    bandwidth arbitration: an urgent decode fence still drains ahead of a
+    lookahead page-in, and a page-in ahead of warming."""
+
+    __slots__ = ("fn", "done")
+
+    def __init__(self, fn: Callable[[], None]):
+        self.fn = fn
+        self.done = threading.Event()
+
+
 class PrefetchTicket:
     """Handle for one submitted prediction: a translation-table snapshot plus
     the ready fences the consumer must clear before forwarding with it.
@@ -1094,6 +1111,21 @@ class PrefetchPipeline:
                 self._jobs_cv.notify_all()
         return ticket
 
+    def submit_job(
+        self, fn: Callable[[], None], shard: int = 0, priority: int = 1,
+    ) -> threading.Event:
+        """Enqueue an arbitrary transfer callable on `shard`'s queue at
+        `priority` (same 0/1/2 classes as expert uploads) and return its
+        done fence. This is how the K/V page pool rides the pipeline: a
+        page-in stages its H2D copy on the transfer thread, and the fence
+        guarantees a decode tick never reads a half-uploaded page."""
+        assert not self._closed, "pipeline is closed"
+        job = _CallableJob(fn)
+        with self._jobs_cv:
+            self._jobs[shard][priority].append(job)
+            self._jobs_cv.notify_all()
+        return job.done
+
     def _steal(self, ticket: PrefetchTicket) -> None:
         """If any of the ticket's per-shard transfer jobs are still queued
         when its fence is reached, pop them and commit inline on the
@@ -1241,8 +1273,14 @@ class PrefetchPipeline:
             if job is None:
                 return
             t0 = time.perf_counter()
-            for s, rows in job.items():
-                self._upload(shard, s, rows)
+            if isinstance(job, _CallableJob):
+                try:
+                    job.fn()
+                finally:
+                    job.done.set()
+            else:
+                for s, rows in job.items():
+                    self._upload(shard, s, rows)
             dt = time.perf_counter() - t0
             with self._jobs_cv:  # shard threads share the stats object
                 self.stats.transfer_s += dt

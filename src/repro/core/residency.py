@@ -1,0 +1,525 @@
+"""Unified HBM residency: one budget, two demand-paged client pools.
+
+SiDA-MoE's offloading thesis — device memory should hold what the data
+actually activates, not what the architecture statically declares — is
+applied here to the *other* large residency class: decode-time K/V state.
+The `ExpertStore` already manages expert slot pools with host backing,
+priority transfer queues, and ready fences; this module generalizes that
+machinery into a residency manager with two clients:
+
+* **expert slots** — unchanged, owned by `ExpertStore`/`PrefetchPipeline`;
+* **K/V pages** — a shared device pool of fixed-size page blocks per
+  attention sublayer, addressed through per-lane page tables
+  (`KVPagePool`). Cold pages spill to host and page back in over the
+  PrefetchPipeline's per-shard transfer queues (`submit_job`) under the
+  same 3-class priorities as expert uploads, with fences so a decode tick
+  never reads a half-uploaded page.
+
+Device layout (built by `models.transformer.init_paged_cache`): per
+attention sublayer one pool ``kp``/``vp`` of shape [G, P+1, page, K, D].
+Page id P is the **trash page**: the pool is shared across lanes, so a
+masked-out lane cannot be merged back per-batch-row the way the ring
+cache is — instead its writes are *routed* to the trash page, whose
+contents no table entry ever references. One page table [lanes, Mp] is
+shared by all layers/groups: every layer caches the same token
+positions, so entry ``i`` of lane ``b`` names the device page holding
+positions [i*page, (i+1)*page) in every pool at once.
+
+Two invariants the jitted decode path relies on:
+
+* **position-ordered allocation** — pages are allocated in position order
+  per lane, so a slot's global position is a static function of its table
+  index (``i*page + j``); validity inside the kernel/gather is then purely
+  "table entry >= 0" ∧ causal ∧ window, with no stored position metadata.
+* **fence-before-read** — an async page-in only stages its device copy on
+  the transfer thread; the owning (main) thread calls `sync()` to wait the
+  fences and commit arrivals into the cache pytree before the next jitted
+  step. Cache mutation never happens off-thread.
+
+Eviction shares the α-mass priority framework with expert slots
+(`EVICTION_POLICIES`): pages are scored by the decayed attention mass of
+the lane that owns them, so one scoring currency ranks *all* HBM
+residents, and `ResidencyManager.split_budget` turns one byte budget into
+an (expert slots, K/V pages) split proportional to predicted mass.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.offload import EVICTION_POLICIES, ExpertStore, PrefetchPipeline
+from repro.models.transformer import period, sub_kind
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PagedKVConfig:
+    """Geometry of the paged K/V cache.
+
+    `kv_pages` is the device residency budget (pages shared by all lanes,
+    excluding the trash page); `max_seq` is the addressable sequence length
+    (page-table width × page size) — it may far exceed the resident budget,
+    which is the whole point: spilled pages live on host."""
+
+    page_size: int = 16
+    kv_pages: int = 64
+    prefill_chunk: int = 0  # 0 => chunked prefill disabled
+    max_seq: int = 0        # 0 => kv_pages * page_size (everything resident)
+
+    @property
+    def enabled(self) -> bool:
+        return self.kv_pages > 0
+
+    @property
+    def seq_len(self) -> int:
+        return self.max_seq or self.kv_pages * self.page_size
+
+    def pages_per_lane(self) -> int:
+        return -(-self.seq_len // self.page_size)
+
+
+@dataclass
+class KVPoolStats:
+    allocs: int = 0
+    spills: int = 0
+    page_ins: int = 0
+    bytes_spilled: int = 0
+    bytes_paged_in: int = 0
+    fence_wait_s: float = 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "kv_pages_allocated": self.allocs,
+            "kv_page_spills": self.spills,
+            "kv_page_ins": self.page_ins,
+            "kv_bytes_spilled": self.bytes_spilled,
+            "kv_bytes_paged_in": self.bytes_paged_in,
+            "kv_fence_wait_s": self.fence_wait_s,
+        }
+
+
+# COW page write: the old pool array stays valid (older cache versions and
+# in-flight jitted steps may still reference it), mirroring the store's
+# copy-on-write slot commits. data is [G, page, K, D].
+@jax.jit
+def _page_write(pool: Array, pid, data: Array) -> Array:
+    return pool.at[:, pid].set(data.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
+# K/V page pool
+# ---------------------------------------------------------------------------
+class KVPagePool:
+    """Host-side bookkeeping for the device K/V page pool.
+
+    All methods take and return the cache pytree functionally (device
+    arrays are never mutated in place); the page table lives as numpy here
+    and is mirrored to a cached device copy (`device_table`) that the
+    caller re-installs under ``cache["page_table"]`` after any change."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        paged: PagedKVConfig,
+        n_lanes: int,
+        eviction: str = "alpha",
+        pipeline: Optional[PrefetchPipeline] = None,
+    ):
+        assert cfg.block_kind == "attn" and not cfg.enc_dec, (
+            "paged K/V supports attention-family decoder-only archs"
+        )
+        assert paged.kv_pages >= 1 and paged.page_size >= 1
+        self.cfg = cfg
+        self.paged = paged
+        self.page = paged.page_size
+        self.n_pages = paged.kv_pages           # excludes the trash page
+        self.trash = paged.kv_pages             # trash page id == pool idx P
+        self.n_lanes = n_lanes
+        self.Mp = paged.pages_per_lane()
+        per = period(cfg)
+        self.kv_subs = [
+            s for s in range(per) if sub_kind(cfg, s)["kind"] == "attn"
+        ]
+        assert self.kv_subs, "paged K/V needs at least one attention sublayer"
+        self.n_groups = cfg.n_layers // per
+        windows = [cfg.layer_window(s) for s in range(cfg.n_layers)]
+        # residency span: pages a decode tick can actually read. 0 = full
+        # attention (every allocated page must stay resident); otherwise
+        # only pages reaching back `span` positions need device residency —
+        # older spilled pages can stay on host forever.
+        self.span = 0 if any(w == 0 for w in windows) else max(windows)
+        self.pipeline = pipeline
+        self.policy = EVICTION_POLICIES[eviction]()
+        self.stats = KVPoolStats()
+        self.table = np.full((n_lanes, self.Mp), -1, np.int32)
+        self._free: List[int] = list(range(self.n_pages))
+        self._owner: Dict[int, Tuple[int, int]] = {}
+        self._spill: Dict[Tuple[int, int], Dict[str, Tuple[np.ndarray, np.ndarray]]] = {}
+        self._pinned: set = set()
+        self._lock = threading.RLock()
+        self._dev_table: Optional[Array] = None
+        # async page-in staging: transfer thread device_put's here; the
+        # main thread commits into the cache after the fence (sync())
+        self._arrived: Dict[Tuple[int, int, int], Dict[str, Tuple[Array, Array]]] = {}
+        self._fences: List[threading.Event] = []
+
+    # -- geometry / accounting -----------------------------------------
+    def page_bytes(self) -> int:
+        """Device bytes of one page across every layer pool (K and V)."""
+        itm = jnp.dtype(self.cfg.dtype).itemsize
+        return (
+            len(self.kv_subs) * self.n_groups
+            * self.page * self.cfg.n_kv_heads * self.cfg.hd * itm * 2
+        )
+
+    def kv_pool_bytes(self) -> int:
+        """Bytes held by currently resident pages (pages × page bytes)."""
+        return (self.n_pages - len(self._free)) * self.page_bytes()
+
+    def capacity_bytes(self) -> int:
+        """Allocated device footprint of the pools (incl. the trash page)."""
+        return (self.n_pages + 1) * self.page_bytes()
+
+    def resident_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    # -- device mirrors -------------------------------------------------
+    def device_table(self) -> Array:
+        if self._dev_table is None:
+            self._dev_table = jnp.asarray(self.table)
+        return self._dev_table
+
+    def _invalidate(self) -> None:
+        self._dev_table = None
+
+    def init_cache(self) -> dict:
+        from repro.models.transformer import init_paged_cache
+
+        cache = init_paged_cache(self.cfg, self.n_lanes, self.paged)
+        cache["page_table"] = self.device_table()
+        return cache
+
+    # -- policy helpers -------------------------------------------------
+    def _policy_drop(self, pid: int) -> None:
+        """Remove `pid` from the policy's books (idempotent across the
+        three policy shapes — pick_victim already removed the entry)."""
+        p = self.policy
+        if hasattr(p, "score"):
+            p.score.pop(pid, None)
+        elif hasattr(p, "order"):
+            try:
+                del p.order[pid]          # LRU OrderedDict
+            except (KeyError, TypeError):
+                try:
+                    p.order.remove(pid)   # FIFO deque
+                except ValueError:
+                    pass
+
+    def touch_lane(self, lane: int, pos: int, weight: float = 1.0) -> None:
+        """Credit α mass to the lane's in-window pages — the shared
+        currency that keeps a decoding lane's working set ahead of stale
+        pages (and, via `split_budget`, comparable to expert slots)."""
+        with self._lock:
+            npages = pos // self.page + 1
+            lo = 0 if not self.span else max(0, pos - self.span) // self.page
+            for i in range(lo, min(npages, self.Mp)):
+                pid = int(self.table[lane, i])
+                if pid >= 0:
+                    self.policy.touch(pid, weight)
+
+    # -- allocation / spill / page-in -----------------------------------
+    def _victim(self) -> int:
+        v = self.policy.pick_victim(set(self._pinned))
+        if v is None:
+            raise RuntimeError(
+                "KV page pool exhausted: every resident page is pinned "
+                f"({len(self._pinned)} pinned / {self.n_pages} pages)"
+            )
+        return v
+
+    def alloc(self, cache: dict, lane: int, page_idx: int, weight: float = 1.0):
+        """Allocate a device page for (lane, page_idx), spilling the
+        coldest unpinned page when the free list is empty. Returns
+        (cache, page_id)."""
+        with self._lock:
+            assert self.table[lane, page_idx] < 0, (
+                f"page ({lane}, {page_idx}) already allocated"
+            )
+            if not self._free:
+                victim = self._victim()
+                cache = self.spill(cache, *self._owner[victim])
+            pid = self._free.pop()
+            self.table[lane, page_idx] = pid
+            self._owner[pid] = (lane, page_idx)
+            self.policy.admit(pid, weight)
+            self.stats.allocs += 1
+            self._invalidate()
+        return cache, pid
+
+    def spill(self, cache: dict, lane: int, page_idx: int) -> dict:
+        """Evict (lane, page_idx) to host. The device arrays are not
+        touched — the page's slots simply become garbage no table entry
+        references, and validity masking in the decode step never reads
+        them."""
+        with self._lock:
+            pid = int(self.table[lane, page_idx])
+            assert pid >= 0, f"page ({lane}, {page_idx}) is not resident"
+            assert pid not in self._pinned, "cannot spill a pinned page"
+            data = {}
+            for s in self.kv_subs:
+                e = cache[f"sub{s}"]
+                data[f"sub{s}"] = (
+                    np.asarray(e["kp"][:, pid]), np.asarray(e["vp"][:, pid])
+                )
+            self._spill[(lane, page_idx)] = data
+            self.table[lane, page_idx] = -1
+            del self._owner[pid]
+            self._policy_drop(pid)
+            self._free.append(pid)
+            self.stats.spills += 1
+            self.stats.bytes_spilled += self.page_bytes()
+            self._invalidate()
+        return cache
+
+    def page_in(
+        self, cache: dict, lane: int, page_idx: int, priority: int = 0,
+    ) -> dict:
+        """Bring a spilled page back. Without a pipeline the upload runs
+        inline; with one, the H2D stage rides the shard-0 transfer queue
+        at `priority` and the caller must `sync()` before the next jitted
+        step that could read the page."""
+        cache, pid = self.alloc(cache, lane, page_idx)
+        data = self._spill.pop((lane, page_idx))
+        self.stats.page_ins += 1
+        self.stats.bytes_paged_in += self.page_bytes()
+        if self.pipeline is None:
+            cache = dict(cache)
+            for skey, (k_np, v_np) in data.items():
+                e = dict(cache[skey])
+                e["kp"] = _page_write(e["kp"], pid, jnp.asarray(k_np))
+                e["vp"] = _page_write(e["vp"], pid, jnp.asarray(v_np))
+                cache[skey] = e
+            return cache
+
+        def stage(lane=lane, page_idx=page_idx, pid=pid, data=data):
+            staged = {
+                skey: (jax.device_put(kn), jax.device_put(vn))
+                for skey, (kn, vn) in data.items()
+            }
+            with self._lock:
+                self._arrived[(lane, page_idx, pid)] = staged
+
+        self._fences.append(self.pipeline.submit_job(stage, priority=priority))
+        return cache
+
+    def sync(self, cache: dict) -> dict:
+        """Wait outstanding page-in fences, then commit arrived pages into
+        the cache — the paged analogue of a prefetch ticket's `wait`."""
+        if self._fences:
+            t0 = time.perf_counter()
+            for ev in self._fences:
+                ev.wait()
+            self._fences = []
+            self.stats.fence_wait_s += time.perf_counter() - t0
+        with self._lock:
+            arrived, self._arrived = self._arrived, {}
+        if arrived:
+            cache = dict(cache)
+            for (lane, page_idx, pid), staged in arrived.items():
+                for skey, (k_dev, v_dev) in staged.items():
+                    e = dict(cache[skey])
+                    e["kp"] = _page_write(e["kp"], pid, k_dev)
+                    e["vp"] = _page_write(e["vp"], pid, v_dev)
+                    cache[skey] = e
+        return cache
+
+    def ensure(
+        self,
+        cache: dict,
+        lane: int,
+        upto_pos: int,
+        priority: int = 0,
+        weight: float = 1.0,
+    ) -> dict:
+        """Make positions [0, upto_pos) of `lane` safe to read/write:
+        allocate unallocated pages in position order and page spilled
+        in-span pages back in. Out-of-window spilled pages stay on host —
+        no decode tick can read them."""
+        assert upto_pos <= self.Mp * self.page, (
+            f"position {upto_pos} exceeds addressable range "
+            f"{self.Mp * self.page} (raise PagedKVConfig.max_seq)"
+        )
+        npages = -(-upto_pos // self.page)
+        if not self.span:
+            # full attention reads EVERY allocated position: a working set
+            # larger than the device pool could only proceed by silently
+            # attending past spilled pages — refuse instead
+            assert npages <= self.n_pages, (
+                f"full-attention working set ({npages} pages) exceeds the "
+                f"device pool ({self.n_pages} pages): raise kv_pages or use "
+                "windowed attention layers"
+            )
+        lo = 0
+        if self.span:
+            lo = max(0, upto_pos - 1 - self.span) // self.page
+        with self._lock:
+            for i in range(npages):
+                if self.table[lane, i] >= 0:
+                    continue
+                if (lane, i) in self._spill:
+                    if i >= lo:
+                        cache = self.page_in(cache, lane, i, priority=priority)
+                else:
+                    cache, _ = self.alloc(cache, lane, i, weight)
+        self.touch_lane(lane, upto_pos - 1, weight)
+        return cache
+
+    # -- lane lifecycle -------------------------------------------------
+    def seed(
+        self,
+        cache: dict,
+        lane: int,
+        kv: Dict[str, Tuple[np.ndarray, np.ndarray]],
+        length: int,
+    ) -> dict:
+        """Scatter a prefill forward's rope-applied K/V into the lane's
+        pages. `kv` maps "sub{s}" -> (k, v) each [G, S, K, D] with
+        S >= length; positions beyond `length` in the last page are
+        zero-padded (masked out by causal validity until overwritten)."""
+        npages = -(-length // self.page)
+        with self._lock:
+            for i in range(npages):
+                if self.table[lane, i] < 0:
+                    cache, _ = self.alloc(cache, lane, i)
+            cache = dict(cache)
+            for s in self.kv_subs:
+                skey = f"sub{s}"
+                k_np, v_np = (np.asarray(a) for a in kv[skey])
+                e = dict(cache[skey])
+                for i in range(npages):
+                    pid = int(self.table[lane, i])
+                    lo, hi = i * self.page, min((i + 1) * self.page, length)
+                    kblk = np.zeros(
+                        (k_np.shape[0], self.page) + k_np.shape[2:], k_np.dtype
+                    )
+                    vblk = np.zeros_like(kblk)
+                    kblk[:, : hi - lo] = k_np[:, lo:hi]
+                    vblk[:, : hi - lo] = v_np[:, lo:hi]
+                    e["kp"] = _page_write(e["kp"], pid, jnp.asarray(kblk))
+                    e["vp"] = _page_write(e["vp"], pid, jnp.asarray(vblk))
+                cache[skey] = e
+        return cache
+
+    def release_lane(self, lane: int) -> None:
+        """Free the lane's pages and drop its host spills (request done)."""
+        with self._lock:
+            for i in range(self.Mp):
+                pid = int(self.table[lane, i])
+                if pid >= 0:
+                    self.table[lane, i] = -1
+                    del self._owner[pid]
+                    self._policy_drop(pid)
+                    self._pinned.discard(pid)
+                    self._free.append(pid)
+            self._spill = {
+                k: v for k, v in self._spill.items() if k[0] != lane
+            }
+            self._invalidate()
+
+    def pin_lane(self, lane: int) -> None:
+        """Pin the lane's resident pages (speculative verify: the rollback
+        must find every page the draft wrote still resident)."""
+        with self._lock:
+            self._pinned.update(
+                int(p) for p in self.table[lane] if p >= 0
+            )
+
+    def unpin_lane(self, lane: int) -> None:
+        with self._lock:
+            for p in self.table[lane]:
+                if p >= 0:
+                    self._pinned.discard(int(p))
+
+    def unpin_all(self) -> None:
+        with self._lock:
+            self._pinned.clear()
+
+
+# ---------------------------------------------------------------------------
+# unified manager
+# ---------------------------------------------------------------------------
+class ResidencyManager:
+    """One HBM budget over both residency classes.
+
+    Pools are statically shaped (jit stability), so arbitration has two
+    layers: a static byte split at construction (`split_budget`,
+    proportional to predicted α mass per class) and runtime spill pressure
+    — both pools rank victims with the same decayed-α-mass policy, so
+    "coldest resident loses" means the same thing for an expert slot and a
+    K/V page."""
+
+    def __init__(self, store: ExpertStore, kv_pool: KVPagePool):
+        self.store = store
+        self.kv_pool = kv_pool
+
+    def device_bytes(self) -> int:
+        """Total allocated HBM across both pools (expert slots + K/V
+        pages + trash page) — what bench_memory's budget rows report."""
+        return self.store.device_bytes() + self.kv_pool.capacity_bytes()
+
+    def resident_bytes(self) -> int:
+        """Bytes actually holding live data right now."""
+        return self.store.device_bytes() + self.kv_pool.kv_pool_bytes()
+
+    def summary(self) -> Dict[str, float]:
+        out = dict(self.kv_pool.stats.summary())
+        out["kv_pool_bytes"] = self.kv_pool.kv_pool_bytes()
+        out["kv_capacity_bytes"] = self.kv_pool.capacity_bytes()
+        out["expert_device_bytes"] = self.store.device_bytes()
+        return out
+
+    @staticmethod
+    def split_budget(
+        total_bytes: int,
+        expert_slot_bytes: int,
+        page_bytes: int,
+        n_moe_layers: int,
+        expert_mass: float = 1.0,
+        kv_mass: float = 1.0,
+        min_slots: int = 1,
+        min_pages: int = 1,
+    ) -> Tuple[int, int]:
+        """Split one device budget into (slots_per_moe_layer, kv_pages)
+        proportional to the predicted α mass each class absorbs. Masses
+        come from the hash predictor's activation statistics (experts) and
+        the expected attention working set (K/V); equal masses give a
+        50/50 byte split. Floors guarantee both pools stay functional."""
+        assert total_bytes > 0 and expert_slot_bytes > 0 and page_bytes > 0
+        floor = (
+            min_slots * expert_slot_bytes * max(n_moe_layers, 1)
+            + (min_pages + 1) * page_bytes
+        )
+        assert total_bytes >= floor, (
+            f"budget {total_bytes}B below the functional floor {floor}B"
+        )
+        kv_share = kv_mass / max(expert_mass + kv_mass, 1e-9)
+        kv_budget = int(total_bytes * kv_share)
+        pages = max(min_pages, kv_budget // page_bytes - 1)  # -1: trash page
+        while (pages + 1) * page_bytes + min_slots * expert_slot_bytes * max(
+            n_moe_layers, 1
+        ) > total_bytes and pages > min_pages:
+            pages -= 1
+        left = total_bytes - (pages + 1) * page_bytes
+        slots = max(min_slots, left // (expert_slot_bytes * max(n_moe_layers, 1)))
+        return int(slots), int(pages)

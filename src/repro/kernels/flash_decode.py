@@ -118,3 +118,116 @@ def flash_decode(
         interpret=interpret,
     )(qg, k, v, slot_pos, pos)
     return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: K/V stream through the page table (scalar prefetch)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(
+    pt_ref,       # [B, Mp]  page table (scalar-prefetched, SMEM)
+    q_ref,        # [1, 1, G, D]
+    k_ref,        # [1, page, 1, D]  the page this grid step's DMA fetched
+    v_ref,        # [1, page, 1, D]
+    pos_ref,      # [1]
+    o_ref,        # [1, 1, G, D]
+    m_ref, l_ref, acc_ref,   # scratch: [G,1], [G,1], [G,D]
+    *, window: int, cap: float, scale: float, n_p: int, page: int,
+):
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)                   # [page, D]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    # slot global positions are static in the table index (pages are
+    # allocated in position order — core/residency.py); validity is the
+    # table entry being live plus the causal/window band
+    pos = pos_ref[0]
+    spos = p * page + jax.lax.iota(jnp.int32, page)
+    valid = (pt_ref[b, p] >= 0) & (spos <= pos)
+    if window:
+        valid &= spos > pos - window
+    logits = jnp.where(valid[None, :], logits, NEG)          # [G, page]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pw = jnp.exp(logits - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pw, -1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        pw, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p == n_p - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap", "interpret"))
+def flash_decode_paged(
+    q: Array,           # [B, H, D]
+    kp: Array,          # [P+1, page, K, D] shared page pool (trash page last)
+    vp: Array,          # [P+1, page, K, D]
+    page_table: Array,  # [B, Mp] int32 (-1 = unallocated/spilled)
+    pos: Array,         # [B] int32
+    window: int = 0,
+    cap: float = 0.0,
+    interpret: bool = False,
+) -> Array:
+    """Flash-decode reading K/V *through the page map*: the page table rides
+    scalar prefetch (`PrefetchScalarGridSpec`), so each sequence-grid step's
+    K/V DMA is addressed by the table entry — only resident pages are ever
+    fetched, and -1 entries redirect to the trash page whose logits the
+    validity mask zeroes exactly. One page per grid step keeps the online
+    softmax identical to `_decode_kernel` with bs=page."""
+    B, H, D = q.shape
+    P1, page, K, _ = kp.shape
+    Mp = page_table.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, D)
+    grid = (B, K, Mp)
+
+    def kv_map(b, h, p, pt):
+        pid = pt[b, p]
+        return (jnp.where(pid >= 0, pid, P1 - 1), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1,), lambda b, h, p, pt: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, p, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel,
+            window=window, cap=cap, scale=1.0 / math.sqrt(D),
+            n_p=Mp, page=page,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table, qg, kp, vp, pos)
+    return out.reshape(B, H, D)

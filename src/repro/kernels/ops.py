@@ -48,6 +48,16 @@ def flash_decode(q, k, v, slot_pos, pos, window: int = 0, cap: float = 0.0, **kw
     )
 
 
+def flash_decode_paged(q, kp, vp, page_table, pos,
+                       window: int = 0, cap: float = 0.0, **kw):
+    """Single-token attention reading K/V through a page table (the paged
+    residency path — see core/residency.py for the pool invariants)."""
+    return _fd.flash_decode_paged(
+        q, kp, vp, page_table, pos, window=window, cap=cap,
+        interpret=_interpret(), **kw
+    )
+
+
 def flash_prefill(q, k, v, window: int = 0, cap: float = 0.0,
                   causal: bool = True, **kw):
     from repro.kernels import flash_prefill as _fp

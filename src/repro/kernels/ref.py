@@ -128,3 +128,28 @@ def flash_decode_ref(
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(B, H, D)
+
+
+def flash_decode_paged_ref(
+    q: Array,           # [B, H, D]
+    kp: Array,          # [P+1, page, K, D] shared page pool (trash page last)
+    vp: Array,          # [P+1, page, K, D]
+    page_table: Array,  # [B, Mp] int32 (-1 = unallocated/spilled)
+    pos: Array,         # [B] int32
+    window: int = 0,
+    cap: float = 0.0,
+) -> Array:
+    """Paged decode oracle: gather K/V through the page table, derive each
+    slot's global position statically from its table index (pages are
+    position-ordered — core/residency.py), then exact masked softmax."""
+    B = q.shape[0]
+    P1, page, K, D = kp.shape
+    Mp = page_table.shape[1]
+    pt = jnp.where(page_table >= 0, page_table, P1 - 1)
+    k = kp[pt].reshape(B, Mp * page, K, D)
+    v = vp[pt].reshape(B, Mp * page, K, D)
+    spos = (jnp.arange(Mp)[:, None] * page + jnp.arange(page)[None, :]).reshape(-1)
+    slot_pos = jnp.where(
+        jnp.repeat(page_table >= 0, page, axis=1), spos[None, :], -1
+    )
+    return flash_decode_ref(q, k, v, slot_pos, pos, window=window, cap=cap)

@@ -69,7 +69,76 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
     )
 
 
+def validate_serve_args(args) -> None:
+    """Fail fast on incoherent flag combinations, with actionable errors —
+    the alternative is a mid-run assert deep inside the server/pool."""
+
+    def die(msg: str) -> None:
+        raise SystemExit(f"serve: invalid flags: {msg}")
+
+    if args.kv_pages < 0 or args.page_size <= 0 or args.prefill_chunk < 0:
+        die("--kv-pages/--prefill-chunk must be >= 0 and --page-size >= 1")
+    if args.prefill_chunk and not args.kv_pages:
+        die("--prefill-chunk needs the paged K/V cache: also pass --kv-pages")
+    if args.kv_pages:
+        if args.engine != "server":
+            die("--kv-pages applies to the request server: use --engine server")
+        resident = args.kv_pages * args.page_size
+        seq_len = args.max_seq or resident
+        if args.max_seq and args.max_seq < resident:
+            die(
+                f"--max-seq {args.max_seq} is below the resident pool "
+                f"({args.kv_pages} x {args.page_size} = {resident}); drop "
+                "--max-seq or shrink the pool"
+            )
+        if args.seq > serve_bucket_limit(args) and not args.prefill_chunk:
+            die(
+                f"--seq {args.seq} exceeds the largest prefill bucket "
+                f"({serve_bucket_limit(args)}): such prompts would be "
+                "rejected at admission — pass --prefill-chunk to stream "
+                "them through the paged cache, or raise --kv-pages"
+            )
+        if args.seq + args.new_tokens > seq_len:
+            die(
+                f"--seq {args.seq} + --new-tokens {args.new_tokens} exceeds "
+                f"the addressable range {seq_len}: such requests would be "
+                "rejected at admission — raise --max-seq (spilled pages "
+                "live on host, so it may exceed the resident pool)"
+            )
+        need = -(-serve_bucket_limit(args) // args.page_size)
+        if args.kv_pages < need:
+            die(
+                f"--kv-pages {args.kv_pages} cannot seed one full prefill "
+                f"bucket ({serve_bucket_limit(args)} tokens = {need} pages "
+                f"of {args.page_size}); raise --kv-pages to >= {need}"
+            )
+        if args.spec_mode == "draft" and args.spec_k > resident:
+            die(
+                f"--spec-k {args.spec_k} exceeds the resident K/V pool "
+                f"({resident} positions); a verify block must fit in "
+                "device pages"
+            )
+    elif args.max_seq:
+        die("--max-seq needs the paged K/V cache: also pass --kv-pages")
+
+
+def serve_bucket_limit(args) -> int:
+    """Largest prefill bucket the launcher will build. Paged serving caps
+    buckets at what the resident pool can seed in one shot (and, with
+    chunked prefill on, at the default 128 — longer prompts stream)."""
+    limit = args.seq
+    if args.kv_pages:
+        limit = min(limit, args.kv_pages * args.page_size)
+        if args.prefill_chunk:
+            limit = min(limit, 128)
+    bucket = 8
+    while bucket < limit:
+        bucket *= 2
+    return bucket
+
+
 def run_request_server(cfg, params, args) -> None:
+    from repro.core.residency import PagedKVConfig
     from repro.serving import RequestServer, poisson_requests
 
     hp = init_hash_fn(
@@ -77,8 +146,14 @@ def run_request_server(cfg, params, args) -> None:
         cfg.moe.num_experts, d_h=64, draft=args.spec_mode == "draft",
     )
     buckets = [8]
-    while buckets[-1] < args.seq:
+    while buckets[-1] < serve_bucket_limit(args):
         buckets.append(2 * buckets[-1])
+    paged = None
+    if args.kv_pages:
+        paged = PagedKVConfig(
+            page_size=args.page_size, kv_pages=args.kv_pages,
+            prefill_chunk=args.prefill_chunk, max_seq=args.max_seq,
+        )
     ctx, sharded = ep_setup(args.ep_shards)
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=args.slots,
@@ -93,6 +168,7 @@ def run_request_server(cfg, params, args) -> None:
         spec_mode=args.spec_mode,
         spec_k=args.spec_k,
         ctx=ctx, sharded=sharded,
+        paged=paged,
     )
     rng = np.random.default_rng(0)
     reqs = poisson_requests(
@@ -106,7 +182,9 @@ def run_request_server(cfg, params, args) -> None:
           f"prefetch_depth={args.prefetch_depth} "
           f"quantized_slots={args.quantized_slots} "
           f"spec={args.spec_mode}/k{args.spec_k} "
-          f"ep_shards={args.ep_shards}")
+          f"ep_shards={args.ep_shards} "
+          f"kv_pages={args.kv_pages}x{args.page_size} "
+          f"prefill_chunk={args.prefill_chunk}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
@@ -155,6 +233,21 @@ def main():
                          "FFN runs inside shard_map (fused dequant when "
                          "--quantized-slots). 1 = single-device serving")
     # request-server mode
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="paged K/V cache: device page budget shared by all "
+                         "lanes (0 = ring cache). Spilled pages live on "
+                         "host and page back in over the prefetch queues")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="K/V page size in token positions")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: stream prompts longer than the "
+                         "largest bucket through the paged cache in chunks "
+                         "of this many tokens, interleaved with decode "
+                         "ticks (0 = off; requires --kv-pages)")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="addressable sequence length (page-table width); "
+                         "0 = kv-pages * page-size (everything resident). "
+                         "May exceed the resident pool: the excess spills")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")
     ap.add_argument("--lanes", type=int, default=4)
@@ -165,6 +258,7 @@ def main():
     ap.add_argument("--no-realtime", action="store_true",
                     help="ignore arrival gaps (fast smoke runs)")
     args = ap.parse_args()
+    validate_serve_args(args)
 
     cfg = get_config(args.arch)
     if not args.full:

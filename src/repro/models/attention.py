@@ -145,6 +145,7 @@ def _attend_chunk(
     window: int,
     cap: float,
     causal: bool,
+    k_valid: Optional[Array] = None,  # [S] extra key validity (paged gather)
 ) -> Array:
     B, Tq, H, D = q.shape
     K = k.shape[2]
@@ -160,6 +161,8 @@ def _attend_chunk(
         mask &= q_pos[:, None] >= k_pos[None, :]
     if window:
         mask &= k_pos[None, :] > q_pos[:, None] - window
+    if k_valid is not None:
+        mask &= k_valid[None, :]
     logits = jnp.where(mask[None, None, None], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
@@ -370,3 +373,138 @@ def attend_decode(
     )
     y = o.reshape(B, cfg.n_heads * cfg.hd).astype(x_tok.dtype) @ params["wo"]
     return y, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# paged K/V — decode and chunked prefill through a page table
+# ---------------------------------------------------------------------------
+# The pool layout and its invariants live in core/residency.py: a shared
+# [P+1, page, K, D] pool per sublayer (last page = trash), one [B, Mp]
+# page table for all layers, pages allocated in position order so slot
+# i*page+j always holds global position i*page+j. Entry -1 = unallocated
+# or spilled to host — never read (validity masks it exactly to NEG_INF).
+
+
+def _paged_gather(
+    kp: Array,          # [P+1, page, K, D] shared pool (trash page last)
+    vp: Array,
+    page_table: Array,  # [B, Mp] (-1 invalid)
+    last_pos: Array,    # [B] highest position a query can reach
+    span: int,          # 0 = gather every page; else positions reachable back
+) -> Tuple[Array, Array, Array]:
+    """Gather K/V through the page table -> (k [B,S,K,D], v, slot_pos).
+
+    Windowed layers gather only the pages the attention span can reach
+    (bounded S keeps the per-step gather proportional to the window, not
+    to the 32k+ addressable range); full-attention layers gather all Mp
+    pages — there the page budget itself bounds the range."""
+    B, Mp = page_table.shape
+    page = kp.shape[1]
+    trash = kp.shape[0] - 1
+    if span:
+        Wp = min(Mp, span // page + 2)
+        base = jnp.clip(last_pos // page - (Wp - 1), 0, Mp - Wp)
+        idx = base[:, None] + jnp.arange(Wp)[None, :]             # [B, Wp]
+        pt = jnp.take_along_axis(page_table, idx, axis=1)
+    else:
+        idx = jnp.broadcast_to(jnp.arange(Mp)[None, :], (B, Mp))
+        pt = page_table
+    kg = kp[jnp.where(pt >= 0, pt, trash)]                        # [B,Np,page,K,D]
+    vg = vp[jnp.where(pt >= 0, pt, trash)]
+    spos = idx[:, :, None] * page + jnp.arange(page)[None, None, :]
+    slot_pos = jnp.where((pt >= 0)[:, :, None], spos, -1).reshape(B, -1)
+    S = slot_pos.shape[1]
+    return (
+        kg.reshape(B, S, kp.shape[2], kp.shape[3]),
+        vg.reshape(B, S, vp.shape[2], vp.shape[3]),
+        slot_pos,
+    )
+
+
+def attend_decode_paged(
+    params: dict,
+    x_tok: Array,        # [B, d] current-token activations
+    kp: Array,           # [P+1, page, K, D] shared page pool
+    vp: Array,
+    page_table: Array,   # [B, Mp]
+    pos: Array,          # [B] decode position
+    cfg: ModelConfig,
+    layer: int,
+    ctx: ShardingCtx,
+    active: Optional[Array] = None,  # [B] bool — inactive lanes write trash
+):
+    """One paged decode step. Returns (y [B,d], new_kp, new_vp).
+
+    The new token's K/V lands in the page the table maps ``pos`` to; lanes
+    that are masked out (or whose page is unallocated) are routed to the
+    trash page — the pool is shared across lanes, so a stale lane cannot
+    be merged back per-batch-row the way the ring cache is. Reads gather
+    through the table, where a slot's global position is static in its
+    table index, keeping validity purely causal."""
+    B = x_tok.shape[0]
+    page = kp.shape[1]
+    trash = kp.shape[0] - 1
+    window = cfg.layer_window(layer)
+    q = _project_q(params, x_tok[:, None, :], cfg)[:, 0]
+    q = apply_rope(q[:, None], pos[:, None], cfg.attn.rope_theta)[:, 0]
+    k_new, v_new = _project_kv(params, x_tok[:, None, :], cfg)
+    k_new = apply_rope(k_new, pos[:, None], cfg.attn.rope_theta)
+    pid = jnp.take_along_axis(page_table, (pos // page)[:, None], axis=1)[:, 0]
+    pid = jnp.where(pid >= 0, pid, trash)
+    if active is not None:
+        pid = jnp.where(active, pid, trash)
+    off = pos % page
+    new_kp = kp.at[pid, off].set(k_new[:, 0].astype(kp.dtype))
+    new_vp = vp.at[pid, off].set(v_new[:, 0].astype(vp.dtype))
+    kg, vg, slot_pos = _paged_gather(new_kp, new_vp, page_table, pos, window)
+    o = decode_attention(
+        q, kg, vg, slot_pos, pos, window, cfg.attn.logit_softcap, ctx
+    )
+    y = o.reshape(B, cfg.n_heads * cfg.hd).astype(x_tok.dtype) @ params["wo"]
+    return y, new_kp, new_vp
+
+
+def attend_prefill_chunk(
+    params: dict,
+    x: Array,            # [1, T, d] one lane's prompt chunk
+    kp: Array,           # [P+1, page, K, D]
+    vp: Array,
+    page_table: Array,   # [1, Mp] the lane's table row
+    pos0: Array,         # [1] chunk start position
+    cfg: ModelConfig,
+    layer: int,
+    ctx: ShardingCtx,
+):
+    """Chunked-prefill attention for one paged lane (B == 1): write the
+    chunk's K/V through the page table at absolute positions, then attend
+    causally over the gathered paged cache. Returns (y, new_kp, new_vp).
+
+    Each chunk position maps to a distinct (page, offset) — allocation is
+    position-ordered — so the scatter has no collisions. Spilled
+    out-of-window pages show up as -1 table entries and are masked via
+    `k_valid` (windowed archs never need them resident)."""
+    B, T, _ = x.shape
+    page = kp.shape[1]
+    trash = kp.shape[0] - 1
+    window = cfg.layer_window(layer)
+    q = _project_q(params, x, cfg)
+    q_pos = pos0[:, None] + jnp.arange(T)[None, :]   # [1, T]
+    q = apply_rope(q, q_pos, cfg.attn.rope_theta)
+    k_new, v_new = _project_kv(params, x, cfg)
+    k_new = apply_rope(k_new, q_pos, cfg.attn.rope_theta)
+    p = q_pos[0]                                     # [T]
+    pid = page_table[0][p // page]
+    pid = jnp.where(pid >= 0, pid, trash)
+    off = p % page
+    new_kp = kp.at[pid, off].set(k_new[0].astype(kp.dtype))
+    new_vp = vp.at[pid, off].set(v_new[0].astype(vp.dtype))
+    span = window + T if window else 0
+    kg, vg, slot_pos = _paged_gather(
+        new_kp, new_vp, page_table, pos0 + T - 1, span
+    )
+    out = _attend_chunk(
+        q, kg, vg, p, slot_pos[0], window, cfg.attn.logit_softcap,
+        causal=True, k_valid=slot_pos[0] >= 0,
+    )
+    y = out.reshape(B, T, cfg.n_heads * cfg.hd).astype(x.dtype) @ params["wo"]
+    return y, new_kp, new_vp

@@ -28,7 +28,9 @@ from repro.models import ssm as ssm_lib
 from repro.models.attention import (
     ShardingCtx,
     attend_decode,
+    attend_decode_paged,
     attend_full,
+    attend_prefill_chunk,
     init_attention,
 )
 from repro.models.layers import embed_init, ffn, init_ffn, init_rmsnorm, rmsnorm, softcap
@@ -403,6 +405,44 @@ def init_cache(
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, paged) -> dict:
+    """Paged-K/V cache pytree (see core/residency.py for the manager).
+
+    Layout: {"pos": [B], "page_table": [B, Mp] int32 (-1 = unallocated),
+    "sub{s}": {"kp"/"vp": [G, P+1, page, K, D]}} — pools are *shared*
+    across lanes and the last page is the trash page masked-out writes
+    are routed to. One table serves every layer: all layers cache the
+    same token positions, so entry i of a lane names the device page
+    holding positions [i*page, (i+1)*page) in every pool at once. Pages
+    must be allocated in position order (`KVPagePool` enforces this) —
+    the decode gather derives each slot's global position statically
+    from its table index. `paged` is a `residency.PagedKVConfig` (held
+    duck-typed to keep the model layer import-free of the manager)."""
+    per = period(cfg)
+    assert cfg.block_kind == "attn" and not cfg.enc_dec, (
+        "paged K/V supports attention-family decoder-only archs"
+    )
+    assert cfg.n_layers % per == 0
+    n_groups = cfg.n_layers // per
+    dtype = jnp.dtype(cfg.dtype)
+    K, D = cfg.n_kv_heads, cfg.hd
+    cache: dict = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "page_table": jnp.full((batch, paged.pages_per_lane()), -1, jnp.int32),
+    }
+    for s in range(per):
+        assert sub_kind(cfg, s)["kind"] == "attn"
+        cache[f"sub{s}"] = {
+            "kp": jnp.zeros(
+                (n_groups, paged.kv_pages + 1, paged.page_size, K, D), dtype
+            ),
+            "vp": jnp.zeros(
+                (n_groups, paged.kv_pages + 1, paged.page_size, K, D), dtype
+            ),
+        }
+    return cache
+
+
 def _apply_sublayer_decode(
     bp: dict,
     entry: dict,
@@ -413,6 +453,8 @@ def _apply_sublayer_decode(
     sub: int,
     cross_len: Optional[Array],
     routing_override,
+    page_table: Optional[Array] = None,  # [B, Mp] when the cache is paged
+    active: Optional[Array] = None,      # [B] bool (paged: trash-route writes)
 ):
     sk = sub_kind(cfg, sub)
     new_entry = dict(entry)
@@ -424,10 +466,17 @@ def _apply_sublayer_decode(
         return x + y, new_entry
 
     h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
-    a, nk, nv = attend_decode(
-        bp["attn"], h, entry["k"], entry["v"], pos, cfg, sub, ctx
-    )
-    new_entry["k"], new_entry["v"] = nk, nv
+    if "kp" in entry:  # paged K/V pool (see core/residency.py)
+        a, nkp, nvp = attend_decode_paged(
+            bp["attn"], h, entry["kp"], entry["vp"], page_table, pos,
+            cfg, sub, ctx, active=active,
+        )
+        new_entry["kp"], new_entry["vp"] = nkp, nvp
+    else:
+        a, nk, nv = attend_decode(
+            bp["attn"], h, entry["k"], entry["v"], pos, cfg, sub, ctx
+        )
+        new_entry["k"], new_entry["v"] = nk, nv
     if sk["kind"] == "hymba":
         mmb, st = ssm_lib.mamba_decode(bp["mamba"], h, entry["state"], cfg)
         new_entry["state"] = st
@@ -466,12 +515,15 @@ def decode_step(
     cfg: ModelConfig,
     ctx: ShardingCtx,
     routing_override=None,    # (ids [L_moe,B,k], w [L_moe,B,k])
+    active: Optional[Array] = None,  # [B] bool; paged caches route inactive
+                                     # lanes' K/V writes to the trash page
 ) -> Tuple[Array, dict]:
     """One serve step: next-token logits [B, V] + updated cache."""
     per = period(cfg)
     moe_per_group = sum(1 for s in range(per) if sub_kind(cfg, s).get("moe"))
     pos = cache["pos"]
     cross_len = cache.get("cross_len")
+    page_table = cache.get("page_table")
     x = embed_tokens(params, cfg, tokens)
 
     def body(carry, xs):
@@ -487,7 +539,7 @@ def decode_step(
                 moe_seen += 1
             x, ne = _apply_sublayer_decode(
                 gp[f"sub{s}"], entries[f"sub{s}"], x, pos, cfg, ctx, s,
-                cross_len, ro,
+                cross_len, ro, page_table=page_table, active=active,
             )
             new_entries[f"sub{s}"] = ne
         return (x, g + 1), new_entries
@@ -558,7 +610,9 @@ def verify_step(
         else:
             tok = xs
             ro = None
-        logits, c = decode_step(params, c, tok, cfg, ctx, routing_override=ro)
+        logits, c = decode_step(
+            params, c, tok, cfg, ctx, routing_override=ro, active=active
+        )
         snap = {sk: c[sk]["state"] for sk in state_subs}
         return c, (jnp.argmax(logits, -1).astype(jnp.int32), logits, snap)
 
@@ -582,6 +636,31 @@ def verify_step(
     new_cache = dict(scanned)
     for skey in (k for k in cache if k.startswith("sub")):
         entry = dict(new_cache[skey])
+        if "kp" in entry:
+            # paged rollback: position pos0+i wrote (page pid_i, offset off_i)
+            # through the shared table; rejected positions restore the
+            # pre-verify bytes. Inactive lanes wrote the trash page (active
+            # was threaded into the scan), so their "restore" is a no-op on
+            # garbage. Static loop over the block — kb is small.
+            page = entry["kp"].shape[2]
+            trash = entry["kp"].shape[1] - 1
+            pt = cache["page_table"]
+            for i in range(kb):
+                p_i = pos0 + i
+                pid_i = jnp.take_along_axis(
+                    pt, (p_i // page)[:, None], axis=1
+                )[:, 0]
+                pid_i = jnp.where(pid_i >= 0, pid_i, trash)
+                if active is not None:
+                    pid_i = jnp.where(active, pid_i, trash)
+                off_i = p_i % page
+                rej = rejected[:, i][None, :, None, None]   # [1, B, 1, 1]
+                for key in ("kp", "vp"):
+                    cur = entry[key][:, pid_i, off_i]       # [G, B, K, D]
+                    org = orig[skey][key][:, pid_i, off_i]
+                    entry[key] = entry[key].at[:, pid_i, off_i].set(
+                        jnp.where(rej, org, cur)
+                    )
         if "k" in entry:
             Sc = entry["k"].shape[2]
             slots = (pos0[:, None] + i_idx[None, :]) % Sc  # [B, kb]
@@ -607,3 +686,96 @@ def verify_step(
         new_cache[skey] = entry
     new_cache["pos"] = pos0 + n_acc
     return out, n_acc, logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: advance one paged lane through a prompt chunk
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer_chunk(
+    bp: dict,
+    entry: dict,
+    x: Array,                  # [1, T, d]
+    pos0: Array,               # [1]
+    page_table: Array,         # [1, Mp]
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    sub: int,
+    routing_override,
+):
+    """`_apply_sublayer_full` semantics for a [1, T] chunk that continues
+    at absolute position pos0 against the paged cache."""
+    sk = sub_kind(cfg, sub)
+    assert sk["kind"] == "attn", "chunked prefill supports attention blocks only"
+    new_entry = dict(entry)
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    a, nkp, nvp = attend_prefill_chunk(
+        bp["attn"], h, entry["kp"], entry["vp"], page_table, pos0,
+        cfg, sub, ctx,
+    )
+    new_entry["kp"], new_entry["vp"] = nkp, nvp
+    if cfg.post_norm:
+        a = rmsnorm(bp["ln1_post"], a, cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if sk.get("moe"):
+        y, _ = moe_layer(bp["moe"], h, cfg, ctx, routing_override=routing_override)
+    elif "mlp" in bp:
+        y = ffn(bp["mlp"], h, cfg.act, cfg.glu)
+    else:
+        y = jnp.zeros_like(h)
+    if cfg.post_norm:
+        y = rmsnorm(bp["ln2_post"], y, cfg.norm_eps)
+    return x + y, new_entry
+
+
+def prefill_chunk_step(
+    params: dict,
+    cache: dict,
+    tokens: Array,            # [1, T] one chunk of one lane's prompt
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    routing_override=None,    # (ids [L_moe,1,T,k], w) — full-forward layout
+) -> Tuple[Array, dict]:
+    """Advance one paged lane through a prompt chunk.
+
+    Runs the full-forward math over [1, T] with absolute positions
+    pos0..pos0+T-1, writing K/V through the page table as it goes, and
+    returns (logits [1, T, V], new_cache with pos advanced by T). The
+    caller interleaves these steps with decode ticks — that interleaving
+    is what keeps a 100k-token prefill from stalling the continuous batch
+    (serving/server.py) — and is responsible for page residency over the
+    chunk's attention span before dispatch (KVPagePool.ensure)."""
+    per = period(cfg)
+    moe_per_group = sum(1 for s in range(per) if sub_kind(cfg, s).get("moe"))
+    pos0 = cache["pos"]
+    page_table = cache["page_table"]
+    x = embed_tokens(params, cfg, tokens)
+
+    def body(carry, xs):
+        x, g = carry
+        gp, entries = xs
+        new_entries = {}
+        moe_seen = 0
+        for s in range(per):
+            ro = None
+            if routing_override is not None and sub_kind(cfg, s).get("moe"):
+                li = g * moe_per_group + moe_seen
+                ro = (routing_override[0][li], routing_override[1][li])
+                moe_seen += 1
+            x, ne = _apply_sublayer_chunk(
+                gp[f"sub{s}"], entries[f"sub{s}"], x, pos0, page_table,
+                cfg, ctx, s, ro,
+            )
+            new_entries[f"sub{s}"] = ne
+        return (x, g + 1), new_entries
+
+    entries = {k: v for k, v in cache.items() if k.startswith("sub")}
+    (x, _), new_entries = jax.lax.scan(body, (x, 0), (params["blocks"], entries))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache.update(new_entries)
+    new_cache["pos"] = pos0 + tokens.shape[1]
+    return logits, new_cache

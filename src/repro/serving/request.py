@@ -47,6 +47,12 @@ class Request:
     prefill_logits: Optional[np.ndarray] = None  # kept only when asked
     decode_logits: Optional[List[np.ndarray]] = None  # per-step, when asked
 
+    # why admission refused this request (state == REJECTED)
+    reject_reason: Optional[str] = None
+    # chunked-prefill progress: prompt tokens consumed so far (long prompts
+    # served through the paged K/V path advance this chunk by chunk)
+    chunk_pos: int = 0
+
     # lifecycle timestamps (server-clock seconds; -1 = not reached)
     t_queued: float = -1.0
     t_prefill: float = -1.0

@@ -119,6 +119,19 @@ class Scheduler:
 
         return sorted(reqs, key=key)
 
+    def chunk_urgent(
+        self, req: Request, now: float, remaining_chunks: int, chunk_s: float,
+    ) -> bool:
+        """Deadline accounting for chunked prefill: run the next chunk
+        BEFORE this tick's decode when the request's remaining slack no
+        longer covers the remaining chunks at the observed per-chunk rate
+        (plus one slack band of margin). SLO-less requests are never
+        urgent — their chunks always yield to decode progress."""
+        if req.slo_s is None:
+            return False
+        need = remaining_chunks * max(chunk_s, 1e-4) + self.slack_band_s
+        return req.slack(now) < need
+
     def next_prefill_batch(
         self,
         now: float,

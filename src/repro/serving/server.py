@@ -56,11 +56,13 @@ from repro.core.decode_engine import (
 from repro.core.engine import SiDAEngine
 from repro.core.hash_table import HashTable
 from repro.core.offload import ExpertStore, PrefetchPipeline, ShardedStoreConfig
+from repro.core.residency import KVPagePool, PagedKVConfig, ResidencyManager
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import (
     decode_step,
     init_cache,
     n_moe_layers,
+    prefill_chunk_step,
     verify_step,
 )
 from repro.serving.request import Request, RequestState
@@ -107,6 +109,7 @@ class RequestServer:
         spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
         spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
         sharded: Optional[ShardedStoreConfig] = None,
+        paged: Optional[PagedKVConfig] = None,  # page-table K/V residency
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
@@ -149,12 +152,34 @@ class RequestServer:
         self.k = serve_top_k or cfg.moe.top_k
 
         self.buckets = tuple(sorted(buckets))
-        self.cache_len = cache_len or 2 * self.buckets[-1]
-        assert self.buckets[-1] <= self.cache_len, "cache must hold a full bucket"
-        windows = [w for s in range(cfg.n_layers) if (w := cfg.layer_window(s))]
-        assert not windows or min(windows) >= self.cache_len, (
-            "windowed layers need window >= cache_len for prefill-seeded lanes"
-        )
+        self.paged = paged if (paged is not None and paged.enabled) else None
+        if self.paged is not None:
+            # cache_len is the ADDRESSABLE range (page-table width), not the
+            # resident budget: spilled pages live on host, which is how a
+            # 32k prompt serves through a 4k-page HBM pool
+            self.cache_len = self.paged.seq_len
+            assert self.buckets[-1] <= self.cache_len, (
+                "page table must address a full prefill bucket"
+            )
+            need = -(-self.buckets[-1] // self.paged.page_size)
+            assert self.paged.kv_pages >= need, (
+                f"kv_pages={self.paged.kv_pages} cannot hold one full "
+                f"prefill bucket ({self.buckets[-1]} tokens = {need} pages)"
+            )
+        else:
+            self.cache_len = cache_len or 2 * self.buckets[-1]
+            assert self.buckets[-1] <= self.cache_len, (
+                "cache must hold a full bucket"
+            )
+            # ring-only constraint: a wrapped window would evict positions
+            # the prefill seed just wrote; the paged path has no wrap (its
+            # windows bound the residency span instead — KVPagePool.span)
+            windows = [
+                w for s in range(cfg.n_layers) if (w := cfg.layer_window(s))
+            ]
+            assert not windows or min(windows) >= self.cache_len, (
+                "windowed layers need window >= cache_len for prefill-seeded lanes"
+            )
 
         self.max_lanes = max_lanes
         self.max_prefill_batch = max_prefill_batch
@@ -168,10 +193,27 @@ class RequestServer:
         self._lock = threading.Lock()
 
         # --- mutable decode-batch state (one lane = one batch row)
-        self.cache = init_cache(cfg, max_lanes, self.cache_len)
+        if self.paged is not None:
+            # page-ins ride the prefetch pipeline's transfer queues when
+            # async; one ResidencyManager fronts both HBM pools
+            self.kv_pool: Optional[KVPagePool] = KVPagePool(
+                cfg, self.paged, max_lanes, eviction="alpha",
+                pipeline=self.prefetch,
+            )
+            self.residency: Optional[ResidencyManager] = ResidencyManager(
+                self.store, self.kv_pool
+            )
+            self.cache = self.kv_pool.init_cache()
+        else:
+            self.kv_pool = None
+            self.residency = None
+            self.cache = init_cache(cfg, max_lanes, self.cache_len)
         self.hstate = hash_state_init(hash_params, max_lanes)
         self.lane_tokens = np.zeros((max_lanes,), np.int32)
         self._active = np.zeros((max_lanes,), bool)
+        self._lane_pos = np.zeros((max_lanes,), np.int64)  # paged: write pos
+        self._long_queue: List[Request] = []   # prompts beyond the buckets
+        self._chunk_state: Optional[dict] = None  # in-flight chunked prefill
         self._pending_pred = None  # (ids, alpha, active, ticket) for next tick
         self._pending_spec = None  # pre-unrolled draft block for next spec tick
         self._step = 0
@@ -182,12 +224,15 @@ class RequestServer:
         cfg_, ctx_, E, k = cfg, ctx, self.E, self.k
 
         @jax.jit
-        def _hash_prefill(hp, embed_table, tokens, lengths):
+        def _hash_prefill(hp, embed_table, tokens, lengths, state0=None):
             """Advance the predictor LSTM through each (padded) prompt,
             freezing every sequence at its true length — yields the exact
-            state the incremental decode predictor would have reached."""
+            state the incremental decode predictor would have reached.
+            `state0` continues from a prior call (chunked prefill threads
+            the state chunk to chunk); None starts fresh."""
             emb = jnp.take(embed_table, tokens, axis=0)          # [n, Sb, d]
-            state0 = hash_state_init(hp, tokens.shape[0])
+            if state0 is None:
+                state0 = hash_state_init(hp, tokens.shape[0])
 
             def step(state, xs):
                 emb_t, j = xs
@@ -212,18 +257,68 @@ class RequestServer:
                 merged,
             )
 
+        if self.paged is not None:
+            # paged pools are SHARED across lanes (no batch axis), so the
+            # ring path's per-row `_mask_batch` merge cannot apply —
+            # inactive lanes' writes are instead *routed* to the trash page
+            # inside the step (decode_step's `active`); only `pos` merges
+            @jax.jit
+            def _decode_masked(serve_params, cache, tokens, slot_ids, w, active):
+                logits, new_cache = decode_step(
+                    serve_params, cache, tokens, cfg_, ctx_,
+                    routing_override=(slot_ids, w), active=active,
+                )
+                merged = dict(new_cache)
+                merged["pos"] = jnp.where(active, new_cache["pos"], cache["pos"])
+                return jnp.argmax(logits, -1).astype(jnp.int32), logits, merged
+        else:
+            @jax.jit
+            def _decode_masked(serve_params, cache, tokens, slot_ids, w, active):
+                logits, new_cache = decode_step(
+                    serve_params, cache, tokens, cfg_, ctx_,
+                    routing_override=(slot_ids, w),
+                )
+                merged = dict(new_cache)
+                merged["pos"] = jnp.where(active, new_cache["pos"], cache["pos"])
+                for key in cache:
+                    if key.startswith("sub"):
+                        merged[key] = _mask_batch(active, new_cache[key], cache[key], 1)
+                return jnp.argmax(logits, -1).astype(jnp.int32), logits, merged
+
         @jax.jit
-        def _decode_masked(serve_params, cache, tokens, slot_ids, w, active):
-            logits, new_cache = decode_step(
-                serve_params, cache, tokens, cfg_, ctx_,
+        def _seed_lanes_paged(cache, hstate, hjoin, lanes, pos):
+            """Paged lane join: only `pos` and the predictor state live on
+            device per lane — the K/V itself is scattered into the page
+            pool host-side by `KVPagePool.seed` before this runs."""
+            new_cache = dict(cache)
+            new_cache["pos"] = cache["pos"].at[lanes].set(pos)
+            new_hstate = jax.tree.map(
+                lambda full, j: full.at[lanes].set(j.astype(full.dtype)),
+                hstate, hjoin,
+            )
+            return new_cache, new_hstate
+
+        @jax.jit
+        def _chunk_step(serve_params, cache, tokens, lane, slot_ids, w):
+            """One [1, T] prefill chunk of lane `lane` against the shared
+            paged cache: slice the lane's pos/page-table rows, run the
+            chunk forward, and merge the advanced pos back."""
+            sub = dict(cache)
+            sub["pos"] = jax.lax.dynamic_slice(cache["pos"], (lane,), (1,))
+            sub["page_table"] = jax.lax.dynamic_slice(
+                cache["page_table"], (lane, 0),
+                (1, cache["page_table"].shape[1]),
+            )
+            logits, new_sub = prefill_chunk_step(
+                serve_params, sub, tokens, cfg_, ctx_,
                 routing_override=(slot_ids, w),
             )
-            merged = dict(new_cache)
-            merged["pos"] = jnp.where(active, new_cache["pos"], cache["pos"])
-            for key in cache:
-                if key.startswith("sub"):
-                    merged[key] = _mask_batch(active, new_cache[key], cache[key], 1)
-            return jnp.argmax(logits, -1).astype(jnp.int32), logits, merged
+            merged = dict(new_sub)
+            merged["pos"] = jax.lax.dynamic_update_slice(
+                cache["pos"], new_sub["pos"].astype(cache["pos"].dtype), (lane,)
+            )
+            merged["page_table"] = cache["page_table"]
+            return logits, merged
 
         @jax.jit
         def _seed_lanes(cache, hstate, kv, hjoin, lanes, pos):
@@ -263,6 +358,8 @@ class RequestServer:
         self._predict_masked = _predict_masked
         self._decode_masked = _decode_masked
         self._seed_lanes = _seed_lanes
+        self._seed_lanes_paged = _seed_lanes_paged
+        self._chunk_step = _chunk_step
         # one shared unroll definition with the decode engine (the lane
         # mask is the only delta) so the draft recurrence cannot drift
         # between the two greedy-equivalent consumers
@@ -290,8 +387,30 @@ class RequestServer:
     def admit(self, req: Request, now: float) -> None:
         req.t_queued = now
         self.telemetry.counter("requests_arrived").inc()
+        P = req.prompt_len
+        if self.paged is not None and P + req.max_new_tokens > self.cache_len:
+            # the page table cannot address positions past cache_len, so the
+            # request could not finish — refuse it up front, explicitly
+            return self._reject(req, now, "exceeds_addressable_range")
+        if P > self.buckets[-1]:
+            if self.paged is None or self.paged.prefill_chunk <= 0:
+                # no chunked-prefill path: the prefill batcher cannot pad
+                # this prompt into any bucket (bucket_len would raise)
+                return self._reject(req, now, "prompt_exceeds_max_bucket")
+            self.telemetry.counter("requests_admitted_long").inc()
+            with self._lock:
+                self._long_queue.append(req)
+            return
         with self._lock:
             self.scheduler.enqueue(req)
+
+    def _reject(self, req: Request, now: float, reason: str) -> None:
+        req.state = RequestState.REJECTED
+        req.reject_reason = reason
+        req.t_done = now
+        self.rejected.append(req)
+        self.telemetry.counter("requests_rejected").inc()
+        self.telemetry.counter(f"requests_rejected_{reason}").inc()
 
     # ------------------------------------------------------------------
     # prefill: length-bucketed batch -> lanes
@@ -346,10 +465,27 @@ class RequestServer:
             r.emit(first)
             self.lane_tokens[lanes[i]] = first
             self.telemetry.histogram("ttft_s").observe(r.ttft_s)
-        self.cache, self.hstate = self._seed_lanes(
-            self.cache, self.hstate, kv, hjoin,
-            jnp.asarray(lanes), jnp.asarray(pos),
-        )
+        if self.kv_pool is not None:
+            # scatter each request's rope'd K/V into its lane's pages
+            # host-side (allocating/spilling as needed), then install pos
+            # and predictor state on device
+            for i, r in enumerate(batch):
+                self.cache = self.kv_pool.seed(
+                    self.cache, int(lanes[i]),
+                    {k: (kk[:, i], vv[:, i]) for k, (kk, vv) in kv.items()},
+                    r.prompt_len,
+                )
+            self.cache["page_table"] = self.kv_pool.device_table()
+            self.cache, self.hstate = self._seed_lanes_paged(
+                self.cache, self.hstate, hjoin,
+                jnp.asarray(lanes), jnp.asarray(pos),
+            )
+        else:
+            self.cache, self.hstate = self._seed_lanes(
+                self.cache, self.hstate, kv, hjoin,
+                jnp.asarray(lanes), jnp.asarray(pos),
+            )
+        self._lane_pos[lanes] = pos
         self._active[lanes] = True
         self.telemetry.counter("prefill_batches").inc()
         self.telemetry.histogram("prefill_batch_size").observe(n)
@@ -364,6 +500,18 @@ class RequestServer:
     # ------------------------------------------------------------------
     # decode: one continuous-batch step
     # ------------------------------------------------------------------
+    def _page_tick(self, upto: np.ndarray) -> None:
+        """Pre-tick paging: make each lane's positions resident up to
+        `upto[lane]` (0 = skip the lane), clear page-in fences, and refresh
+        the device page table — the tick that follows can then read every
+        in-span position through the table."""
+        pool = self.kv_pool
+        for lane in range(self.max_lanes):
+            if upto[lane] > 0:
+                self.cache = pool.ensure(self.cache, lane, int(upto[lane]))
+        self.cache = pool.sync(self.cache)
+        self.cache["page_table"] = pool.device_table()
+
     def _predict_tick(self, mask: np.ndarray):
         """Advance the hash predictor for `mask` lanes; returns np arrays."""
         ids, alpha, self.hstate = self._predict_masked(
@@ -379,6 +527,13 @@ class RequestServer:
         lane's accepted prefix — lanes at mixed positions accept different
         amounts, so the continuous batch stays continuous."""
         active = self._active.copy()
+        if self.kv_pool is not None:
+            # verify writes the whole K-block before acceptance is known;
+            # pin each lane's pages so a seeding spill cannot race the
+            # rollback restore
+            self._page_tick(np.where(active, self._lane_pos + self.spec_k, 0))
+            for lane in np.nonzero(active)[0]:
+                self.kv_pool.pin_lane(int(lane))
         act_dev = jnp.asarray(active)
         unrolled = ticket = stale_ticket = None
         if self._pending_spec is not None:
@@ -430,6 +585,9 @@ class RequestServer:
         )
         out_np = np.asarray(out_blk)    # forces the step; slots consumed
         n_np = np.asarray(n_acc)
+        if self.kv_pool is not None:
+            self.kv_pool.unpin_all()
+            self._lane_pos[active] += n_np[active]
         if ticket is not None:
             ticket.release()
         if stale_ticket is not None:
@@ -493,6 +651,8 @@ class RequestServer:
         if self.spec:
             return self._spec_tick(now)
         active = self._active.copy()
+        if self.kv_pool is not None:
+            self._page_tick(np.where(active, self._lane_pos + 1, 0))
         ticket = None
         if self._pending_pred is not None:
             # predictions (and their uploads) were pre-submitted at the end
@@ -538,6 +698,8 @@ class RequestServer:
         next_tok = np.asarray(next_tok)  # forces the step; slots consumed
         if ticket is not None:
             ticket.release()
+        if self.kv_pool is not None:
+            self._lane_pos[active] += 1
         logits_np = np.asarray(logits) if self.keep_decode_logits else None
         self._step += 1
         self.telemetry.counter("decode_steps").inc()
@@ -570,6 +732,9 @@ class RequestServer:
     def _finish(self, lane: int) -> None:
         req = self.lanes.release(lane)
         self._active[lane] = False
+        if self.kv_pool is not None:
+            self.kv_pool.release_lane(lane)
+            self._lane_pos[lane] = 0
         now = time.perf_counter() - self._t0
         req.state = RequestState.DONE
         req.t_done = now
@@ -579,6 +744,113 @@ class RequestServer:
         self.telemetry.histogram("decode_tokens").observe(len(req.generated))
         if req.slo_s is not None and req.latency_s > req.slo_s:
             self.telemetry.counter("deadline_miss").inc()
+
+    # ------------------------------------------------------------------
+    # chunked prefill: long prompts stream through the paged cache
+    # ------------------------------------------------------------------
+    def _start_long(self, req: Request, now: float) -> None:
+        """Claim a lane for a long prompt; it joins the decode batch only
+        after its last chunk (the lane stays masked out meanwhile)."""
+        lane = self.lanes.assign(req)
+        req.state = RequestState.PREFILL
+        req.t_prefill = now
+        self._active[lane] = False
+        self._chunk_state = {
+            "req": req, "lane": lane, "done": 0,
+            "hstate": None,   # predictor state threaded chunk to chunk
+            "ema_s": 0.0,     # observed per-chunk seconds (EMA) for the
+                              # scheduler's chunk-deadline accounting
+            "logits": [] if self.keep_prefill_logits else None,
+        }
+        self.telemetry.counter("long_prefills_started").inc()
+
+    def _chunk_tick(self, now: float) -> None:
+        """Run ONE prefill chunk of the in-flight long request. Bounding
+        the work per call is the point: decode ticks interleave between
+        chunks, so a 32k prefill never stalls the continuous batch (the
+        short-request decode-progress criterion in bench_serving's
+        `server_longctx` probe)."""
+        st = self._chunk_state
+        req, lane, done = st["req"], st["lane"], st["done"]
+        T = self.paged.prefill_chunk
+        P = req.prompt_len
+        n = min(T, P - done)
+        t0 = time.perf_counter()
+        tokens = np.zeros((1, T), np.int32)
+        tokens[0, :n] = req.prompt[done : done + n]
+        # per-chunk routing sliced from the admission-time hash table;
+        # edge-pad ids (no spurious loads), zero-α pads route nowhere
+        ids = np.zeros((self.L, 1, T, self.k), np.int32)
+        w = np.zeros((self.L, 1, T, self.k), np.float32)
+        ids[:, :, :n] = req.table.expert_ids[:, :, done : done + n]
+        ids[:, :, n:] = ids[:, :, n - 1 : n]
+        w[:, :, :n] = req.table.weights[:, :, done : done + n]
+        tbl = HashTable(self._step, ids, w)
+        ticket = None
+        if self.prefetch is not None:
+            ticket = self.prefetch.submit(tbl)
+            with self.telemetry.timer("prefetch_fence_s"):
+                ticket.wait()
+            trans = ticket.trans
+        else:
+            trans = self.store.prepare(tbl)
+        slot_ids, w_t = self.store.translate(tbl, trans)
+        # residency for the chunk's writes plus its attention span
+        self.cache = self.kv_pool.ensure(self.cache, lane, done + T)
+        self.cache = self.kv_pool.sync(self.cache)
+        self.cache["page_table"] = self.kv_pool.device_table()
+        logits, self.cache = self._chunk_step(
+            self.store.serve_params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(lane, jnp.int32),
+            jnp.asarray(slot_ids), jnp.asarray(w_t),
+        )
+        lengths = jnp.asarray([n], jnp.int32)
+        if st["hstate"] is None:
+            st["hstate"] = self._hash_prefill(
+                self.hash_params, self.embed_table, jnp.asarray(tokens), lengths
+            )
+        else:
+            st["hstate"] = self._hash_prefill(
+                self.hash_params, self.embed_table, jnp.asarray(tokens),
+                lengths, st["hstate"],
+            )
+        if st["logits"] is not None:
+            st["logits"].append(np.asarray(logits)[0, :n])
+        if ticket is not None:
+            ticket.release()
+        st["done"] = done + n
+        req.chunk_pos = st["done"]
+        dt = time.perf_counter() - t0
+        st["ema_s"] = dt if st["ema_s"] == 0.0 else 0.5 * st["ema_s"] + 0.5 * dt
+        self._step += 1
+        self.telemetry.counter("prefill_chunks").inc()
+        self.telemetry.counter("prefill_pad_tokens").inc(float(T - n))
+        if st["done"] < P:
+            return
+        # final chunk: the lane joins the decode batch
+        first = int(np.argmax(np.asarray(logits)[0, n - 1]))
+        if st["logits"] is not None:
+            req.prefill_logits = np.concatenate(st["logits"], axis=0)
+        # the padded tail advanced pos past the prompt; decode resumes at P
+        # (each garbage position is rewritten by decode before any query
+        # can attend it — decode at position p writes p, then reads <= p)
+        self.cache = dict(self.cache)
+        self.cache["pos"] = self.cache["pos"].at[lane].set(P)
+        self.hstate = jax.tree.map(
+            lambda full, j: full.at[lane].set(j[0].astype(full.dtype)),
+            self.hstate, st["hstate"],
+        )
+        self._lane_pos[lane] = P
+        self.lane_tokens[lane] = first
+        self._active[lane] = True
+        req.state = RequestState.DECODE
+        req.t_first_token = time.perf_counter() - self._t0
+        req.emit(first)
+        self.telemetry.histogram("ttft_s").observe(req.ttft_s)
+        self.telemetry.counter("long_prefills_completed").inc()
+        self._chunk_state = None
+        if req.finished():
+            self._finish(lane)
 
     # ------------------------------------------------------------------
     # serving loop
@@ -608,6 +880,7 @@ class RequestServer:
         try:
             while True:
                 now = time.perf_counter() - self._t0
+                long_req = None
                 with self._lock:
                     if self.drop_expired:
                         for r in self.scheduler.pop_expired(now):
@@ -622,9 +895,19 @@ class RequestServer:
                             now, min(free, self.max_prefill_batch),
                             self.prefetch or self.store,
                         )
-                    depth = self.scheduler.pending()
+                    # one chunked long prefill at a time; it needs a lane
+                    # beyond what this round's bucket batch will take
+                    if (
+                        self._chunk_state is None and self._long_queue
+                        and self.lanes.free_count() > len(batch)
+                    ):
+                        long_req = self._long_queue.pop(0)
+                    depth = self.scheduler.pending() + len(self._long_queue)
                 self.telemetry.gauge("queue_depth").set(depth)
                 self.telemetry.gauge("active_lanes").set(len(self.lanes.active()))
+
+                if long_req is not None:
+                    self._start_long(long_req, now)
 
                 progressed = False
                 pf_table, pf_ticket = None, None
@@ -635,6 +918,22 @@ class RequestServer:
                         # the tick's compute covers the transfer; priority 1
                         # keeps them behind the tick's own urgent uploads
                         pf_ticket = self.prefetch.submit(pf_table, priority=1)
+                # chunk ordering: a chunk runs before this round's decode
+                # tick only when the long request's deadline demands it —
+                # otherwise decode progress (the short requests) goes first
+                chunk_first = False
+                if self._chunk_state is not None:
+                    st = self._chunk_state
+                    remaining = -(
+                        -(st["req"].prompt_len - st["done"])
+                        // self.paged.prefill_chunk
+                    )
+                    chunk_first = self.scheduler.chunk_urgent(
+                        st["req"], now, remaining, st["ema_s"]
+                    )
+                    if chunk_first:
+                        self._chunk_tick(now)
+                        progressed = True
                 if self._active.any():
                     # timed so summaries can report decode-phase throughput
                     # (tokens per second spent inside decode ticks) — the
@@ -648,13 +947,20 @@ class RequestServer:
                         batch, bucket, now, table=pf_table, ticket=pf_ticket
                     )
                     progressed = True
+                if self._chunk_state is not None and not chunk_first:
+                    self._chunk_tick(now)
+                    progressed = True
                 if not progressed:
                     # hash_done is set only after the last admit, so a
                     # pending() re-read under the lock cannot miss a request
                     # admitted after the depth snapshot above
                     if hash_done.is_set():
                         with self._lock:
-                            if self.scheduler.pending() == 0:
+                            if (
+                                self.scheduler.pending() == 0
+                                and not self._long_queue
+                                and self._chunk_state is None
+                            ):
                                 break
                     time.sleep(2e-4)
         finally:
@@ -668,6 +974,11 @@ class RequestServer:
             for k, v in self.prefetch.stats.summary().items():
                 c = self.telemetry.counter(k)
                 c.value = 0  # stats are cumulative; snapshot, don't double-count
+                c.inc(v)
+        if self.kv_pool is not None:
+            for k, v in self.kv_pool.stats.summary().items():
+                c = self.telemetry.counter(k)
+                c.value = 0
                 c.inc(v)
         return self.telemetry
 
@@ -697,7 +1008,7 @@ class RequestServer:
             overlap = self.prefetch.stats.overlap_s
         acc_hist = t.histogram("accepted_per_step")
         tick_s = t.counter("decode_tick_s_total").value
-        return {
+        out = {
             "completed": t.counter("requests_completed").value,
             "rejected": t.counter("requests_rejected").value,
             "deadline_miss": t.counter("deadline_miss").value,
@@ -728,3 +1039,16 @@ class RequestServer:
             "upload_overlap_s": overlap,
             "async_prefetch": 1.0 if self.prefetch is not None else 0.0,
         }
+        if self.residency is not None:
+            out.update(self.residency.summary())
+            out["paged_kv"] = 1.0
+            out["long_prefills_completed"] = t.counter(
+                "long_prefills_completed"
+            ).value
+            out["prefill_chunks"] = t.counter("prefill_chunks").value
+            out["requests_rejected_too_long"] = t.counter(
+                "requests_rejected_prompt_exceeds_max_bucket"
+            ).value
+        else:
+            out["paged_kv"] = 0.0
+        return out

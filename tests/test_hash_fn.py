@@ -8,7 +8,9 @@ import pytest
 
 from conftest import reduced_params
 from repro.core.hash_fn import (
+    _lstm_layer,
     hash_fn_apply,
+    hash_fn_apply_segmented,
     hash_fn_param_count,
     hash_hit_rate,
     init_hash_fn,
@@ -102,6 +104,35 @@ def test_hash_fn_learns_router():
     m = evaluate_hash_fn(hp, emb, out["router_logits"], top=3)
     assert m["top1_hit"] > 2.0 / E, m   # decisively above chance (1/E)
     assert m["top3_hit"] > m["top1_hit"] - 1e-9
+
+
+def test_segmented_apply_long_prompt_contract():
+    """The O(S·seg) long-prompt build: identical to the one-shot predictor
+    while the prompt fits one segment, and the LSTM carry threading across
+    segments is exact (only the SparseMax attention is segment-local)."""
+    d_model, L, E, dh = 64, 2, 8, 16
+    hp = init_hash_fn(jax.random.PRNGKey(0), d_model, L, E, d_h=dh)
+    emb = jax.random.normal(jax.random.PRNGKey(1), (2, 48, d_model))
+
+    full = hash_fn_apply(hp, emb, num_experts=E)
+    one = hash_fn_apply_segmented(hp, emb, E, seg_len=64)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(one))
+
+    multi = hash_fn_apply_segmented(hp, emb, E, seg_len=16)
+    assert multi.shape == (2, 48, L, E)
+    assert bool(jnp.isfinite(multi).all())
+
+    # recurrent half is exact across a segment boundary: a resumed scan
+    # reproduces the unsegmented hidden sequence bit-for-bit in structure
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 48, dh))
+    h_full, _ = _lstm_layer(hp["lstm1"], x)
+    h_a, carry = _lstm_layer(hp["lstm1"], x[:, :20])
+    h_b, _ = _lstm_layer(hp["lstm1"], x[:, 20:], carry)
+    np.testing.assert_allclose(
+        np.asarray(h_full),
+        np.asarray(jnp.concatenate([h_a, h_b], axis=1)),
+        atol=1e-6,
+    )
 
 
 def test_sparsemax_jnp_matches_kernel_ref():

@@ -1,0 +1,476 @@
+"""Paged K/V residency (core/residency.py) + chunked prefill.
+
+Three layers of guarantees:
+
+  * pool bookkeeping contracts — position-ordered allocation, spill /
+    page-in round-trips that restore exact bytes, pinning, the
+    full-attention overcommit refusal, and the split_budget arbitration;
+
+  * byte-identity differentials — the paged decode path (engine and
+    request server, sync and async prefetch, fp and int8 slots, vanilla
+    and speculative, EP=1 and EP=2) produces greedy outputs identical to
+    the ring-cache path while the budget covers the working set, and a
+    chunked long prefill matches a big-bucket unchunked server
+    token-for-token (capacity_factor is set high so MoE capacity never
+    binds — chunked prefill drops FEWER tokens than a full-S forward
+    when it does, see docs/ARCHITECTURE.md);
+
+  * kernel parity — flash_decode_paged (scalar-prefetched page table)
+    against the gather-based oracle, including spilled (-1) entries and
+    windowed masking.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.decode_engine import SiDADecodeEngine
+from repro.core.hash_fn import init_hash_fn
+from repro.core.residency import KVPagePool, PagedKVConfig, ResidencyManager
+from repro.kernels import ops, ref
+from repro.launch.serve import validate_serve_args
+from repro.models.transformer import init_params, n_moe_layers
+from repro.serving import Request, RequestServer
+
+
+def needs_devices(n):
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=f"needs {n} simulated devices "
+               f"(XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+               f"+ REPRO_MULTI_DEVICE_TESTS=1)",
+    )
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """2-layer miniature with capacity_factor high enough that MoE token
+    capacity never binds — the regime where chunked prefill is exact."""
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=2,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16, draft=True,
+    )
+    return cfg, params, hp
+
+
+# ---------------------------------------------------------------------------
+# pool bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_paged_config_geometry():
+    p = PagedKVConfig(page_size=8, kv_pages=4)
+    assert p.enabled and p.seq_len == 32 and p.pages_per_lane() == 4
+    p = PagedKVConfig(page_size=8, kv_pages=4, max_seq=100)
+    assert p.seq_len == 100 and p.pages_per_lane() == 13
+    assert not PagedKVConfig(kv_pages=0).enabled
+
+
+def test_split_budget():
+    # equal masses -> ~50/50 bytes; the floor keeps both pools functional
+    slots, pages = ResidencyManager.split_budget(
+        1000, expert_slot_bytes=100, page_bytes=10, n_moe_layers=2,
+    )
+    assert slots >= 1 and pages >= 1
+    assert slots * 100 * 2 + (pages + 1) * 10 <= 1000
+    # mass skew moves bytes between the classes
+    s_kv, p_kv = ResidencyManager.split_budget(
+        1000, 100, 10, 2, expert_mass=1.0, kv_mass=3.0,
+    )
+    assert p_kv > pages and s_kv <= slots
+    with pytest.raises(AssertionError):
+        ResidencyManager.split_budget(100, 100, 10, 2)  # below floor
+
+
+def _rand_kv(pool, rng, S):
+    G, K, D = pool.n_groups, pool.cfg.n_kv_heads, pool.cfg.hd
+    return {
+        f"sub{s}": (
+            rng.standard_normal((G, S, K, D)).astype(np.float32),
+            rng.standard_normal((G, S, K, D)).astype(np.float32),
+        )
+        for s in pool.kv_subs
+    }
+
+
+def _page_of(cache, pool, skey, pid):
+    e = cache[skey]
+    return np.asarray(e["kp"][:, pid]), np.asarray(e["vp"][:, pid])
+
+
+def test_pool_spill_page_in_roundtrip(tiny):
+    cfg, _, _ = tiny
+    pool = KVPagePool(cfg, PagedKVConfig(page_size=4, kv_pages=4), n_lanes=1)
+    cache = pool.init_cache()
+    rng = np.random.default_rng(0)
+    kv = _rand_kv(pool, rng, 12)
+    cache = pool.seed(cache, 0, kv, 12)
+    assert pool.resident_pages() == 3 and pool.stats.allocs == 3
+    skey = f"sub{pool.kv_subs[0]}"
+    pid = int(pool.table[0, 1])
+    k_before, v_before = _page_of(cache, pool, skey, pid)
+    np.testing.assert_array_equal(k_before, kv[skey][0][:, 4:8])
+
+    cache = pool.spill(cache, 0, 1)
+    assert pool.table[0, 1] == -1 and pool.resident_pages() == 2
+    assert pool.stats.spills == 1 and pool.stats.bytes_spilled == pool.page_bytes()
+
+    cache = pool.page_in(cache, 0, 1)  # inline (no pipeline)
+    pid2 = int(pool.table[0, 1])
+    assert pid2 >= 0 and pool.stats.page_ins == 1
+    k_after, v_after = _page_of(cache, pool, skey, pid2)
+    np.testing.assert_array_equal(k_after, k_before)
+    np.testing.assert_array_equal(v_after, v_before)
+
+    # pinned pages refuse to spill
+    pool.pin_lane(0)
+    with pytest.raises(AssertionError):
+        pool.spill(cache, 0, 0)
+    pool.unpin_all()
+    pool.release_lane(0)
+    assert pool.resident_pages() == 0 and not pool._spill
+
+
+def test_pool_async_page_in_commits_on_sync(tiny):
+    """With a pipeline attached the H2D stage rides the transfer queue;
+    bytes only land in the cache after the fence (sync)."""
+    from repro.core.offload import ExpertStore, PrefetchPipeline
+
+    cfg, params, _ = tiny
+    store = ExpertStore(cfg, params, slots_per_layer=cfg.moe.num_experts)
+    pipe = PrefetchPipeline(store, depth=2)
+    try:
+        pool = KVPagePool(cfg, PagedKVConfig(page_size=4, kv_pages=4),
+                          n_lanes=1, pipeline=pipe)
+        cache = pool.init_cache()
+        rng = np.random.default_rng(1)
+        cache = pool.seed(cache, 0, _rand_kv(pool, rng, 8), 8)
+        skey = f"sub{pool.kv_subs[0]}"
+        k_ref, v_ref = _page_of(cache, pool, skey, int(pool.table[0, 0]))
+        cache = pool.spill(cache, 0, 0)
+        cache = pool.page_in(cache, 0, 0, priority=0)
+        cache = pool.sync(cache)
+        k_got, v_got = _page_of(cache, pool, skey, int(pool.table[0, 0]))
+        np.testing.assert_array_equal(k_got, k_ref)
+        np.testing.assert_array_equal(v_got, v_ref)
+        assert not pool._fences and not pool._arrived
+    finally:
+        pipe.close()
+
+
+def test_pool_full_attention_overcommit_asserts(tiny):
+    """Full attention reads every allocated position: a working set larger
+    than the device pool must refuse loudly, never silently attend past
+    spilled pages."""
+    cfg, _, _ = tiny
+    pool = KVPagePool(
+        cfg, PagedKVConfig(page_size=4, kv_pages=2, max_seq=32), n_lanes=1,
+    )
+    cache = pool.init_cache()
+    cache = pool.ensure(cache, 0, 8)  # exactly the pool: fine
+    with pytest.raises(AssertionError, match="full-attention working set"):
+        pool.ensure(cache, 0, 12)
+
+
+# ---------------------------------------------------------------------------
+# engine differentials: paged == ring
+# ---------------------------------------------------------------------------
+
+_PAGED = PagedKVConfig(page_size=8, kv_pages=4)  # seq_len = 32
+
+
+def _generate(tiny, paged, quantized=False, prefetch_depth=0, spec=False):
+    cfg, params, hp = tiny
+    eng = SiDADecodeEngine(
+        cfg, params, hp, slots_per_layer=cfg.moe.num_experts, serve_top_k=1,
+        quantized_slots=quantized, prefetch_depth=prefetch_depth,
+        spec_mode="draft" if spec else "off", spec_k=3,
+    )
+    out, m = eng.generate(
+        np.array([1, 2], np.int32), steps=10, cache_len=32, paged=paged,
+    )
+    eng.close()
+    return out, m
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("prefetch_depth", [0, 2])
+def test_engine_paged_matches_ring(tiny, quantized, prefetch_depth):
+    ref_out, _ = _generate(tiny, None, quantized, prefetch_depth)
+    got, _ = _generate(tiny, _PAGED, quantized, prefetch_depth)
+    np.testing.assert_array_equal(ref_out, got)
+
+
+def test_engine_spec_paged_matches_ring(tiny):
+    ref_out, _ = _generate(tiny, None, spec=True)
+    got, m = _generate(tiny, _PAGED, spec=True)
+    np.testing.assert_array_equal(ref_out, got)
+    assert m.tokens == 20
+
+
+# ---------------------------------------------------------------------------
+# server differentials: paged == ring, chunked == big-bucket
+# ---------------------------------------------------------------------------
+
+
+def _reqs(cfg, seed, n=5):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(4, 16)),)).astype(np.int32),
+            max_new_tokens=int(rng.integers(3, 8)),
+        )
+        for i in range(n)
+    ]
+
+
+def _serve(tiny, reqs, ep_shards=1, **kw):
+    cfg, params, hp = tiny
+    if ep_shards > 1:
+        from repro.launch.mesh import make_ep_mesh
+        from repro.core.offload import ShardedStoreConfig
+        from repro.sharding.policy import serve_ctx
+
+        kw["ctx"] = serve_ctx(make_ep_mesh(ep_shards))
+        kw["sharded"] = ShardedStoreConfig(ep_shards=ep_shards)
+    kw.setdefault("buckets", (8, 16))
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=cfg.moe.num_experts,
+        max_lanes=3, max_prefill_batch=3, **kw,
+    )
+    srv.run(reqs, realtime=False)
+    srv.close()
+    return srv
+
+
+@pytest.mark.parametrize("prefetch_depth", [0, 2])
+def test_server_paged_matches_ring(tiny, prefetch_depth):
+    cfg = tiny[0]
+    ring = _serve(tiny, _reqs(cfg, 1), cache_len=32,
+                  prefetch_depth=prefetch_depth)
+    paged = _serve(tiny, _reqs(cfg, 1), paged=PagedKVConfig(page_size=8, kv_pages=16),
+                   prefetch_depth=prefetch_depth)
+    assert {r.rid: r.generated for r in ring.completed} == \
+           {r.rid: r.generated for r in paged.completed}
+    assert paged.summary()["paged_kv"] == 1.0
+    assert ring.summary()["paged_kv"] == 0.0
+
+
+def test_server_spec_paged_matches_ring(tiny):
+    cfg = tiny[0]
+    kw = dict(spec_mode="draft", spec_k=3)
+    ring = _serve(tiny, _reqs(cfg, 1), cache_len=32, **kw)
+    paged = _serve(tiny, _reqs(cfg, 1),
+                   paged=PagedKVConfig(page_size=8, kv_pages=16), **kw)
+    assert {r.rid: r.generated for r in ring.completed} == \
+           {r.rid: r.generated for r in paged.completed}
+
+
+def _long_prompt(cfg, P=40, seed=2):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, (P,)
+    ).astype(np.int32)
+
+
+def test_server_chunked_long_prefill_matches_big_bucket(tiny):
+    """A 40-token prompt through buckets (8, 16) + 8-token chunks ==
+    the same prompt through an unchunked 64-bucket server, token for
+    token (capacity never binds — see the fixture)."""
+    cfg = tiny[0]
+    prompt = _long_prompt(cfg)
+    big = _serve(tiny, [Request(rid=0, prompt=prompt.copy(), max_new_tokens=6)],
+                 buckets=(64,), cache_len=128)
+    chunked = _serve(
+        tiny, [Request(rid=0, prompt=prompt.copy(), max_new_tokens=6)],
+        paged=PagedKVConfig(page_size=8, kv_pages=16, prefill_chunk=8),
+    )
+    assert len(chunked.completed) == 1 and not chunked.rejected
+    assert big.completed[0].generated == chunked.completed[0].generated
+    s = chunked.summary()
+    assert s["prefill_chunks"] == 5          # ceil(40 / 8)
+    assert s["long_prefills_completed"] == 1
+    assert chunked.completed[0].chunk_pos == 40
+
+
+def test_server_long_and_short_interleave(tiny):
+    cfg = tiny[0]
+    rng = np.random.default_rng(3)
+    mix = [Request(rid=0, prompt=_long_prompt(cfg), max_new_tokens=4)] + [
+        Request(rid=1 + i,
+                prompt=rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(3)
+    ]
+    srv = _serve(tiny, mix,
+                 paged=PagedKVConfig(page_size=8, kv_pages=16, prefill_chunk=8))
+    assert sorted(r.rid for r in srv.completed) == [0, 1, 2, 3]
+
+
+def test_server_admission_rejections(tiny):
+    cfg = tiny[0]
+    # ring server, no chunking: prompt beyond the largest bucket
+    srv = _serve(tiny, [Request(rid=0, prompt=_long_prompt(cfg),
+                                max_new_tokens=4)], cache_len=32)
+    assert srv.rejected and \
+        srv.rejected[0].reject_reason == "prompt_exceeds_max_bucket"
+    assert srv.telemetry.counter(
+        "requests_rejected_prompt_exceeds_max_bucket").value == 1
+
+    # paged server: prompt + decode budget beyond the page-table width
+    srv = _serve(
+        tiny, [Request(rid=0, prompt=_long_prompt(cfg), max_new_tokens=200)],
+        paged=PagedKVConfig(page_size=8, kv_pages=16, prefill_chunk=8),
+    )
+    assert srv.rejected and \
+        srv.rejected[0].reject_reason == "exceeds_addressable_range"
+    assert srv.telemetry.counter(
+        "requests_rejected_exceeds_addressable_range").value == 1
+
+
+def test_server_windowed_tight_budget_pages(tiny):
+    """Windowed attention bounds the residency span, so a long prompt
+    streams through a pool SMALLER than its own length — out-of-window
+    pages spill to host and page back in (the counters prove both paths
+    actually ran)."""
+    cfg0 = tiny[0]
+    cfg = dataclasses.replace(
+        cfg0, attn=dataclasses.replace(cfg0.attn, window=8,
+                                       layer_pattern=("local",)),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+                      cfg.moe.num_experts, d_h=16)
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=cfg.moe.num_experts,
+        max_lanes=2, max_prefill_batch=2, buckets=(8, 16),
+        paged=PagedKVConfig(page_size=4, kv_pages=6, prefill_chunk=8,
+                            max_seq=64),
+    )
+    srv.run([Request(rid=0, prompt=_long_prompt(cfg), max_new_tokens=6)],
+            realtime=False)
+    srv.close()
+    assert len(srv.completed) == 1
+    s = srv.summary()
+    assert s["kv_page_spills"] > 0 and s["kv_page_ins"] > 0
+    assert s["kv_pages_allocated"] > 6  # more pages touched than fit at once
+
+
+@pytest.mark.slow
+def test_longctx_32k_chunked_prefill_smoke():
+    """CI long-context smoke: a synthetic 32k-token prompt streams through
+    chunked prefill with a device budget of 32 pages (512 resident
+    positions) — thousands of cold-page spills later the request still
+    decodes and completes. Windowed attention bounds the residency span,
+    so the per-chunk working set is O(window + chunk), not O(32k)."""
+    # NOTE: default capacity_factor — this is a completion/counter smoke,
+    # not a byte-exactness differential, and a high factor would blow up
+    # the per-chunk dispatch one-hot ([1, T, E, C] with C ∝ factor·T).
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=2,
+        attn=dataclasses.replace(cfg.attn, window=64,
+                                 layer_pattern=("local",)),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+                      cfg.moe.num_experts, d_h=16)
+    P = 32 * 1024 - 8
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (P,)
+    ).astype(np.int32)
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=cfg.moe.num_experts,
+        max_lanes=2, max_prefill_batch=2, buckets=(8, 16),
+        paged=PagedKVConfig(page_size=16, kv_pages=32, prefill_chunk=256,
+                            max_seq=32 * 1024),
+    )
+    srv.run([Request(rid=0, prompt=prompt, max_new_tokens=4)],
+            realtime=False)
+    srv.close()
+    assert len(srv.completed) == 1
+    assert len(srv.completed[0].generated) == 4
+    s = srv.summary()
+    assert s["prefill_chunks"] == -(-P // 256)
+    assert s["long_prefills_completed"] == 1
+    assert s["kv_page_spills"] > 1000  # ~2k pages through a 32-slot pool
+    assert s["kv_pages_allocated"] >= P // 16
+
+
+@needs_devices(2)
+@pytest.mark.parametrize("prefetch_depth", [0, 2])
+def test_ep2_server_paged_matches_ring(tiny, prefetch_depth):
+    """Paged-vs-ring byte identity holds under EP=2 sharded serving too
+    (page-ins ride shard 0's transfer queue when async)."""
+    cfg = tiny[0]
+    ring = _serve(tiny, _reqs(cfg, 1), ep_shards=2, cache_len=32,
+                  prefetch_depth=prefetch_depth)
+    paged = _serve(tiny, _reqs(cfg, 1), ep_shards=2,
+                   paged=PagedKVConfig(page_size=8, kv_pages=16),
+                   prefetch_depth=prefetch_depth)
+    assert {r.rid: r.generated for r in ring.completed} == \
+           {r.rid: r.generated for r in paged.completed}
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_flash_decode_paged_matches_ref(window):
+    rng = np.random.default_rng(0)
+    B, H, K, D, page, n_pages, Mp = 2, 4, 2, 8, 4, 5, 4
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages + 1, page, K, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages + 1, page, K, D)), jnp.float32)
+    # lane 0: pages 0..2 resident, page 3 unallocated; lane 1: page 0
+    # spilled (-1) — its positions must contribute nothing
+    table = jnp.asarray(np.array([[0, 1, 2, -1], [-1, 3, 4, -1]], np.int32))
+    pos = jnp.asarray(np.array([10, 9], np.int32))
+    got = ops.flash_decode_paged(q, kp, vp, table, pos, window=window)
+    want = ref.flash_decode_paged_ref(q, kp, vp, table, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# launcher flag validation
+# ---------------------------------------------------------------------------
+
+
+def _args(**over):
+    base = dict(engine="server", kv_pages=0, page_size=16, prefill_chunk=0,
+                max_seq=0, seq=32, new_tokens=8, spec_mode="off", spec_k=4)
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+def test_validate_serve_args():
+    validate_serve_args(_args())                       # ring mode: fine
+    validate_serve_args(_args(kv_pages=8))             # paged: fine
+    validate_serve_args(_args(kv_pages=8, prefill_chunk=8, max_seq=256))
+
+    bad = [
+        _args(prefill_chunk=8),                        # chunk needs pages
+        _args(max_seq=64),                             # max_seq needs pages
+        _args(kv_pages=8, engine="sida"),              # server-only flags
+        _args(kv_pages=8, max_seq=64),                 # max_seq < resident
+        _args(kv_pages=2, seq=64),                     # seq > bucket, no chunk
+        _args(kv_pages=8, seq=128, new_tokens=64),     # beyond addressable
+        _args(kv_pages=8, spec_mode="draft", spec_k=200),
+    ]
+    for ns in bad:
+        with pytest.raises(SystemExit, match="serve: invalid flags"):
+            validate_serve_args(ns)
