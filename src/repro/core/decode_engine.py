@@ -362,11 +362,16 @@ class SiDADecodeEngine:
         return pool.init_cache(), pool
 
     @staticmethod
-    def _page_tick(pool, cache, upto: np.ndarray):
+    def _page_tick(pool, cache, upto: np.ndarray, extra_span: int = 0):
         """Pre-step paging: make each lane's positions resident up to
-        `upto[b]`, clear fences, refresh the device table."""
+        `upto[b]`, clear fences, refresh the device table. In-span pages
+        are pinned as they are ensured (lane N's alloc must never evict a
+        page lane M's upcoming step reads); the caller unpins after the
+        step."""
         for b in range(upto.shape[0]):
-            cache = pool.ensure(cache, b, int(upto[b]))
+            cache = pool.ensure(
+                cache, b, int(upto[b]), pin=True, extra_span=extra_span
+            )
         cache = pool.sync(cache)
         cache["page_table"] = pool.device_table()
         return cache
@@ -420,6 +425,8 @@ class SiDADecodeEngine:
                 slot_ids[:, :, 0, :], w[:, :, 0, :],
             )
             out[:, i] = np.asarray(tokens)  # forces the step; slots consumed
+            if pool is not None:
+                pool.unpin_all()            # pinned by _page_tick
             if ticket is not None:
                 ticket.release()
             m.steps += 1
@@ -461,10 +468,14 @@ class SiDADecodeEngine:
         while filled.min() < steps:
             if pool is not None:
                 # verify writes the whole K-block before acceptance is known;
-                # pin each lane's pages so eviction can't race the rollback
-                cache = self._page_tick(pool, cache, pos_np + K)
-                for b in range(B):
-                    pool.pin_lane(b)
+                # _page_tick pins the ensured pages so eviction can't race
+                # the rollback. Clamp to the addressable range: a lane near
+                # the edge drafts past it, but overflow writes route to the
+                # trash page and the loop stops before accepting them
+                cache = self._page_tick(
+                    pool, cache, np.minimum(pos_np + K, pool.paged.seq_len),
+                    extra_span=K - 1,
+                )
             inputs, ids, alpha, states = self._draft_unroll(
                 self.hash_params, self.embed_table, tokens, hstate
             )

@@ -351,11 +351,26 @@ class KVPagePool:
         upto_pos: int,
         priority: int = 0,
         weight: float = 1.0,
+        pin: bool = False,
+        extra_span: int = 0,
     ) -> dict:
         """Make positions [0, upto_pos) of `lane` safe to read/write:
         allocate unallocated pages in position order and page spilled
         in-span pages back in. Out-of-window spilled pages stay on host —
-        no decode tick can read them."""
+        no decode tick can read them.
+
+        With `pin`, every in-span page is pinned the moment it is resident
+        — a later alloc (for this lane or another) can then never evict a
+        page the upcoming tick reads or writes; over-pressure surfaces as
+        the explicit pool-exhausted error instead of silent mis-attention.
+        The caller unpins after its jitted step (`unpin_lane`/`unpin_all`).
+
+        `extra_span` widens the in-span floor for multi-position steps
+        (chunked prefill, speculative verify): the block's EARLIEST query
+        reads `window` back from the block's first position, which is
+        `block_len - 1` positions before `upto_pos - 1` — pass that as the
+        extra span so its in-window pages page back in and pin too. No-op
+        for full attention (span 0), where everything is resident."""
         assert upto_pos <= self.Mp * self.page, (
             f"position {upto_pos} exceeds addressable range "
             f"{self.Mp * self.page} (raise PagedKVConfig.max_seq)"
@@ -372,16 +387,27 @@ class KVPagePool:
             )
         lo = 0
         if self.span:
-            lo = max(0, upto_pos - 1 - self.span) // self.page
+            lo = max(0, upto_pos - 1 - self.span - extra_span) // self.page
         with self._lock:
+            if pin:
+                # pin already-resident in-span pages BEFORE any alloc below
+                # — otherwise an alloc for an earlier (out-of-span) page
+                # could evict an in-span page this very ensure then has to
+                # page straight back in
+                for i in range(lo, npages):
+                    pid = int(self.table[lane, i])
+                    if pid >= 0:
+                        self._pinned.add(pid)
             for i in range(npages):
-                if self.table[lane, i] >= 0:
-                    continue
-                if (lane, i) in self._spill:
-                    if i >= lo:
+                if self.table[lane, i] < 0:
+                    if (lane, i) in self._spill:
+                        if i < lo:
+                            continue  # out of span: stays on host
                         cache = self.page_in(cache, lane, i, priority=priority)
-                else:
-                    cache, _ = self.alloc(cache, lane, i, weight)
+                    else:
+                        cache, _ = self.alloc(cache, lane, i, weight)
+                if pin and i >= lo:
+                    self._pinned.add(int(self.table[lane, i]))
         self.touch_lane(lane, upto_pos - 1, weight)
         return cache
 
@@ -396,29 +422,50 @@ class KVPagePool:
         """Scatter a prefill forward's rope-applied K/V into the lane's
         pages. `kv` maps "sub{s}" -> (k, v) each [G, S, K, D] with
         S >= length; positions beyond `length` in the last page are
-        zero-padded (masked out by causal validity until overwritten)."""
+        zero-padded (masked out by causal validity until overwritten).
+
+        Pages are pinned for the duration: under pool pressure a later
+        alloc would otherwise pick a just-allocated, not-yet-written page
+        of this very lane as its eviction victim — spilling pre-write
+        garbage to host and silently dropping the prompt's K/V."""
         npages = -(-length // self.page)
+        pinned_here: List[int] = []
         with self._lock:
-            for i in range(npages):
-                if self.table[lane, i] < 0:
-                    cache, _ = self.alloc(cache, lane, i)
-            cache = dict(cache)
-            for s in self.kv_subs:
-                skey = f"sub{s}"
-                k_np, v_np = (np.asarray(a) for a in kv[skey])
-                e = dict(cache[skey])
+            try:
                 for i in range(npages):
+                    if self.table[lane, i] < 0:
+                        # any stale host spill for this page is overwritten
+                        # wholesale below — drop it rather than page it in
+                        self._spill.pop((lane, i), None)
+                        cache, _ = self.alloc(cache, lane, i)
                     pid = int(self.table[lane, i])
-                    lo, hi = i * self.page, min((i + 1) * self.page, length)
-                    kblk = np.zeros(
-                        (k_np.shape[0], self.page) + k_np.shape[2:], k_np.dtype
-                    )
-                    vblk = np.zeros_like(kblk)
-                    kblk[:, : hi - lo] = k_np[:, lo:hi]
-                    vblk[:, : hi - lo] = v_np[:, lo:hi]
-                    e["kp"] = _page_write(e["kp"], pid, jnp.asarray(kblk))
-                    e["vp"] = _page_write(e["vp"], pid, jnp.asarray(vblk))
-                cache[skey] = e
+                    if pid not in self._pinned:
+                        self._pinned.add(pid)
+                        pinned_here.append(pid)
+                cache = dict(cache)
+                for s in self.kv_subs:
+                    skey = f"sub{s}"
+                    k_np, v_np = (np.asarray(a) for a in kv[skey])
+                    e = dict(cache[skey])
+                    for i in range(npages):
+                        pid = int(self.table[lane, i])
+                        assert pid >= 0, (
+                            f"page ({lane}, {i}) evicted mid-seed despite pin"
+                        )
+                        lo, hi = i * self.page, min((i + 1) * self.page, length)
+                        kblk = np.zeros(
+                            (k_np.shape[0], self.page) + k_np.shape[2:],
+                            k_np.dtype,
+                        )
+                        vblk = np.zeros_like(kblk)
+                        kblk[:, : hi - lo] = k_np[:, lo:hi]
+                        vblk[:, : hi - lo] = v_np[:, lo:hi]
+                        e["kp"] = _page_write(e["kp"], pid, jnp.asarray(kblk))
+                        e["vp"] = _page_write(e["vp"], pid, jnp.asarray(vblk))
+                    cache[skey] = e
+            finally:
+                for pid in pinned_here:
+                    self._pinned.discard(pid)
         return cache
 
     def release_lane(self, lane: int) -> None:

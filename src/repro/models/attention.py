@@ -396,8 +396,11 @@ def _paged_gather(
 
     Windowed layers gather only the pages the attention span can reach
     (bounded S keeps the per-step gather proportional to the window, not
-    to the 32k+ addressable range); full-attention layers gather all Mp
-    pages — there the page budget itself bounds the range."""
+    to the 32k+ addressable range); full-attention layers gather the
+    first n_pages table entries — allocation is position-ordered and the
+    full-attention working set is asserted to fit the resident pool
+    (KVPagePool.ensure), so entries past n_pages are always -1 and the
+    gather stays proportional to the pool, not the addressable range."""
     B, Mp = page_table.shape
     page = kp.shape[1]
     trash = kp.shape[0] - 1
@@ -407,8 +410,9 @@ def _paged_gather(
         idx = base[:, None] + jnp.arange(Wp)[None, :]             # [B, Wp]
         pt = jnp.take_along_axis(page_table, idx, axis=1)
     else:
-        idx = jnp.broadcast_to(jnp.arange(Mp)[None, :], (B, Mp))
-        pt = page_table
+        Wp = min(Mp, trash)  # trash == n_pages (pool width P+1, trash last)
+        idx = jnp.broadcast_to(jnp.arange(Wp)[None, :], (B, Wp))
+        pt = page_table[:, :Wp]
     kg = kp[jnp.where(pt >= 0, pt, trash)]                        # [B,Np,page,K,D]
     vg = vp[jnp.where(pt >= 0, pt, trash)]
     spos = idx[:, :, None] * page + jnp.arange(page)[None, None, :]
@@ -449,8 +453,15 @@ def attend_decode_paged(
     q = apply_rope(q[:, None], pos[:, None], cfg.attn.rope_theta)[:, 0]
     k_new, v_new = _project_kv(params, x_tok[:, None, :], cfg)
     k_new = apply_rope(k_new, pos[:, None], cfg.attn.rope_theta)
-    pid = jnp.take_along_axis(page_table, (pos // page)[:, None], axis=1)[:, 0]
-    pid = jnp.where(pid >= 0, pid, trash)
+    # positions past the addressable range (speculative overdraft at the
+    # edge) must land in the trash page — an unclamped OOB table index
+    # would silently alias the last real page under jit's clamping
+    Mp = page_table.shape[1]
+    pidx = pos // page
+    pid = jnp.take_along_axis(
+        page_table, jnp.clip(pidx, 0, Mp - 1)[:, None], axis=1
+    )[:, 0]
+    pid = jnp.where((pidx < Mp) & (pid >= 0), pid, trash)
     if active is not None:
         pid = jnp.where(active, pid, trash)
     off = pos % page
@@ -493,8 +504,13 @@ def attend_prefill_chunk(
     k_new, v_new = _project_kv(params, x, cfg)
     k_new = apply_rope(k_new, q_pos, cfg.attn.rope_theta)
     p = q_pos[0]                                     # [T]
-    pid = page_table[0][p // page]
-    pid = jnp.where(pid >= 0, pid, trash)
+    # the last chunk's pad tail can reach past the addressable range when
+    # it is not a chunk multiple — route those writes to the trash page
+    # rather than letting jit's index clamping alias the last real page
+    Mp = page_table.shape[1]
+    pidx = p // page
+    pid = page_table[0][jnp.clip(pidx, 0, Mp - 1)]
+    pid = jnp.where((pidx < Mp) & (pid >= 0), pid, trash)
     off = p % page
     new_kp = kp.at[pid, off].set(k_new[0].astype(kp.dtype))
     new_vp = vp.at[pid, off].set(v_new[0].astype(vp.dtype))

@@ -645,12 +645,16 @@ def verify_step(
             page = entry["kp"].shape[2]
             trash = entry["kp"].shape[1] - 1
             pt = cache["page_table"]
+            Mp = pt.shape[1]
             for i in range(kb):
                 p_i = pos0 + i
+                # block positions past the addressable range wrote the
+                # trash page (see attend_decode_paged) — restore there too
+                pidx_i = p_i // page
                 pid_i = jnp.take_along_axis(
-                    pt, (p_i // page)[:, None], axis=1
+                    pt, jnp.clip(pidx_i, 0, Mp - 1)[:, None], axis=1
                 )[:, 0]
-                pid_i = jnp.where(pid_i >= 0, pid_i, trash)
+                pid_i = jnp.where((pidx_i < Mp) & (pid_i >= 0), pid_i, trash)
                 if active is not None:
                     pid_i = jnp.where(active, pid_i, trash)
                 off_i = p_i % page

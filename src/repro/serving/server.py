@@ -500,15 +500,25 @@ class RequestServer:
     # ------------------------------------------------------------------
     # decode: one continuous-batch step
     # ------------------------------------------------------------------
-    def _page_tick(self, upto: np.ndarray) -> None:
+    def _page_tick(self, upto: np.ndarray, extra_span: int = 0) -> None:
         """Pre-tick paging: make each lane's positions resident up to
         `upto[lane]` (0 = skip the lane), clear page-in fences, and refresh
         the device page table — the tick that follows can then read every
-        in-span position through the table."""
+        in-span position through the table.
+
+        Each lane's in-span pages are PINNED as they are ensured: without
+        the pin, ensure() for lane N could evict an in-span page of an
+        already-ensured lane M, and the tick would silently drop lane M's
+        real keys through a -1 table entry. Over-pressure now raises the
+        explicit pool-exhausted error instead; the tick unpins after its
+        jitted step."""
         pool = self.kv_pool
         for lane in range(self.max_lanes):
             if upto[lane] > 0:
-                self.cache = pool.ensure(self.cache, lane, int(upto[lane]))
+                self.cache = pool.ensure(
+                    self.cache, lane, int(upto[lane]), pin=True,
+                    extra_span=extra_span,
+                )
         self.cache = pool.sync(self.cache)
         self.cache["page_table"] = pool.device_table()
 
@@ -529,11 +539,23 @@ class RequestServer:
         active = self._active.copy()
         if self.kv_pool is not None:
             # verify writes the whole K-block before acceptance is known;
-            # pin each lane's pages so a seeding spill cannot race the
-            # rollback restore
-            self._page_tick(np.where(active, self._lane_pos + self.spec_k, 0))
-            for lane in np.nonzero(active)[0]:
-                self.kv_pool.pin_lane(int(lane))
+            # _page_tick pins the ensured pages so nothing the verify reads
+            # or writes can be evicted before the rollback restore. The
+            # target is clamped to the addressable range: a lane finishing
+            # at the edge drafts past it, but those overflow writes route
+            # to the trash page and can never be accepted (admission caps
+            # P + max_new at cache_len)
+            # extra_span: the block's first query sits spec_k - 1 positions
+            # before its last — widen the page-in floor so its window pages
+            # come back too
+            self._page_tick(
+                np.where(
+                    active,
+                    np.minimum(self._lane_pos + self.spec_k, self.cache_len),
+                    0,
+                ),
+                extra_span=self.spec_k - 1,
+            )
         act_dev = jnp.asarray(active)
         unrolled = ticket = stale_ticket = None
         if self._pending_spec is not None:
@@ -699,6 +721,7 @@ class RequestServer:
         if ticket is not None:
             ticket.release()
         if self.kv_pool is not None:
+            self.kv_pool.unpin_all()     # pinned by _page_tick
             self._lane_pos[active] += 1
         logits_np = np.asarray(logits) if self.keep_decode_logits else None
         self._step += 1
@@ -795,8 +818,17 @@ class RequestServer:
         else:
             trans = self.store.prepare(tbl)
         slot_ids, w_t = self.store.translate(tbl, trans)
-        # residency for the chunk's writes plus its attention span
-        self.cache = self.kv_pool.ensure(self.cache, lane, done + T)
+        # residency for the chunk's writes plus its attention span, pinned
+        # so a later page's alloc can't evict an earlier in-span page
+        # mid-ensure. Clamped to the addressable range: when cache_len is
+        # not a chunk multiple the last chunk's pad tail reaches past it,
+        # but those positions route to the trash page inside the step
+        # extra_span: the chunk's first query is T - 1 positions before its
+        # last, so its attention window reaches that much further back
+        self.cache = self.kv_pool.ensure(
+            self.cache, lane, min(done + T, self.cache_len), pin=True,
+            extra_span=T - 1,
+        )
         self.cache = self.kv_pool.sync(self.cache)
         self.cache["page_table"] = self.kv_pool.device_table()
         logits, self.cache = self._chunk_step(
@@ -804,6 +836,7 @@ class RequestServer:
             jnp.asarray(lane, jnp.int32),
             jnp.asarray(slot_ids), jnp.asarray(w_t),
         )
+        self.kv_pool.unpin_lane(lane)
         lengths = jnp.asarray([n], jnp.int32)
         if st["hstate"] is None:
             st["hstate"] = self._hash_prefill(

@@ -168,6 +168,47 @@ def test_pool_async_page_in_commits_on_sync(tiny):
         pipe.close()
 
 
+def test_seed_overcommit_errors_not_corrupts(tiny):
+    """seed() pins its pages while it allocates and writes: a seed larger
+    than the device pool raises the explicit pool-exhausted error. The
+    unpinned version silently corrupted — the alloc for a later page would
+    evict a just-allocated, not-yet-written page of the SAME lane, spill
+    pre-write garbage to host, and drop that page's prompt K/V into the
+    trash page."""
+    cfg, _, _ = tiny
+    pool = KVPagePool(
+        cfg, PagedKVConfig(page_size=4, kv_pages=2, max_seq=16), n_lanes=1,
+    )
+    cache = pool.init_cache()
+    rng = np.random.default_rng(5)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.seed(cache, 0, _rand_kv(pool, rng, 12), 12)
+    assert not pool._pinned  # pins released even on the error path
+
+
+def test_seed_pressure_spills_other_lane_losslessly(tiny):
+    """Seeding lane B under pool pressure may evict lane A's pages — but
+    only WRITTEN ones (lane B's own in-flight pages are pinned), so the
+    spill round-trips lane A's exact bytes."""
+    cfg, _, _ = tiny
+    pool = KVPagePool(
+        cfg, PagedKVConfig(page_size=4, kv_pages=4, max_seq=16), n_lanes=2,
+    )
+    cache = pool.init_cache()
+    rng = np.random.default_rng(6)
+    kv0 = _rand_kv(pool, rng, 8)
+    cache = pool.seed(cache, 0, kv0, 8)           # 2 pages
+    cache = pool.seed(cache, 1, _rand_kv(pool, rng, 12), 12)  # 3 pages: evicts
+    assert sum(1 for k in pool._spill if k[0] == 0) == 1
+    pool.release_lane(1)
+    cache = pool.ensure(cache, 0, 8)              # pages the spill back in
+    skey = f"sub{pool.kv_subs[0]}"
+    for i in range(2):
+        k_got, v_got = _page_of(cache, pool, skey, int(pool.table[0, i]))
+        np.testing.assert_array_equal(k_got, kv0[skey][0][:, 4 * i : 4 * i + 4])
+        np.testing.assert_array_equal(v_got, kv0[skey][1][:, 4 * i : 4 * i + 4])
+
+
 def test_pool_full_attention_overcommit_asserts(tiny):
     """Full attention reads every allocated position: a working set larger
     than the device pool must refuse loudly, never silently attend past
@@ -216,6 +257,18 @@ def test_engine_spec_paged_matches_ring(tiny):
     got, m = _generate(tiny, _PAGED, spec=True)
     np.testing.assert_array_equal(ref_out, got)
     assert m.tokens == 20
+
+
+def test_engine_paged_wide_table_matches_ring(tiny):
+    """max_seq >> resident pool: the full-attention gather is bounded by
+    the pool width (position-ordered allocation means table entries past
+    n_pages are always -1), so a wide addressable range must not change
+    outputs — and must not be gathered per step."""
+    ref_out, _ = _generate(tiny, None)
+    got, _ = _generate(
+        tiny, PagedKVConfig(page_size=8, kv_pages=4, max_seq=256)
+    )
+    np.testing.assert_array_equal(ref_out, got)
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +329,25 @@ def test_server_spec_paged_matches_ring(tiny):
                    paged=PagedKVConfig(page_size=8, kv_pages=16), **kw)
     assert {r.rid: r.generated for r in ring.completed} == \
            {r.rid: r.generated for r in paged.completed}
+
+
+def test_server_spec_at_addressable_edge_matches_ring(tiny):
+    """A request that exactly fills the addressable range (P + max_new ==
+    cache_len) decodes speculatively without tripping ensure()'s range
+    assert: the draft block's overdraft positions are clamped out of the
+    ensure target and their writes route to the trash page."""
+    cfg = tiny[0]
+    prompt = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (8,)
+    ).astype(np.int32)
+    reqs = lambda: [Request(rid=0, prompt=prompt.copy(), max_new_tokens=24)]
+    kw = dict(spec_mode="draft", spec_k=3)
+    ring = _serve(tiny, reqs(), cache_len=32, **kw)
+    paged = _serve(tiny, reqs(),
+                   paged=PagedKVConfig(page_size=8, kv_pages=4), **kw)
+    assert len(paged.completed) == 1 and not paged.rejected
+    assert ring.completed[0].generated == paged.completed[0].generated
+    assert len(paged.completed[0].generated) == 24
 
 
 def _long_prompt(cfg, P=40, seed=2):
@@ -339,32 +411,131 @@ def test_server_admission_rejections(tiny):
         "requests_rejected_exceeds_addressable_range").value == 1
 
 
-def test_server_windowed_tight_budget_pages(tiny):
-    """Windowed attention bounds the residency span, so a long prompt
-    streams through a pool SMALLER than its own length — out-of-window
-    pages spill to host and page back in (the counters prove both paths
-    actually ran)."""
-    cfg0 = tiny[0]
+@pytest.fixture(scope="module")
+def wtiny():
+    """`tiny`, but windowed (window=8 sliding attention) — the regime where
+    the residency span is bounded and cold pages genuinely spill."""
+    cfg = get_config("switch-base-8").reduced()
     cfg = dataclasses.replace(
-        cfg0, attn=dataclasses.replace(cfg0.attn, window=8,
-                                       layer_pattern=("local",)),
+        cfg, n_layers=2,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+        attn=dataclasses.replace(cfg.attn, window=8,
+                                 layer_pattern=("local",)),
     )
     params = init_params(jax.random.PRNGKey(0), cfg)
     hp = init_hash_fn(jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
                       cfg.moe.num_experts, d_h=16)
+    return cfg, params, hp
+
+
+def _serve_windowed(wtiny, reqs, paged, lanes=2, buckets=(8, 16)):
+    cfg, params, hp = wtiny
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=cfg.moe.num_experts,
-        max_lanes=2, max_prefill_batch=2, buckets=(8, 16),
-        paged=PagedKVConfig(page_size=4, kv_pages=6, prefill_chunk=8,
-                            max_seq=64),
+        max_lanes=lanes, max_prefill_batch=lanes, buckets=buckets,
+        paged=paged,
     )
-    srv.run([Request(rid=0, prompt=_long_prompt(cfg), max_new_tokens=6)],
-            realtime=False)
-    srv.close()
+    try:
+        srv.run(reqs, realtime=False)
+    finally:
+        srv.close()
+    return srv
+
+
+def test_server_windowed_tight_budget_pages(wtiny):
+    """Windowed attention bounds the residency span, so a long prompt
+    streams through a pool SMALLER than its own length — out-of-window
+    pages spill to host, and the output is byte-identical to a pool that
+    never spills. No page-ins here: with in-span pages pinned through each
+    tick, a single lane's window advances monotonically, so only
+    out-of-span pages spill and they never re-enter the span (the page-in
+    path under pressure is covered by the two-lane test below)."""
+    cfg = wtiny[0]
+    req = lambda: Request(rid=0, prompt=_long_prompt(cfg), max_new_tokens=6)
+    srv = _serve_windowed(
+        wtiny, [req()],
+        PagedKVConfig(page_size=4, kv_pages=6, prefill_chunk=8, max_seq=64),
+    )
     assert len(srv.completed) == 1
     s = srv.summary()
-    assert s["kv_page_spills"] > 0 and s["kv_page_ins"] > 0
+    assert s["kv_page_spills"] > 0
     assert s["kv_pages_allocated"] > 6  # more pages touched than fit at once
+    roomy = _serve_windowed(
+        wtiny, [req()],
+        PagedKVConfig(page_size=4, kv_pages=16, prefill_chunk=8, max_seq=64),
+    )
+    assert roomy.summary()["kv_page_spills"] == 0
+    assert roomy.completed[0].generated == srv.completed[0].generated
+
+
+def test_server_two_lane_pressure_pages_in(wtiny):
+    """Two lanes whose combined touched pages exceed the pool ping-pong it:
+    one lane's tick (pinning its own in-span pages) evicts the other's
+    in-span pages, whose next tick must page them back in — the counter
+    proves the server-level spill→page-in round trip runs, and both lanes'
+    outputs stay byte-identical to a pool that never spills."""
+    cfg = wtiny[0]
+    reqs = lambda: [
+        Request(rid=r, prompt=_long_prompt(cfg, seed=r), max_new_tokens=6)
+        for r in range(2)
+    ]
+    srv = _serve_windowed(
+        wtiny, reqs(),
+        PagedKVConfig(page_size=4, kv_pages=8, prefill_chunk=8, max_seq=64),
+    )
+    assert len(srv.completed) == 2
+    s = srv.summary()
+    assert s["kv_page_spills"] > 0 and s["kv_page_ins"] > 0
+    roomy = _serve_windowed(
+        wtiny, reqs(),
+        PagedKVConfig(page_size=4, kv_pages=32, prefill_chunk=8, max_seq=64),
+    )
+    assert roomy.summary()["kv_page_spills"] == 0
+    by_rid = lambda sv: {r.rid: r.generated for r in sv.completed}
+    assert by_rid(roomy) == by_rid(srv)
+
+
+def test_server_chunked_unaligned_max_seq(wtiny):
+    """max_seq need not be a multiple of prefill_chunk: the last chunk of a
+    near-max prompt pads past the addressable range, its ensure target is
+    clamped, and the pad writes route to the trash page — the request
+    completes with the same tokens as an aligned-range server instead of
+    killing the serve loop."""
+    cfg = wtiny[0]
+    prompt = _long_prompt(cfg, P=41, seed=9)
+    req = lambda: Request(rid=0, prompt=prompt.copy(), max_new_tokens=1)
+    srv = _serve_windowed(
+        wtiny, [req()],
+        PagedKVConfig(page_size=4, kv_pages=8, prefill_chunk=8, max_seq=42),
+    )
+    assert len(srv.completed) == 1 and not srv.rejected
+    aligned = _serve_windowed(
+        wtiny, [req()],
+        PagedKVConfig(page_size=4, kv_pages=8, prefill_chunk=8, max_seq=48),
+    )
+    assert aligned.completed[0].generated == srv.completed[0].generated
+
+
+def test_server_decode_overpressure_errors_not_misattends(wtiny):
+    """When the combined in-span working set of the decode batch exceeds
+    the page pool, the tick must raise the explicit pool-exhausted error —
+    the unpinned version let lane N's ensure() evict an in-span page of an
+    already-ensured lane M, and the tick silently dropped lane M's real
+    keys through the -1 table entry (wrong logits, no error)."""
+    cfg = wtiny[0]
+    rng = np.random.default_rng(11)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(2)
+    ]
+    with pytest.raises(RuntimeError, match="exhausted"):
+        _serve_windowed(
+            wtiny, reqs,
+            PagedKVConfig(page_size=4, kv_pages=3, max_seq=32), lanes=2,
+            buckets=(8,),
+        )
 
 
 @pytest.mark.slow
