@@ -28,6 +28,15 @@ Poisson arrivals through the continuous-batching RequestServer vs
                          are a residency variant, not a bit-replica. It
                          records the sharding's latency/stall cost on the
                          simulated mesh (emitted when >= 4 devices);
+* ``server_ep_repl``   — server_ep plus hot-expert replication
+                         (``replicate_hot=1``: α-hot experts keep copies on
+                         several shards, tokens round-robin over the
+                         least-loaded copy) and periodic load-aware home
+                         rebalancing; adds shard_upload_max_over_mean. The
+                         paired deterministic probe is the
+                         ``shard_load_balance`` block: fixed-home vs
+                         replicated max/mean per-shard uploads on a skewed
+                         hot-expert trace (runs at any device count);
 * ``sequential``       — same machinery, one lane, FCFS (isolates the win
                          from continuous batching + SLA/affinity scheduling);
 * ``ondemand_prefill`` — router-inline OnDemand baseline serving each
@@ -71,16 +80,18 @@ def _requests(cfg, n: int, rate: float, seed: int, slo: float) -> List[Request]:
 
 def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
                    prefetch_depth=0, realtime=True, quantized_slots=False,
-                   spec_mode="off", spec_k=4, ep_shards=1):
+                   spec_mode="off", spec_k=4, ep_shards=1, replicate_hot=0,
+                   rebalance_interval=0.0):
     from repro.launch.serve import ep_setup
 
-    ctx, sharded = ep_setup(ep_shards)
+    ctx, sharded = ep_setup(ep_shards, replicate_hot)
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=slots,
         max_lanes=lanes, max_prefill_batch=lanes,
         buckets=(8, 16, 32), cache_len=48, eviction=eviction,
         prefetch_depth=prefetch_depth, quantized_slots=quantized_slots,
         spec_mode=spec_mode, spec_k=spec_k, ctx=ctx, sharded=sharded,
+        rebalance_interval=rebalance_interval,
     )
     # warm every jit shape outside the timed stream, then reset the clocks
     warm_rng = np.random.default_rng(99)
@@ -241,6 +252,74 @@ def longctx_probe(cfg, params, hp, slots, lanes, seed):
     return out
 
 
+def shard_balance_probe(cfg, params, steps=24):
+    """Per-shard upload balance on a skewed (hot-expert) trace: fixed-home
+    placement vs hot-expert replication + online rebalancing.
+
+    Deterministic store+pipeline-level probe (no mesh needed — the shard
+    bookkeeping and per-shard transfer queues are logical): two α-hot
+    experts share ONE home shard under block placement with a 1-slot-per-
+    shard budget, so fixed homes churn that shard every step (evict one
+    hot expert to load the other) while the remaining shards idle —
+    max/mean per-shard uploads ≈ shard count. With `replicate_hot` the
+    copies land in the idle shards' free slots and promotion-on-eviction
+    keeps both hot experts resident, so the upload traffic collapses to
+    the initial loads spread over the fleet; rebalancing then separates
+    the hot experts' homes. The acceptance bar: the replicated max/mean
+    is strictly closer to 1.0 than fixed-home."""
+    from repro.core.hash_table import HashTable
+    from repro.core.offload import (
+        ExpertStore, PrefetchPipeline, ShardedStoreConfig,
+    )
+    from repro.models.transformer import n_moe_layers
+
+    E, L, shards = cfg.moe.num_experts, n_moe_layers(cfg), 4
+
+    def trace(step):
+        # hot expert alternates 0/1 (both homed on shard 0 under block
+        # placement); expert 2 rides along as steady background traffic
+        ids = np.full((L, 1, 8, 1), step % 2, np.int64)
+        ids[:, :, -1, :] = 2
+        return HashTable(step, ids, np.ones((L, 1, 8, 1), np.float32))
+
+    def run(replicate: int, rebalance_every: int):
+        st = ExpertStore(
+            cfg, params, slots_per_layer=shards,   # 1 slot per shard
+            eviction="lru",
+            sharded=ShardedStoreConfig(
+                ep_shards=shards, placement="block", replicate_hot=replicate,
+            ),
+        )
+        pf = PrefetchPipeline(st, depth=2)
+        for i in range(steps):
+            t = pf.submit(trace(i))
+            t.wait()
+            t.release()
+            if rebalance_every and (i + 1) % rebalance_every == 0:
+                st.rebalance_homes()
+        ups = [float(pf.stats.uploads_by_shard.get(m, 0))
+               for m in range(shards)]
+        pf.close()
+        mean = sum(ups) / shards
+        return {
+            "uploads_by_shard": ups,
+            "max_over_mean": max(ups) / mean if mean > 0 else 1.0,
+            "rebalance_moves": float(st.stats.rebalance_moves),
+            "replica_loads": float(st.stats.replica_loads),
+        }
+
+    out = {
+        "steps": float(steps),
+        "fixed_home": run(replicate=0, rebalance_every=0),
+        "replicated": run(replicate=1, rebalance_every=8),
+    }
+    out["balance_improved"] = bool(
+        abs(out["replicated"]["max_over_mean"] - 1.0)
+        < abs(out["fixed_home"]["max_over_mean"] - 1.0)
+    )
+    return out
+
+
 def serve_prefill_fcfs(baseline_cls, cfg, params, reqs, slots) -> Dict[str, float]:
     """FCFS request-at-a-time prefill through a router-inline baseline."""
     from repro.serving.telemetry import Histogram
@@ -333,6 +412,20 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
         )
         result["engines"]["server_ep"]["ep_shards"] = 4.0
         result["engines"]["server_ep"]["ep_slots"] = float(ep_slots)
+        # same sharded server with hot-expert replication + periodic
+        # load-aware home rebalancing: α-hot experts keep copies on
+        # several shards (dispatch round-robins tokens over the
+        # least-loaded copies), and home placement re-derives from the
+        # decayed α-mass every rebalance interval. The summary() row adds
+        # shard_upload_max_over_mean — the per-shard transfer-queue load
+        # skew this machinery exists to flatten (1.0 == perfectly even).
+        result["engines"]["server_ep_repl"] = serve_requests(
+            cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
+            ep_slots, lanes, prefetch_depth=2, ep_shards=4,
+            replicate_hot=1, rebalance_interval=0.05,
+        )
+        result["engines"]["server_ep_repl"]["ep_shards"] = 4.0
+        result["engines"]["server_ep_repl"]["ep_slots"] = float(ep_slots)
     else:
         result["ep_skipped"] = (
             f"server_ep needs >= 4 devices, have {_jax.device_count()}"
@@ -369,6 +462,10 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     result["speculative"] = spec_probe(
         cfg, params, hp, n_requests, slots, lanes, seed
     )
+    # the headline replication delta: deterministic skewed-trace per-shard
+    # upload balance, fixed-home vs replicated + rebalanced (store +
+    # pipeline level, so it runs regardless of device count)
+    result["shard_load_balance"] = shard_balance_probe(cfg, params)
     return result
 
 

@@ -58,11 +58,23 @@ class ShardedStoreConfig:
     placed with the slot dim sharded over `model_axis` (see
     `sharding/policy.py::slot_pool_spec`), which is exactly the layout the
     shard_map expert dispatch consumes without any resharding collective.
+
+    `replicate_hot` > 0 lets α-mass-hot experts hold up to that many EXTRA
+    copies on other shards (free slots only — replicas are opportunistic
+    and never evict a primary). Replicas keep global slot ids, so tickets,
+    fences, and the EP dispatch are untouched; translation spreads each
+    token's lookup round-robin over the copies, least-loaded shard first.
+    `hot_alpha` is the decayed-α share above which an expert counts as hot
+    (default 2/E — twice the uniform share); `alpha_decay` is the per-table
+    decay of the α EMA that also drives `ExpertStore.rebalance_homes`.
     """
 
     ep_shards: int = 1
     model_axis: str = "model"
     placement: str = "mod"            # "mod": e -> e % shards | "block": e -> e // (E/shards)
+    replicate_hot: int = 0            # extra copies a hot expert may hold
+    hot_alpha: Optional[float] = None  # hot threshold as a share of total α
+    alpha_decay: float = 0.9          # per-table decay of the α-mass EMA
 
     @property
     def enabled(self) -> bool:
@@ -79,12 +91,20 @@ class ShardedStoreConfig:
 
 
 @jax.jit
-def _translate_dev(trans: Array, ids: Array, w: Array) -> Tuple[Array, Array]:
+def _translate_dev(cand: Array, ids: Array, w: Array) -> Tuple[Array, Array]:
     """Device-side expert->slot translation (see ExpertStore.translate for
-    the semantics, including per-token miss renormalization). trans [L, E],
+    the semantics, including per-token miss renormalization). cand [L, E, R]
+    holds R candidate slots per expert (replicated hot experts list every
+    copy, least-loaded shard first, cyclically tiled; R=1 when replication
+    is off); each routed (token, k) lane picks copy `flat_index % R`, so
+    replicated traffic round-robins over the copies while every copy holds
+    bit-identical weights — the chosen value never depends on the pick.
     ids/w [L, B, S, k] -> (slot_ids int32, weights f32), all on device."""
-    L = ids.shape[0]
-    slots = jnp.take_along_axis(trans, ids.reshape(L, -1), axis=1).reshape(ids.shape)
+    L, R = ids.shape[0], cand.shape[2]
+    flat = ids.reshape(L, -1)
+    s_all = jnp.take_along_axis(cand, flat[:, :, None], axis=1)   # [L, T, R]
+    rr = (jnp.arange(flat.shape[1]) % R)[None, :, None]
+    slots = jnp.take_along_axis(s_all, rr, axis=2)[..., 0].reshape(ids.shape)
     wz = w.astype(jnp.float32)
     masked = wz * (slots >= 0)
     orig = wz.sum(axis=-1, keepdims=True)
@@ -172,6 +192,11 @@ class EvictionPolicy:
     def touch(self, e: int, weight: float = 0.0) -> None:
         pass
 
+    def forget(self, e: int) -> None:
+        """Remove `e` without treating it as an eviction (the expert's
+        primary copy migrated to another shard's policy)."""
+        pass
+
     def pick_victim(self, protected) -> Optional[int]:
         raise NotImplementedError
 
@@ -186,6 +211,12 @@ class FIFOPolicy(EvictionPolicy):
 
     def admit(self, e: int, weight: float = 0.0) -> None:
         self.order.append(e)
+
+    def forget(self, e: int) -> None:
+        try:
+            self.order.remove(e)
+        except ValueError:
+            pass
 
     def pick_victim(self, protected) -> Optional[int]:
         for _ in range(len(self.order)):
@@ -215,6 +246,9 @@ class LRUPolicy(EvictionPolicy):
         if e in self.order:
             self.order.move_to_end(e)
 
+    def forget(self, e: int) -> None:
+        self.order.pop(e, None)
+
     def pick_victim(self, protected) -> Optional[int]:
         for victim in self.order:
             if victim not in protected:
@@ -241,6 +275,9 @@ class AlphaMassPolicy(EvictionPolicy):
     def touch(self, e: int, weight: float = 0.0) -> None:
         if e in self.score:
             self.score[e] = self.decay * self.score[e] + weight
+
+    def forget(self, e: int) -> None:
+        self.score.pop(e, None)
 
     def pick_victim(self, protected) -> Optional[int]:
         best, best_s = None, None
@@ -269,11 +306,14 @@ class TransferStats:
     hits: int = 0
     dropped: int = 0               # planned loads dropped (every victim protected)
     prepare_time: float = 0.0      # synchronous upload time inside the forward path
+    replica_loads: int = 0         # extra-copy uploads of hot experts (also in loads)
+    rebalance_moves: int = 0       # primaries migrated by rebalance_homes
 
     def reset(self):
         self.bytes_h2d = self.loads = self.evictions = self.hits = 0
         self.dropped = 0
         self.prepare_time = 0.0
+        self.replica_loads = self.rebalance_moves = 0
 
 
 class ExpertStore:
@@ -319,10 +359,17 @@ class ExpertStore:
         self.moe_subs = [s for s in range(self.per) if sub_kind(cfg, s).get("moe")]
         self.L = n_moe_layers(cfg)
         self.E = cfg.moe.num_experts
-        self.S = min(slots_per_layer, self.E)
         self.sharded = sharded or ShardedStoreConfig()
         self.shards = self.sharded.ep_shards
         assert self.shards >= 1
+        # the pool never needs more than one slot per expert COPY: E without
+        # replication, E * (1 + replicate_hot) with it (hot experts occupy a
+        # slot in every hosting shard's partition)
+        copies = (
+            min(self.shards, 1 + max(0, self.sharded.replicate_hot))
+            if self.shards > 1 else 1
+        )
+        self.S = min(slots_per_layer, self.E * copies)
         if self.shards > 1:
             assert self.E % self.shards == 0, (
                 f"experts ({self.E}) must divide over ep_shards ({self.shards})"
@@ -333,8 +380,12 @@ class ExpertStore:
             # round the total budget down to a per-shard-even split
             self.S = (self.S // self.shards) * self.shards
         self.S_loc = self.S // self.shards
-        # expert -> home shard (fixed placement => deterministic, local plans)
+        # expert -> home shard (initial placement; rebalance_homes may
+        # re-assign it online from the decayed α-mass EMA)
         self.home = self.sharded.home_shards(self.E)
+        # copies per hot expert: primary + replicate_hot extras, never more
+        # than one copy per shard
+        self.R = copies
         self.mesh = mesh
         if self.shards > 1 and mesh is not None:
             assert self.sharded.model_axis in mesh.axis_names, mesh
@@ -425,6 +476,13 @@ class ExpertStore:
         self.policy: Dict[Tuple[int, int], List[EvictionPolicy]] = {}
         self.free: Dict[Tuple[int, int], List[List[int]]] = {}
         self.pinned: Dict[Tuple[int, int], set] = {}
+        # replica copies per (g, s): expert -> {shard: global slot}. EXTRA
+        # copies only — the primary stays in `resident`; each shard's
+        # eviction policy tracks exactly the primaries its slots host.
+        self.replicas: Dict[Tuple[int, int], Dict[int, Dict[int, int]]] = {}
+        # decayed per-expert α mass per (g, s): drives the hot threshold
+        # for replication and the greedy placement in rebalance_homes
+        self.alpha_ema: Dict[Tuple[int, int], np.ndarray] = {}
         for g in range(self.n_groups):
             for s in self.moe_subs:
                 self.resident[(g, s)] = {}
@@ -436,6 +494,15 @@ class ExpertStore:
                     for m in range(self.shards)
                 ]
                 self.pinned[(g, s)] = set()
+                self.replicas[(g, s)] = {}
+                self.alpha_ema[(g, s)] = np.zeros((self.E,), np.float64)
+        # decayed α mass dispatched per home shard (the load half of
+        # shard_load_score; the other half is measured upload traffic)
+        self._shard_alpha = np.zeros((self.shards,), np.float64)
+        # bumped on every residency mutation (loads, evictions, replica
+        # reclaims, rebalance moves) — cache_affinity consumers key their
+        # memoization on it (see Scheduler._order)
+        self._epoch = 0
         # planning + device commits are serialized under this lock so the
         # async transfer thread and the forward thread never interleave slot
         # bookkeeping or double-donate a slot buffer
@@ -456,7 +523,9 @@ class ExpertStore:
         return jax.device_put(arr, self._pool_sharding)
 
     def shard_of(self, e: int) -> int:
-        """Home shard of expert `e` (every slot it may occupy lives there)."""
+        """Current home shard of expert `e` — where NEW primary loads go.
+        Under replication/rebalancing the expert may also hold copies (or
+        a promoted primary) on other shards; see `replicas`."""
         return int(self.home[e])
 
     def shard_slots(self, shard: int) -> range:
@@ -468,9 +537,18 @@ class ExpertStore:
         """Global translation table [L, E] -> per-shard LOCAL slot ids
         (misses stay -1). The expert-parallel dispatch derives the same
         thing on device from the global ids; this is the host-side view
-        (tests + debugging)."""
-        local = np.where(trans >= 0, trans - self.home[None, :] * self.S_loc, -1)
+        (tests + debugging). Derived from the slot id, not the home table:
+        under replication/rebalancing an expert's primary may be hosted
+        off its (current) home shard."""
+        local = np.where(trans >= 0, trans % self.S_loc, -1)
         return local.astype(np.int32)
+
+    @property
+    def affinity_epoch(self) -> int:
+        """Monotonic residency version: unchanged epoch => every
+        `cache_affinity` answer is unchanged too, so callers may reuse a
+        memoized score instead of rescanning L×E under the store lock."""
+        return self._epoch
 
     # ------------------------------------------------------------------
     def device_bytes(self) -> int:
@@ -541,33 +619,159 @@ class ExpertStore:
         protected = needed_set | self.pinned[(g, s)]
         if extra_protected:
             protected |= extra_protected
+        if mass is not None and self.shards > 1:
+            # decayed α EMA (per layer + per home shard): replication's hot
+            # threshold, the least-loaded replica pick, and rebalance_homes
+            # all read these. The decay is per plan call, spread so one full
+            # table pass decays by sharded.alpha_decay overall.
+            d = self.sharded.alpha_decay ** (1.0 / max(self.L, 1))
+            ema = self.alpha_ema[(g, s)]
+            ema *= d
+            ema += mass
+            self._shard_alpha *= d
+            self._shard_alpha += np.bincount(
+                self.home, weights=mass, minlength=self.shards
+            )
         pending: List[Tuple[int, int, int]] = []
+        mutated = False
         for e in needed:
             e = int(e)
-            sh = int(self.home[e])          # slots only from the home shard
-            policy = policies[sh]
             w = float(mass[e]) if mass is not None else 0.0
             if e in res:
+                # touch the HOSTING shard's policy — under promotion or
+                # rebalancing the primary may live off its home shard
                 self.stats.hits += 1
-                policy.touch(e, w)
+                policies[res[e] // self.S_loc].touch(e, w)
                 continue
+            sh = int(self.home[e])          # new loads go to the home shard
+            policy = policies[sh]
             if free[sh]:
                 slot = free[sh].pop()
             else:
-                # evict per the home shard's policy — never an expert needed
-                # right now or pinned (victims are shard-local by
-                # construction: the policy only ever admitted home experts)
+                # reclaim a replica slot first (copies are opportunistic —
+                # the expert stays resident via its primary elsewhere),
+                # then evict per the hosting shard's policy
+                slot = self._reclaim_replica(g, s, sh, protected)
+            if slot is None:
                 victim = policy.pick_victim(protected)
                 if victim is None:  # everything resident is protected => drop
                     self.stats.dropped += 1
                     continue
                 slot = res.pop(victim)
-                self.stats.evictions += 1
+                v_reps = self.replicas[(g, s)].get(victim)
+                if v_reps:
+                    # the victim has live copies elsewhere: promote one to
+                    # primary instead of losing residency (only this
+                    # shard's slot is reclaimed, not the expert)
+                    m = min(v_reps)
+                    res[victim] = v_reps.pop(m)
+                    if not v_reps:
+                        del self.replicas[(g, s)][victim]
+                    policies[m].admit(victim, 0.0)
+                else:
+                    self.stats.evictions += 1
             res[e] = slot
             policy.admit(e, w)
             pending.append((g, slot, e))
             self.stats.loads += 1
+            mutated = True
+        if self.R > 1 and mass is not None:
+            reps = self._plan_replicas(g, s, needed_set, protected)
+            pending.extend(reps)
+            mutated = mutated or bool(reps)
+        if mutated:
+            self._epoch += 1
         return pending
+
+    def _reclaim_replica(
+        self, g: int, s: int, sh: int, protected: Set[int]
+    ) -> Optional[int]:
+        """Free one replica slot on shard `sh` (lowest decayed α mass
+        first). Primaries are untouched, and replicas of protected experts
+        (needed now, pinned, or with an upload in flight) are skipped — a
+        pending fence may target that exact slot. Returns the freed global
+        slot id, or None if no replica on `sh` is reclaimable."""
+        reps = self.replicas[(g, s)]
+        ema = self.alpha_ema[(g, s)]
+        best = None
+        for e, by_shard in reps.items():
+            if e in protected or sh not in by_shard:
+                continue
+            if best is None or ema[e] < ema[best]:
+                best = e
+        if best is None:
+            return None
+        slot = reps[best].pop(sh)
+        if not reps[best]:
+            del reps[best]
+        self._epoch += 1
+        return slot
+
+    def _plan_replicas(
+        self, g: int, s: int, needed: Set[int], protected: Set[int]
+    ) -> List[Tuple[int, int, int]]:
+        """Plan extra copies for α-hot needed experts: up to `R` total
+        copies each, FREE slots only (replication never evicts — it soaks
+        idle capacity on under-loaded shards), least-loaded shards first.
+        Caller holds the lock; returns (g, slot, e) uploads to commit."""
+        res = self.resident[(g, s)]
+        reps = self.replicas[(g, s)]
+        free = self.free[(g, s)]
+        ema = self.alpha_ema[(g, s)]
+        tot = float(ema.sum())
+        if tot <= 0.0:
+            return []
+        share = (
+            self.sharded.hot_alpha if self.sharded.hot_alpha is not None
+            else 2.0 / self.E
+        )
+        thr = share * tot
+        score = self.shard_load_score()
+        hot = sorted(
+            (e for e in needed if e in res and float(ema[e]) >= thr),
+            key=lambda e: -float(ema[e]),
+        )
+        out: List[Tuple[int, int, int]] = []
+        for e in hot:
+            by_shard = reps.get(e)
+            have = {res[e] // self.S_loc} | set(by_shard or ())
+            if len(have) >= self.R:
+                continue
+            for m in sorted(range(self.shards), key=lambda m: (score[m], m)):
+                if len(have) >= self.R:
+                    break
+                if m in have or not free[m]:
+                    continue
+                slot = free[m].pop()
+                if by_shard is None:
+                    by_shard = reps.setdefault(e, {})
+                by_shard[m] = slot
+                have.add(m)
+                out.append((g, slot, e))
+                self.stats.loads += 1
+                self.stats.replica_loads += 1
+        return out
+
+    def shard_load_score(self) -> np.ndarray:
+        """[shards] relative load: normalized decayed α dispatch mass plus
+        half-weighted normalized upload traffic (the per-shard
+        `prefetch_uploads_shard{m}` counters when a pipeline is attached).
+        Lower = less loaded; the replica pick and `_plan_replicas` order
+        shards by it."""
+        load = self._shard_alpha.copy()
+        tot = load.sum()
+        load = load / tot if tot > 0 else np.zeros_like(load)
+        pf = self._prefetcher
+        if pf is not None:
+            ups = np.array(
+                [float(pf.stats.uploads_by_shard.get(m, 0))
+                 for m in range(self.shards)],
+                np.float64,
+            )
+            utot = ups.sum()
+            if utot > 0:
+                load = load + 0.5 * ups / utot
+        return load
 
     def commit_loads(self, s: int, items: List[Tuple[int, int, int]]) -> None:
         """Batched host->device writes for sub-slot `s` (one per tensor).
@@ -642,7 +846,10 @@ class ExpertStore:
         for l in range(self.L):
             needed = table.active_experts(l)
             mass = None
-            if len(needed) > self.S or self.eviction == "alpha":
+            # sharded stores always take the mass: the α EMA feeds the hot
+            # threshold for replication and the rebalance placement scores
+            if (len(needed) > self.S or self.eviction == "alpha"
+                    or self.shards > 1):
                 mass = table.activation_mass(l, self.E)
             if len(needed) > self.S:
                 # tighter budget than the active set: keep the highest-α-mass
@@ -714,8 +921,11 @@ class ExpertStore:
         device to compute them with.
         """
         L, B, S, k = table.expert_ids.shape
+        cand = self.replica_cand(trans)                       # [L, E, R]
         flat = table.expert_ids.reshape(L, -1)
-        slots = np.take_along_axis(trans, flat, axis=1).reshape(L, B, S, k)
+        s_all = np.take_along_axis(cand, flat[:, :, None], axis=1)  # [L,T,R]
+        rr = (np.arange(flat.shape[1]) % cand.shape[2])[None, :, None]
+        slots = np.take_along_axis(s_all, rr, axis=2)[..., 0].reshape(L, B, S, k)
         w = table.weights * (slots >= 0)
         orig = table.weights.sum(axis=-1, keepdims=True)
         surv = w.sum(axis=-1, keepdims=True)
@@ -723,14 +933,127 @@ class ExpertStore:
         w = w * scale
         return np.maximum(slots, 0).astype(np.int32), w.astype(np.float32)
 
+    def replica_cand(self, trans: np.ndarray) -> np.ndarray:
+        """Expand a translation table [L, E] into the replica candidate
+        table [L, E, R] `_translate_dev` consumes: for each expert, every
+        live copy of its slot (primary + replicas), sorted least-loaded
+        hosting shard first and cyclically tiled to R, so the per-token
+        round-robin pick spreads dispatch evenly over the copies with a
+        bias toward the idle shards. Unreplicated experts (and the whole
+        table when replication is off) tile the primary — the pick then
+        degenerates to the plain trans lookup."""
+        if self.R <= 1:
+            return trans.reshape(self.L, self.E, 1).astype(np.int32)
+        cand = np.repeat(trans[:, :, None], self.R, axis=2).astype(np.int32)
+        with self._lock:
+            score = self.shard_load_score()
+            for l in range(self.L):
+                g, s = self.layer_to_gs(l)
+                for e, by_shard in self.replicas[(g, s)].items():
+                    if trans[l, e] < 0 or not by_shard:
+                        continue
+                    copies = [int(trans[l, e])] + [
+                        int(sl) for sl in by_shard.values()
+                    ]
+                    copies.sort(key=lambda sl: (score[sl // self.S_loc], sl))
+                    for r in range(self.R):
+                        cand[l, e, r] = copies[r % len(copies)]
+        return cand
+
     def translate_device(self, ids: Array, w: Array, trans: np.ndarray):
         """Device-side `translate`: consumes the predictor's still-on-device
         ids/α [L, B, S, k] plus the (host-planned) translation table and
         returns device (slot_ids, weights). The decode hot loop uses this so
         the only per-step D2H sync left is the ids copy planning itself
-        needs — the slot gather, miss renormalization, and the re-upload of
-        [L, B, S, k] overrides all stay on device."""
-        return _translate_dev(jnp.asarray(trans), ids, w)
+        needs — the slot gather, replica pick, miss renormalization, and
+        the re-upload of [L, B, S, k] overrides all stay on device."""
+        return _translate_dev(jnp.asarray(self.replica_cand(trans)), ids, w)
+
+    # ------------------------------------------------------------------
+    def rebalance_homes(self) -> int:
+        """Online load-aware placement: re-assign expert home shards by
+        greedy LPT over the summed decayed α-mass EMA (heaviest expert
+        first onto the lightest shard, capacity E/shards each), then
+        migrate resident primaries toward their new homes.
+
+        The move protocol never races readers: the OLD primary slot is
+        demoted to a replica (it stays resident and readable until a later
+        plan reclaims it), the NEW copy either promotes an existing replica
+        on the target shard or uploads into a free/reclaimed slot through
+        the normal pending-fence machinery — so every translation snapshot
+        taken before, during, or after a move points at slots that still
+        hold the expert's weights. Returns the number of primaries moved.
+        """
+        if self.shards <= 1:
+            return 0
+        pf = self._prefetcher
+        moved = 0
+        with self._lock:
+            ema = np.zeros((self.E,), np.float64)
+            for arr in self.alpha_ema.values():
+                ema += arr
+            if ema.sum() <= 0.0:
+                return 0
+            cap = self.E // self.shards
+            load = np.zeros((self.shards,), np.float64)
+            count = np.zeros((self.shards,), np.int64)
+            new_home = np.empty((self.E,), np.int32)
+            for e in np.argsort(-ema, kind="stable"):
+                open_sh = [m for m in range(self.shards) if count[m] < cap]
+                m = min(open_sh, key=lambda m: (load[m], m))
+                new_home[e] = m
+                load[m] += ema[e]
+                count[m] += 1
+            if np.array_equal(new_home, self.home):
+                return 0
+            self.home = new_home
+            pending: Dict[int, List[Tuple[int, int, int]]] = {
+                s: [] for s in self.moe_subs
+            }
+            for (g, s), res in self.resident.items():
+                reps = self.replicas[(g, s)]
+                policies = self.policy[(g, s)]
+                free = self.free[(g, s)]
+                protected = set(self.pinned[(g, s)])
+                if pf is not None:
+                    protected |= pf.protected_experts(g, s)
+                for e in list(res.keys()):
+                    tgt = int(new_home[e])
+                    cur = res[e] // self.S_loc
+                    if cur == tgt:
+                        continue
+                    by_shard = reps.setdefault(e, {})
+                    if tgt in by_shard:
+                        # a live copy already sits on the new home: swap
+                        # roles, no bytes move
+                        new_slot = by_shard.pop(tgt)
+                    else:
+                        new_slot = (
+                            free[tgt].pop() if free[tgt]
+                            else self._reclaim_replica(g, s, tgt, protected)
+                        )
+                        if new_slot is None:
+                            # target shard is full of primaries — leave the
+                            # expert where it is; a later pass can move it
+                            if not by_shard:
+                                del reps[e]
+                            continue
+                        pending[s].append((g, new_slot, e))
+                        self.stats.loads += 1
+                    by_shard[cur] = res[e]   # old primary stays readable
+                    res[e] = new_slot
+                    policies[cur].forget(e)
+                    policies[tgt].admit(e, float(ema[e]))
+                    moved += 1
+            if moved:
+                self._epoch += 1
+                self.stats.rebalance_moves += moved
+            if pf is not None:
+                pf.submit_loads(pending, priority=1)
+            else:
+                for s, items in pending.items():
+                    self.commit_loads(s, items)
+        return moved
 
 
 # ---------------------------------------------------------------------------
@@ -888,8 +1211,11 @@ class PrefetchPipeline:
     per shard (the software analogue of one H2D/ICI stream per device), so
     a backlogged shard never head-of-line-blocks another shard's uploads,
     and a ticket's ready fences clear shard-by-shard as each device's slab
-    lands. Fences stay per-expert — an expert's home shard is fixed, so a
-    fence IS a per-shard fence.
+    lands. Jobs route by the DESTINATION SLOT's shard (slot // S_loc), and
+    fences are per-upload: a hot expert may have several copies in flight
+    at once (its primary plus replicas on other shards), each with its own
+    ready event — a consumer fencing on the expert waits for all of them,
+    so no copy a translation may pick is ever observed half-written.
 
     Correctness invariants:
       * an expert referenced by an unreleased ticket, or with an upload in
@@ -966,10 +1292,12 @@ class PrefetchPipeline:
         self._jobs: List[List[collections.deque]] = [
             [collections.deque() for _ in range(3)] for _ in range(self.shards)
         ]
-        # (g, s) -> expert -> ready event for uploads still in flight
-        self._pending: Dict[Tuple[int, int], Dict[int, threading.Event]] = (
-            collections.defaultdict(dict)
-        )
+        # (g, s) -> expert -> {dest slot: ready event} for uploads still in
+        # flight (a replicated expert can have one upload per hosting shard
+        # in flight simultaneously — each slot gets its own fence)
+        self._pending: Dict[
+            Tuple[int, int], Dict[int, Dict[int, threading.Event]]
+        ] = collections.defaultdict(dict)
         # (g, s) -> expert -> refcount from unreleased tickets
         self._refs: Dict[Tuple[int, int], collections.Counter] = (
             collections.defaultdict(collections.Counter)
@@ -1012,14 +1340,14 @@ class PrefetchPipeline:
 
     def events_for(self, needed: Dict[int, np.ndarray]):
         """Ready fences covering `needed` (layer -> expert ids): one entry
-        per needed expert with an upload in flight. Caller holds the lock."""
+        per in-flight upload of a needed expert (a replicated expert
+        contributes every copy's fence). Caller holds the lock."""
         fences = []
         for l, ids in needed.items():
             g, s = self.store.layer_to_gs(l)
             pend = self._pending[(g, s)]
             for e in ids:
-                ev = pend.get(int(e))
-                if ev is not None:
+                for ev in pend.get(int(e), {}).values():
                     fences.append(((g, s, int(e)), ev))
         return fences
 
@@ -1032,6 +1360,13 @@ class PrefetchPipeline:
         """Affinity that credits in-flight prefetches, not just residency —
         the request scheduler ranks queued work with this."""
         return self.store.cache_affinity(table, inflight=self.inflight())
+
+    @property
+    def affinity_epoch(self) -> Tuple[int, int]:
+        """Version key for memoizing `cache_affinity`: the store's
+        residency epoch plus the upload counter (uploads retire pending
+        entries, which the in-flight credit reads)."""
+        return (self.store._epoch, self.stats.uploads)
 
     def submit(
         self, table: HashTable, protect: bool = True,
@@ -1076,15 +1411,17 @@ class PrefetchPipeline:
             trans, pending, needed = self.store.plan(
                 table, protect_fn=self.protected_experts
             )
-            # fan the planned loads out per home shard: each shard's rows
-            # form one job on that shard's transfer queue (per-device
-            # uploads proceed independently; fences clear shard-by-shard)
+            # fan the planned loads out per DESTINATION shard (derived from
+            # the slot — replica uploads of one expert land on several
+            # shards): each shard's rows form one job on that shard's
+            # transfer queue (per-device uploads proceed independently;
+            # fences clear shard-by-shard)
             jobs: Dict[int, Dict[int, List[tuple]]] = {}
             for s, items in pending.items():
                 for g, slot, e in items:
                     ev = threading.Event()
-                    self._pending[(g, s)][e] = ev
-                    sh = int(self.store.home[e])
+                    self._pending[(g, s)].setdefault(e, {})[slot] = ev
+                    sh = slot // self.store.S_loc
                     jobs.setdefault(sh, {}).setdefault(s, []).append(
                         (g, slot, e, ev)
                     )
@@ -1126,6 +1463,45 @@ class PrefetchPipeline:
             self._jobs_cv.notify_all()
         return job.done
 
+    def submit_loads(
+        self,
+        pending: Dict[int, List[Tuple[int, int, int]]],
+        priority: int = 1,
+    ) -> None:
+        """Enqueue pre-planned {sub: [(g, slot, e)]} uploads (the store's
+        `rebalance_homes` migrations ride this): each load gets a pending
+        fence and lands on its destination slot's shard queue. No
+        backpressure — the caller holds the store lock, and a rebalance
+        must never park the serve loop against its own transfer thread."""
+        assert not self._closed, "pipeline is closed"
+        jobs: Dict[int, Dict[int, List[tuple]]] = {}
+        for s, items in pending.items():
+            for g, slot, e in items:
+                ev = threading.Event()
+                self._pending[(g, s)].setdefault(e, {})[slot] = ev
+                sh = slot // self.store.S_loc
+                jobs.setdefault(sh, {}).setdefault(s, []).append(
+                    (g, slot, e, ev)
+                )
+        if jobs:
+            with self._jobs_cv:
+                for sh, job in jobs.items():
+                    self._jobs[sh][priority].append(job)
+                self._jobs_cv.notify_all()
+
+    def _upload_done(
+        self, g: int, s: int, slot: int, e: int, ev: threading.Event
+    ) -> None:
+        """Retire one committed upload's pending entry (caller holds the
+        lock; the identity check guards against a newer upload of the same
+        (expert, slot) registered after an evict+reload)."""
+        pend = self._pending[(g, s)]
+        slots_ev = pend.get(e)
+        if slots_ev is not None and slots_ev.get(slot) is ev:
+            del slots_ev[slot]
+            if not slots_ev:
+                del pend[e]
+
     def _steal(self, ticket: PrefetchTicket) -> None:
         """If any of the ticket's per-shard transfer jobs are still queued
         when its fence is reached, pop them and commit inline on the
@@ -1165,9 +1541,7 @@ class PrefetchPipeline:
                         s, [(g, sl, e) for g, sl, e, _ in rows]
                     )
                     for g, sl, e, ev in rows:
-                        pend = self._pending[(g, s)]
-                        if pend.get(e) is ev:
-                            del pend[e]
+                        self._upload_done(g, s, sl, e, ev)
                 n = sum(len(r) for r in job.values())
                 self.stats.uploads += n
                 self.stats.uploads_by_shard[sh] = (
@@ -1222,7 +1596,9 @@ class PrefetchPipeline:
                         store.commit_loads(s, loads)
                     if any(int(e) not in res for e in missing):
                         progressed_all = False
-                        drain.extend(pend.values())
+                        drain.extend(
+                            ev for d in pend.values() for ev in d.values()
+                        )
                 fences = self.events_for(ticket.needed)
             for _, ev in fences:
                 if not ev.wait(_left()):
@@ -1367,9 +1743,7 @@ class PrefetchPipeline:
             # every tensor of every expert in this batch is committed:
             # ready fences may fire now (no half-written slot is observable)
             for g, slot, e, ev in rows:
-                pend = self._pending[(g, s)]
-                if pend.get(e) is ev:
-                    del pend[e]
+                self._upload_done(g, s, slot, e, ev)
             self.stats.uploads += len(rows)
             self.stats.uploads_by_shard[shard] = (
                 self.stats.uploads_by_shard.get(shard, 0) + len(rows)

@@ -32,24 +32,28 @@ from repro.models.attention import ShardingCtx
 from repro.models.transformer import init_params, n_moe_layers
 
 
-def ep_setup(ep_shards: int):
+def ep_setup(ep_shards: int, replicate_hot: int = 0):
     """(ctx, sharded) for --ep-shards: a 1-D "model" mesh over `ep_shards`
     devices with the expert-parallel serving context (slot pools + expert
     FFN sharded, everything else replicated), or the single-device defaults
-    when ep_shards <= 1."""
+    when ep_shards <= 1. `replicate_hot` lets α-hot experts hold that many
+    extra copies on other shards (see ShardedStoreConfig)."""
     if ep_shards <= 1:
         return ShardingCtx(), None
     from repro.launch.mesh import make_ep_mesh
     from repro.sharding.policy import serve_ctx
 
     mesh = make_ep_mesh(ep_shards)
-    return serve_ctx(mesh), ShardedStoreConfig(ep_shards=ep_shards)
+    return serve_ctx(mesh), ShardedStoreConfig(
+        ep_shards=ep_shards, replicate_hot=replicate_hot
+    )
 
 
 def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
                  prefetch_depth: int = 0, staging_buffers: int = 2,
                  host_quant: str = "none", quantized_slots: bool = False,
-                 scale_granularity: str = "channel", ep_shards: int = 1):
+                 scale_granularity: str = "channel", ep_shards: int = 1,
+                 replicate_hot: int = 0):
     if engine == "standard":
         return StandardServer(cfg, params)
     if engine == "ondemand":
@@ -60,7 +64,7 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
         cfg.moe.num_experts, d_h=64,
     )
-    ctx, sharded = ep_setup(ep_shards)
+    ctx, sharded = ep_setup(ep_shards, replicate_hot)
     return SiDAEngine(
         cfg, params, hp, slots_per_layer=slots, eviction=eviction,
         prefetch_depth=prefetch_depth, staging_buffers=staging_buffers,
@@ -78,6 +82,14 @@ def validate_serve_args(args) -> None:
 
     if args.kv_pages < 0 or args.page_size <= 0 or args.prefill_chunk < 0:
         die("--kv-pages/--prefill-chunk must be >= 0 and --page-size >= 1")
+    if args.replicate_hot < 0 or args.rebalance_interval < 0:
+        die("--replicate-hot and --rebalance-interval must be >= 0")
+    if (args.replicate_hot or args.rebalance_interval) and args.ep_shards <= 1:
+        die("--replicate-hot/--rebalance-interval need --ep-shards > 1 "
+            "(replication and placement act across expert-parallel shards)")
+    if args.rebalance_interval and args.engine != "server":
+        die("--rebalance-interval applies to the request server: "
+            "use --engine server")
     if args.prefill_chunk and not args.kv_pages:
         die("--prefill-chunk needs the paged K/V cache: also pass --kv-pages")
     if args.kv_pages:
@@ -154,7 +166,7 @@ def run_request_server(cfg, params, args) -> None:
             page_size=args.page_size, kv_pages=args.kv_pages,
             prefill_chunk=args.prefill_chunk, max_seq=args.max_seq,
         )
-    ctx, sharded = ep_setup(args.ep_shards)
+    ctx, sharded = ep_setup(args.ep_shards, args.replicate_hot)
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=args.slots,
         max_lanes=args.lanes, max_prefill_batch=args.prefill_batch,
@@ -168,6 +180,7 @@ def run_request_server(cfg, params, args) -> None:
         spec_mode=args.spec_mode,
         spec_k=args.spec_k,
         ctx=ctx, sharded=sharded,
+        rebalance_interval=args.rebalance_interval,
         paged=paged,
     )
     rng = np.random.default_rng(0)
@@ -183,6 +196,8 @@ def run_request_server(cfg, params, args) -> None:
           f"quantized_slots={args.quantized_slots} "
           f"spec={args.spec_mode}/k{args.spec_k} "
           f"ep_shards={args.ep_shards} "
+          f"replicate_hot={args.replicate_hot} "
+          f"rebalance_interval={args.rebalance_interval} "
           f"kv_pages={args.kv_pages}x{args.page_size} "
           f"prefill_chunk={args.prefill_chunk}")
     for k, v in srv.summary().items():
@@ -232,6 +247,15 @@ def main():
                          "1-D 'model' mesh of this many devices; the expert "
                          "FFN runs inside shard_map (fused dequant when "
                          "--quantized-slots). 1 = single-device serving")
+    ap.add_argument("--replicate-hot", type=int, default=0,
+                    help="extra copies an α-mass-hot expert may hold on "
+                         "other shards (free slots only; translation "
+                         "round-robins tokens over the copies). Requires "
+                         "--ep-shards > 1; 0 = fixed single-copy placement")
+    ap.add_argument("--rebalance-interval", type=float, default=0.0,
+                    help="seconds between online home-shard re-placements "
+                         "driven by the decayed α-mass EMA (request-server "
+                         "mode; requires --ep-shards > 1; 0 = off)")
     # request-server mode
     ap.add_argument("--kv-pages", type=int, default=0,
                     help="paged K/V cache: device page budget shared by all "

@@ -322,6 +322,15 @@ def _dispatch_combine_ep(
     replicated sum is bitwise the single-device combine for top-k routing —
     the sharded server's greedy byte-equivalence rests on this. Training
     keeps the psum_scatter into the d-sharded residual layout.
+
+    Hot-expert REPLICATION (ExpertStore.replica_cand) needs no code here:
+    a replica is just another global slot id on a different shard holding
+    bit-identical weights, the slot-range masking above routes each token
+    to whichever shard owns its chosen copy, and each token still hits
+    exactly one copy — so the psum keeps summing one real contribution
+    plus zeros per token, and the `served` exactness argument is
+    unchanged. The same holds for rebalanced placements: moves only change
+    WHICH slot a translation names, never how this dispatch consumes it.
     """
     mesh = ctx.mesh
     maxis = maxis or ctx.expert_axis or ctx.model_axis

@@ -18,7 +18,7 @@ Two scheduling decisions live here, both SLA-aware:
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.offload import ExpertStore
 from repro.serving.request import Request, RequestState
@@ -80,6 +80,12 @@ class Scheduler:
         self.use_affinity = use_affinity
         self.slack_band_s = slack_band_s
         self._queue: List[Request] = []
+        # rid -> (affinity epoch, score): cache_affinity is an O(L·E) scan
+        # under the store lock, so a deep queue re-scoring every request
+        # every tick would serialize the serve loop against the prefetch
+        # thread — scores are reused until the store's residency epoch
+        # moves (see ExpertStore.affinity_epoch)
+        self._aff_cache: Dict[int, Tuple[object, float]] = {}
 
     # ------------------------------------------------------------------
     def enqueue(self, req: Request) -> None:
@@ -97,6 +103,7 @@ class Scheduler:
         for r in expired:
             self._queue.remove(r)
             r.state = RequestState.REJECTED
+            self._aff_cache.pop(r.rid, None)
         return expired
 
     # ------------------------------------------------------------------
@@ -104,7 +111,18 @@ class Scheduler:
         """EDF first; inside a slack band, highest cache affinity first.
         `store` is any affinity provider with `cache_affinity(table)` —
         an ExpertStore (residency only) or a PrefetchPipeline (residency
-        plus in-flight uploads)."""
+        plus in-flight uploads). Affinity is memoized per request against
+        the provider's `affinity_epoch`: within one tick (and across ticks
+        while residency is unchanged) each table is scanned at most once."""
+        epoch = getattr(store, "affinity_epoch", None)
+
+        def affinity(r: Request) -> float:
+            hit = self._aff_cache.get(r.rid)
+            if hit is not None and epoch is not None and hit[0] == epoch:
+                return hit[1]
+            aff = store.cache_affinity(r.table)
+            self._aff_cache[r.rid] = (epoch, aff)
+            return aff
 
         def key(r: Request):
             band = (
@@ -114,7 +132,7 @@ class Scheduler:
             )
             aff = 0.0
             if self.use_affinity and store is not None and r.table is not None:
-                aff = store.cache_affinity(r.table)
+                aff = affinity(r)
             return (band, -aff, r.arrival_s, r.rid)
 
         return sorted(reqs, key=key)
@@ -154,4 +172,5 @@ class Scheduler:
         for r in batch:
             self._queue.remove(r)
             r.state = RequestState.PREFILL
+            self._aff_cache.pop(r.rid, None)
         return batch, bucket

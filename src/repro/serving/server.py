@@ -109,6 +109,7 @@ class RequestServer:
         spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
         spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
         sharded: Optional[ShardedStoreConfig] = None,
+        rebalance_interval: float = 0.0,   # s between home re-placements; 0 = off
         paged: Optional[PagedKVConfig] = None,  # page-table K/V residency
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
@@ -184,6 +185,14 @@ class RequestServer:
         self.max_lanes = max_lanes
         self.max_prefill_batch = max_prefill_batch
         self.drop_expired = drop_expired
+        # online load-aware placement: every `rebalance_interval` seconds
+        # the serve loop re-assigns expert home shards from the decayed
+        # α-mass EMA (ExpertStore.rebalance_homes); moves ride the transfer
+        # queues, so they never stall a tick
+        self.rebalance_interval = (
+            rebalance_interval if self.store.shards > 1 else 0.0
+        )
+        self._last_rebalance = 0.0
         self.keep_prefill_logits = keep_prefill_logits
         self.keep_decode_logits = keep_decode_logits
 
@@ -917,8 +926,10 @@ class RequestServer:
                 with self._lock:
                     if self.drop_expired:
                         for r in self.scheduler.pop_expired(now):
-                            self.rejected.append(r)
-                            self.telemetry.counter("requests_rejected").inc()
+                            # through _reject so reject_reason and the
+                            # per-reason counter stay consistent with every
+                            # other rejection path
+                            self._reject(r, now, "deadline_expired")
                     free = self.lanes.free_count()
                     batch, bucket = ([], 0)
                     if free:
@@ -938,6 +949,16 @@ class RequestServer:
                     depth = self.scheduler.pending() + len(self._long_queue)
                 self.telemetry.gauge("queue_depth").set(depth)
                 self.telemetry.gauge("active_lanes").set(len(self.lanes.active()))
+
+                if (
+                    self.rebalance_interval > 0
+                    and now - self._last_rebalance >= self.rebalance_interval
+                ):
+                    self._last_rebalance = now
+                    moved = self.store.rebalance_homes()
+                    if moved:
+                        self.telemetry.counter("rebalance_moves").inc(moved)
+                        self.telemetry.counter("rebalance_rounds").inc()
 
                 if long_req is not None:
                     self._start_long(long_req, now)
@@ -1003,6 +1024,7 @@ class RequestServer:
         self.telemetry.counter("expert_loads").inc(st.loads)
         self.telemetry.counter("expert_hits").inc(st.hits)
         self.telemetry.counter("expert_evictions").inc(st.evictions)
+        self.telemetry.counter("expert_replica_loads").inc(st.replica_loads)
         if self.prefetch is not None:
             for k, v in self.prefetch.stats.summary().items():
                 c = self.telemetry.counter(k)
@@ -1072,6 +1094,23 @@ class RequestServer:
             "upload_overlap_s": overlap,
             "async_prefetch": 1.0 if self.prefetch is not None else 0.0,
         }
+        if self.store.shards > 1:
+            out["replicate_hot"] = float(self.store.sharded.replicate_hot)
+            out["replica_loads"] = float(st.replica_loads)
+            out["rebalance_moves"] = float(st.rebalance_moves)
+            if self.prefetch is not None:
+                # shard load balance: max/mean per-shard upload traffic —
+                # 1.0 is a perfectly even fleet, the fixed-home skew this
+                # PR removes shows up as a large ratio (bench_serving's
+                # shard-load-balance row reads exactly this)
+                ups = [
+                    float(self.prefetch.stats.uploads_by_shard.get(m, 0))
+                    for m in range(self.store.shards)
+                ]
+                mean = sum(ups) / len(ups)
+                out["shard_upload_max_over_mean"] = (
+                    max(ups) / mean if mean > 0 else 1.0
+                )
         if self.residency is not None:
             out.update(self.residency.summary())
             out["paged_kv"] = 1.0

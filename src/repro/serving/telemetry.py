@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import math
 import time
 from typing import Dict, List, Optional
 
@@ -51,10 +52,14 @@ class Histogram:
         return len(self.samples)
 
     def percentile(self, q: float) -> float:
+        """Ceil-based nearest rank: at least a q-fraction of the samples
+        lie at or below the returned value. (Banker's rounding would pick
+        the LOWER of two samples for p50 and understate small-count tail
+        percentiles — an SLO report must err high, not low.)"""
         if not self.samples:
             return 0.0
         xs = sorted(self.samples)
-        idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+        idx = min(len(xs) - 1, max(0, math.ceil(q / 100.0 * (len(xs) - 1))))
         return xs[idx]
 
     def summary(self) -> Dict[str, float]:

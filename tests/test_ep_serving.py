@@ -69,13 +69,13 @@ def _e8_system(draft: bool = False):
     return cfg, params, hp
 
 
-def _ep(ep_shards: int):
+def _ep(ep_shards: int, replicate_hot: int = 0):
     """(ctx, sharded) for an EP run on the first `ep_shards` host devices."""
     from repro.launch.mesh import make_ep_mesh
 
     return (
         serve_ctx(make_ep_mesh(ep_shards)),
-        ShardedStoreConfig(ep_shards=ep_shards),
+        ShardedStoreConfig(ep_shards=ep_shards, replicate_hot=replicate_hot),
     )
 
 
@@ -259,6 +259,144 @@ def test_sharded_store_rejects_bad_geometry():
 
 
 # ---------------------------------------------------------------------------
+# hot-expert replication + load-aware rebalancing (single-device: the
+# replica tables, promotion/reclaim protocol, and home re-assignment are
+# host-side bookkeeping — the device differentials below cover dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _mass_table(L, spec):
+    """One token per (expert, count) entry — `count` tokens routed to
+    `expert` at every MoE layer, unit α, so the hot-expert EMA sees a
+    controlled mass profile."""
+    ids = np.concatenate(
+        [np.full((c,), e, np.int32) for e, c in spec]
+    )
+    n = ids.shape[0]
+    return HashTable(
+        0, np.tile(ids.reshape(1, 1, n, 1), (L, 1, 1, 1)),
+        np.ones((L, 1, n, 1), np.float32),
+    )
+
+
+def _repl_store(cfg, params, shards=2, slots=4, replicate_hot=1):
+    """Block-placed sharded store (E8/2: shard0={0..3}, shard1={4..7})
+    with 2 slots per shard by default — room for exactly one replica."""
+    return ExpertStore(
+        cfg, params, slots_per_layer=slots, eviction="lru",
+        sharded=ShardedStoreConfig(
+            ep_shards=shards, placement="block", replicate_hot=replicate_hot,
+        ),
+    )
+
+
+def test_replicas_fill_free_slots_with_global_ids(e8):
+    """An α-hot expert gains an off-home copy in a FREE slot of the least
+    loaded shard; slot ids stay global, cold experts stay single-copy."""
+    cfg, params, _ = e8
+    st = _repl_store(cfg, params)
+    assert st.R == 2
+    trans = st.prepare(_mass_table(st.L, [(0, 7), (4, 1)]))
+    for (g, s), res in st.resident.items():
+        reps = st.replicas[(g, s)]
+        assert set(reps) == {0}, "only the hot expert replicates"
+        (sh, slot), = reps[0].items()
+        assert sh == 1 and slot // st.S_loc == 1      # off-home, global id
+        assert slot != res[4], "replica must land in a free slot"
+        assert res[0] // st.S_loc == 0 and res[4] // st.S_loc == 1
+    assert st.stats.replica_loads > 0
+    cand = st.replica_cand(trans)
+    assert cand.shape == (st.L, st.E, 2)
+    g, s = st.layer_to_gs(0)
+    res, reps = st.resident[(g, s)], st.replicas[(g, s)]
+    assert set(cand[0, 0]) == {res[0]} | set(reps[0].values())
+    assert set(cand[0, 4]) == {res[4]}                # tiled primary
+
+
+def test_replicated_translate_round_robins_and_matches_device(e8):
+    """Tokens of a replicated expert alternate over its live copies, with
+    no weight change (every copy is resident), and the device-side
+    translation agrees with the host path bit for bit."""
+    cfg, params, _ = e8
+    st = _repl_store(cfg, params)
+    st.prepare(_mass_table(st.L, [(0, 7), (4, 1)]))   # rep(e0) -> shard 1
+    t = _mass_table(st.L, [(0, 8)])
+    trans = st.prepare(t)
+    slots, w = st.translate(t, trans)
+    g, s = st.layer_to_gs(0)
+    copies = {st.resident[(g, s)][0], *st.replicas[(g, s)][0].values()}
+    assert set(slots[0, 0, :, 0].tolist()) == copies
+    np.testing.assert_array_equal(w, t.weights)       # resident: no rescale
+    ds, dw = st.translate_device(
+        jnp.asarray(t.expert_ids), jnp.asarray(t.weights), trans
+    )
+    np.testing.assert_array_equal(np.asarray(ds), slots)
+    np.testing.assert_array_equal(np.asarray(dw), w)
+
+
+def test_replica_reclaimed_before_primary_eviction(e8):
+    """Under slot pressure a shard gives up replica copies first: loading
+    a new home expert reclaims the replica's slot and evicts nothing."""
+    cfg, params, _ = e8
+    st = _repl_store(cfg, params)
+    st.prepare(_mass_table(st.L, [(0, 7), (4, 1)]))   # rep(e0) -> shard 1
+    st.prepare(_mass_table(st.L, [(1, 1)]))           # shard 0 now full
+    st.prepare(_mass_table(st.L, [(5, 1)]))           # shard 1 full: reclaim
+    for (g, s), res in st.resident.items():
+        assert not st.replicas[(g, s)], "replica slot was not reclaimed"
+        assert {0, 1, 4, 5} <= set(res)
+    assert st.stats.evictions == 0
+
+
+def test_primary_eviction_promotes_surviving_replica(e8):
+    """Evicting a primary whose replica survives promotes the replica —
+    the expert stays resident (on the replica's shard) and the eviction
+    counter does not move."""
+    cfg, params, _ = e8
+    st = _repl_store(cfg, params)
+    st.prepare(_mass_table(st.L, [(0, 7), (4, 1)]))   # rep(e0) -> shard 1
+    st.prepare(_mass_table(st.L, [(1, 1)]))           # shard 0 full {0, 1}
+    st.prepare(_mass_table(st.L, [(1, 1), (2, 1)]))   # e2 wants shard 0
+    for (g, s), res in st.resident.items():
+        assert res[0] // st.S_loc == 1, "promotion kept e0 resident"
+        assert 0 not in st.replicas[(g, s)]
+        assert res[2] // st.S_loc == 0
+    assert st.stats.evictions == 0, "promotion is not an eviction"
+
+
+def test_rebalance_homes_migrates_primaries(e8):
+    """Two α-heavy experts sharing a home shard get split apart by the
+    greedy-LPT rebalance; moved primaries demote their old slot to a
+    replica (never a dangling reader) and the store keeps serving."""
+    cfg, params, _ = e8
+    st = ExpertStore(
+        cfg, params, slots_per_layer=8, eviction="lru",
+        sharded=ShardedStoreConfig(
+            ep_shards=4, placement="block", replicate_hot=1,
+        ),
+    )                                 # home: shard0={0,1}, S_loc=2
+    for _ in range(3):
+        st.prepare(_mass_table(st.L, [(0, 6), (1, 6), (2, 1)]))
+    old_home = st.home.copy()
+    epoch = st.affinity_epoch
+    moved = st.rebalance_homes()
+    assert moved > 0
+    assert st.stats.rebalance_moves == moved
+    assert not np.array_equal(st.home, old_home)
+    assert st.affinity_epoch != epoch, "scheduler memo must invalidate"
+    assert st.home[0] != st.home[1], "heavy experts split across shards"
+    for (g, s), res in st.resident.items():
+        slots = list(res.values())
+        for d in st.replicas[(g, s)].values():
+            slots += list(d.values())
+        assert len(slots) == len(set(slots)), "primary/replica collision"
+        assert all(0 <= sl < st.S for sl in slots)
+    t = _mass_table(st.L, [(0, 2), (1, 2), (2, 1)])
+    _, w = st.translate(t, st.prepare(t))
+    assert (w > 0).all(), "post-move translation dropped a resident expert"
+
+
+# ---------------------------------------------------------------------------
 # EP-serving differentials (forced multi-device host mesh)
 # ---------------------------------------------------------------------------
 
@@ -282,13 +420,19 @@ def _request_stream(cfg, n=5, seed=7):
 
 
 def _serve(cfg, params, hp, ep_shards, prefetch_depth=0, quantized=False,
-           spec_mode="off", spec_k=2, n=5):
-    ctx, sharded = _ep(ep_shards) if ep_shards > 1 else (ShardingCtx(), None)
+           spec_mode="off", spec_k=2, n=5, replicate_hot=0,
+           rebalance_interval=0.0, slots=None):
+    ctx, sharded = (
+        _ep(ep_shards, replicate_hot) if ep_shards > 1
+        else (ShardingCtx(), None)
+    )
     srv = RequestServer(
-        cfg, params, hp, slots_per_layer=cfg.moe.num_experts,
+        cfg, params, hp,
+        slots_per_layer=slots or cfg.moe.num_experts,
         max_lanes=3, max_prefill_batch=3, buckets=(8, 16), cache_len=32,
         prefetch_depth=prefetch_depth, quantized_slots=quantized,
         spec_mode=spec_mode, spec_k=spec_k, ctx=ctx, sharded=sharded,
+        rebalance_interval=rebalance_interval,
     )
     srv.run(_request_stream(cfg, n=n), realtime=False)
     out = {r.rid: list(r.generated) for r in srv.completed}
@@ -356,6 +500,37 @@ def test_ep_server_speculative_byte_identical(e8_draft):
     cfg, params, hp = e8_draft
     ref, _ = _serve(cfg, params, hp, 1, 2, spec_mode="draft", spec_k=2, n=4)
     got, _ = _serve(cfg, params, hp, 2, 2, spec_mode="draft", spec_k=2, n=4)
+    assert got == ref
+
+
+@needs_devices(2)
+@pytest.mark.parametrize("prefetch_depth", [0, 2])
+def test_ep2_replicated_server_byte_identical(e8, prefetch_depth):
+    """Hot-expert replication + online rebalancing must not change one
+    token: with spare per-shard slots (2E total) the hot experts really
+    do gain extra copies and dispatch round-robins tokens over shards,
+    yet greedy decode stays byte-identical to the single-device server —
+    every copy holds bit-identical weights and each token still hits
+    exactly one copy inside the psum."""
+    cfg, params, hp = e8
+    ref, _ = _serve(cfg, params, hp, 1, prefetch_depth)
+    got, srv = _serve(
+        cfg, params, hp, 2, prefetch_depth, replicate_hot=1,
+        rebalance_interval=0.005, slots=2 * cfg.moe.num_experts,
+    )
+    assert got == ref
+    assert srv.store.R == 2
+
+
+@needs_devices(4)
+def test_ep4_replicated_server_byte_identical(e8):
+    """Same differential on the full 4-device mesh with async prefetch."""
+    cfg, params, hp = e8
+    ref, _ = _serve(cfg, params, hp, 1, 2)
+    got, _ = _serve(
+        cfg, params, hp, 4, 2, replicate_hot=1,
+        rebalance_interval=0.005, slots=2 * cfg.moe.num_experts,
+    )
     assert got == ref
 
 

@@ -623,7 +623,8 @@ def test_flash_decode_paged_matches_ref(window):
 
 def _args(**over):
     base = dict(engine="server", kv_pages=0, page_size=16, prefill_chunk=0,
-                max_seq=0, seq=32, new_tokens=8, spec_mode="off", spec_k=4)
+                max_seq=0, seq=32, new_tokens=8, spec_mode="off", spec_k=4,
+                ep_shards=1, replicate_hot=0, rebalance_interval=0.0)
     base.update(over)
     return argparse.Namespace(**base)
 
@@ -641,6 +642,10 @@ def test_validate_serve_args():
         _args(kv_pages=2, seq=64),                     # seq > bucket, no chunk
         _args(kv_pages=8, seq=128, new_tokens=64),     # beyond addressable
         _args(kv_pages=8, spec_mode="draft", spec_k=200),
+        _args(replicate_hot=1),                        # needs ep_shards > 1
+        _args(rebalance_interval=0.5),                 # needs ep_shards > 1
+        _args(replicate_hot=-1, ep_shards=4),          # negative
+        _args(rebalance_interval=0.5, ep_shards=4, engine="sida"),
     ]
     for ns in bad:
         with pytest.raises(SystemExit, match="serve: invalid flags"):

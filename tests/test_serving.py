@@ -135,6 +135,68 @@ def test_scheduler_affinity_orders_within_band(tiny_moe):
     assert [r.rid for r in batch] == [1]  # affinity wins inside the band
 
 
+def test_chunk_urgent_deadline_accounting():
+    """Chunked prefill runs before decode only when the remaining slack no
+    longer covers the remaining chunks at the observed per-chunk rate plus
+    one slack band; SLO-less requests always yield to decode."""
+    s = Scheduler(buckets=(8,), slack_band_s=0.25)
+    r = _req(0, arrival=0.0, slo=10.0)          # deadline at t=10
+    # 4 chunks * 1s + 0.25 band = 4.25s needed
+    assert not s.chunk_urgent(r, now=0.0, remaining_chunks=4, chunk_s=1.0)
+    assert not s.chunk_urgent(r, now=5.0, remaining_chunks=4, chunk_s=1.0)
+    assert s.chunk_urgent(r, now=6.0, remaining_chunks=4, chunk_s=1.0)
+    # an unmeasured chunk rate is floored, not treated as free
+    assert s.chunk_urgent(r, now=9.9, remaining_chunks=1, chunk_s=0.0)
+    # no SLO: never urgent, however far along the clock is
+    assert not s.chunk_urgent(
+        _req(1), now=1e9, remaining_chunks=100, chunk_s=1.0
+    )
+
+
+def test_scheduler_affinity_memoized_per_epoch():
+    """cache_affinity is an O(L·E) scan under the store lock: the
+    scheduler scans each queued table once per residency epoch, not once
+    per tick, and rescans when the epoch moves."""
+
+    class CountingStore:
+        affinity_epoch = 0
+        calls = 0
+
+        def cache_affinity(self, table):
+            self.calls += 1
+            return 0.5
+
+    st = CountingStore()
+    s = Scheduler(buckets=(8,))
+    s.enqueue(_req(0, slo=1.0))
+    s.enqueue(_req(1, slo=2.0))
+    s._order(list(s._queue), 0.0, st)
+    s._order(list(s._queue), 0.0, st)     # second tick, same residency
+    assert st.calls == 2, "one scan per request, not per tick"
+    st.affinity_epoch = 1                 # residency moved
+    s._order(list(s._queue), 0.0, st)
+    assert st.calls == 4
+
+
+def test_histogram_percentile_nearest_rank_errs_high():
+    """Ceil-based nearest rank: at least a q-fraction of the samples lie
+    at or below the reported value, so small-count SLO tails err high
+    (banker's rounding would pick the lower neighbor for p50 of an even
+    count and understate latency)."""
+    from repro.serving.telemetry import Histogram
+
+    h = Histogram()
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        h.observe(v)
+    assert h.percentile(50) == 3.0        # not 2.0
+    assert h.percentile(33) == 2.0
+    assert h.percentile(0) == 1.0
+    assert h.percentile(100) == 4.0
+    single = Histogram()
+    single.observe(5.0)
+    assert single.percentile(99) == 5.0
+
+
 def test_telemetry_snapshot_roundtrip():
     import json
 
@@ -303,5 +365,9 @@ def test_server_slo_drop_expired(tiny_moe):
     srv = _serve(cfg, params, hp, reqs, lanes=2, drop_expired=True)
     assert [r.rid for r in srv.rejected] == [0]
     assert srv.rejected[0].state == RequestState.REJECTED
+    # the drop goes through _reject like every other rejection path, so
+    # the reason and its per-reason counter are populated
+    assert srv.rejected[0].reject_reason == "deadline_expired"
+    assert srv.telemetry.counter("requests_rejected_deadline_expired").value == 1
     assert [r.rid for r in srv.completed] == [1]
     assert srv.summary()["rejected"] == 1
