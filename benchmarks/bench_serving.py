@@ -10,6 +10,12 @@ Poisson arrivals through the continuous-batching RequestServer vs
                          SAME slot-byte budget as server_async (so ~2–4×
                          the resident experts; isolates the quantized-slots
                          capacity win — see the ``quantized_slots`` block);
+* ``server_tiered``    — server_quant plus hierarchical residency tiers:
+                         the slot byte budget splits into int8 hot slots
+                         and nibble-packed int4 warm slots (~2× experts
+                         per byte), with decayed-α-mass promotion /
+                         demotion between tiers (see the ``tiered_slots``
+                         block for the per-tier byte math);
 * ``server_spec``      — async server with speculative decode: the hash
                          predictor's tied-embedding draft head proposes k
                          tokens per step, one jitted verify accepts a
@@ -80,8 +86,8 @@ def _requests(cfg, n: int, rate: float, seed: int, slo: float) -> List[Request]:
 
 def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
                    prefetch_depth=0, realtime=True, quantized_slots=False,
-                   spec_mode="off", spec_k=4, ep_shards=1, replicate_hot=0,
-                   rebalance_interval=0.0):
+                   tier=None, spec_mode="off", spec_k=4, ep_shards=1,
+                   replicate_hot=0, rebalance_interval=0.0):
     from repro.launch.serve import ep_setup
 
     ctx, sharded = ep_setup(ep_shards, replicate_hot)
@@ -90,8 +96,8 @@ def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
         max_lanes=lanes, max_prefill_batch=lanes,
         buckets=(8, 16, 32), cache_len=48, eviction=eviction,
         prefetch_depth=prefetch_depth, quantized_slots=quantized_slots,
-        spec_mode=spec_mode, spec_k=spec_k, ctx=ctx, sharded=sharded,
-        rebalance_interval=rebalance_interval,
+        tier=tier, spec_mode=spec_mode, spec_k=spec_k, ctx=ctx,
+        sharded=sharded, rebalance_interval=rebalance_interval,
     )
     # warm every jit shape outside the timed stream, then reset the clocks
     warm_rng = np.random.default_rng(99)
@@ -389,6 +395,21 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     result["engines"]["server_quant"] = serve_requests(
         cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
         q_slots, lanes, prefetch_depth=2, quantized_slots=True,
+    )
+    # hierarchical residency tiers at the SAME slot-byte budget as
+    # server_quant: the store keeps `tier_split` of the budget as int8 hot
+    # slots and converts the rest into int4 warm slots (~2x experts per
+    # byte, scale planes included), promoting by decayed α-mass — the
+    # capacity -> hit-rate leg of the warm tier (bench_memory holds the
+    # byte accounting; the acceptance bar is hit rate >= server_quant's)
+    from benchmarks.common import tier_capacity_info
+    from repro.configs.base import TierConfig
+
+    result["tiered_slots"] = tier_capacity_info(cfg, params, q_slots)
+    result["engines"]["server_tiered"] = serve_requests(
+        cfg, params, hp, _requests(cfg, n_requests, rate, seed, slo),
+        q_slots, lanes, prefetch_depth=2, quantized_slots=True,
+        tier=TierConfig(int4_slots=True, tier_split=0.5),
     )
     # expert-parallel sharded serving on 4 (simulated) devices: the slot
     # pools partition over a 1-D "model" mesh, the expert FFN runs inside

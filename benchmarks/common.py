@@ -165,6 +165,32 @@ def quant_capacity_info(cfg, params, slots: int) -> Dict[str, float]:
     }
 
 
+def tier_capacity_info(cfg, params, slots: int, group: int = 64) -> Dict[str, float]:
+    """Per-tier slot cost and the tiered capacity the SAME byte budget buys
+    (hot int8 / warm int4 with per-group scales) — the tiered analogue of
+    `quant_capacity_info`, shared by bench_memory and bench_serving."""
+    from repro.configs.base import TierConfig
+    from repro.core.offload import ExpertStore
+
+    st = ExpertStore(
+        cfg, params, slots_per_layer=slots, quantized_slots=True,
+        tier=TierConfig(int4_slots=True, tier_split=0.5, group_size=group),
+    )
+    tb = st.tier_slot_bytes()
+    b8, b4 = tb["hot"], tb["warm"]
+    E = cfg.moe.num_experts
+    return {
+        "int8_slot_bytes_per_expert": b8,
+        "int4_slot_bytes_per_expert": b4,
+        "int4_capacity_ratio_at_equal_bytes": round(b8 / b4, 3),
+        "int4_slots_at_equal_bytes": min(int(slots * b8 // b4), E),
+        "hot_slots": st.S8,
+        "warm_slots": st.S4,
+        "tiered_slots_at_equal_bytes": min(st.S8 + st.S4, E),
+        "quant_group": group,
+    }
+
+
 def warmed(engine, batches):
     """Compile/warm an engine outside the timed region, reset its stats."""
     from repro.core.engine import SiDAEngine

@@ -83,6 +83,38 @@ class SpecConfig:
 
 
 @dataclass(frozen=True)
+class TierConfig:
+    """Hierarchical residency tiers for the device expert cache.
+
+    With `int4_slots` the slot pool splits into a HOT tier (int8 slots, the
+    existing fused-dequant format) and a WARM tier (int4 group-quantized
+    slots — ~2× more resident experts per byte at coarser precision); cold
+    experts stay on host. The decayed α-mass EMA drives promotion/demotion
+    between the tiers (see ExpertStore.plan_layer).
+
+    `tier_split` is the share of the slot-BYTE budget spent on hot int8
+    slots; the remainder buys warm int4 slots (so `slots_per_layer` keeps
+    meaning "budget in int8-slot units" — the equal-bytes currency every
+    capacity bench uses). `warm_slots` overrides the derived warm count
+    directly. `group_size` is the int4 contraction-axis scale group (one f32
+    scale per `group_size` input channels per output channel); 64 keeps the
+    scale-plane overhead low enough for ≥1.8× capacity vs int8 on the
+    miniature configs. `promote_margin` is the promotion hysteresis: a warm
+    expert promotes only when its decayed α mass exceeds `promote_margin ×`
+    the coldest demotable hot expert's (or a hot slot is free)."""
+
+    int4_slots: bool = False
+    tier_split: float = 0.5
+    group_size: int = 64
+    promote_margin: float = 1.25
+    warm_slots: Optional[int] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.int4_slots
+
+
+@dataclass(frozen=True)
 class QuantConfig:
     """Expert-weight quantization settings (serving-time).
 
@@ -93,10 +125,14 @@ class QuantConfig:
     than fp slots. `scale_granularity` picks how scales are computed:
     "channel" (per-output-channel absmax, tighter) or "tensor" (one scale per
     expert tensor, coarser but smaller metadata); storage is always a
-    per-channel plane so kernels stay uniform."""
+    per-channel plane so kernels stay uniform.
+
+    `tier` adds the hot/warm/cold residency hierarchy on top (int4 warm
+    slots; requires `quantized_slots` — see TierConfig)."""
 
     quantized_slots: bool = False
     scale_granularity: str = "channel"  # "channel" | "tensor"
+    tier: TierConfig = field(default_factory=TierConfig)
 
 
 @dataclass(frozen=True)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, TierConfig
 from repro.core.hash_fn import draft_logits_from_state, sparsemax
 from repro.core.hash_table import HashTable
 from repro.core.offload import ExpertStore, PrefetchPipeline, ShardedStoreConfig
@@ -255,6 +255,7 @@ class SiDADecodeEngine:
         prefetcher: Optional[PrefetchPipeline] = None,
         quantized_slots: Optional[bool] = None,
         scale_granularity: Optional[str] = None,
+        tier: Optional[TierConfig] = None,
         spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
         spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
         sharded: Optional[ShardedStoreConfig] = None,
@@ -275,7 +276,7 @@ class SiDADecodeEngine:
         self.store = store if store is not None else ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
-            sharded=sharded, mesh=ctx.mesh,
+            tier=tier, sharded=sharded, mesh=ctx.mesh,
         )
         self._owns_prefetcher = False
         if prefetcher is not None:

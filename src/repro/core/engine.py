@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, TierConfig
 from repro.core.hash_fn import (
     HASH_SEG_LEN,
     hash_fn_apply,
@@ -86,6 +86,7 @@ class SiDAEngine:
         prefetcher: Optional[PrefetchPipeline] = None,
         quantized_slots: Optional[bool] = None,
         scale_granularity: Optional[str] = None,
+        tier: Optional[TierConfig] = None,
         sharded: Optional["ShardedStoreConfig"] = None,
     ):
         self.cfg = cfg
@@ -101,7 +102,7 @@ class SiDAEngine:
             cfg, params, slots_per_layer,
             host_quant=host_quant, spill_dir=spill_dir, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
-            sharded=sharded, mesh=ctx.mesh,
+            tier=tier, sharded=sharded, mesh=ctx.mesh,
         )
         # async prefetch: explicit args > cfg.prefetch knobs > off. A
         # caller-supplied pipeline (the request server's) is shared as-is.

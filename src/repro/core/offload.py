@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, TierConfig
 from repro.core.hash_table import HashTable
 from repro.models.transformer import n_moe_layers, period, sub_kind
 
@@ -174,6 +174,79 @@ def quantize_expert(
     return q, scale
 
 
+def pack_nibbles(q: np.ndarray) -> np.ndarray:
+    """int4 values (int8 storage, [-8, 7]) [..., K, N] -> nibble-packed
+    uint8 [..., ceil(K/2), N]. Byte i holds contraction rows 2i (low
+    nibble) and 2i+1 (high nibble), two's complement; odd K pads one zero
+    row. Must match `kernels/ref.unpack_int4_ref` bit-for-bit."""
+    K = q.shape[-2]
+    if K % 2:
+        pad = [(0, 0)] * (q.ndim - 2) + [(0, 1), (0, 0)]
+        q = np.pad(q, pad)
+    u = (q.astype(np.int16) & 0xF).astype(np.uint8)
+    return (u[..., 1::2, :] << 4) | u[..., 0::2, :]
+
+
+def unpack_nibbles(p: np.ndarray, k: int) -> np.ndarray:
+    """Inverse of `pack_nibbles`: uint8 [..., ceil(k/2), n] -> int8 [..., k, n]."""
+    lo = (p & 0xF).astype(np.int8)
+    hi = (p >> 4).astype(np.int8)
+    v = np.stack([lo, hi], axis=-2)
+    v = v.reshape(p.shape[:-2] + (-1, p.shape[-1]))[..., :k, :]
+    return np.where(v >= 8, v - 16, v).astype(np.int8)
+
+
+def _group_of(k: int, group: int) -> int:
+    """Effective quantization group along a contraction axis of length `k`:
+    `group` when it divides `k`, else the whole axis (one scale group)."""
+    g = min(group, k)
+    return g if k % g == 0 else k
+
+
+def quantize_expert_q4(
+    w: np.ndarray, group: int = 64
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric int4 quantisation with per-group scales. w: [..., d_in, d_out].
+
+    The contraction axis is split into groups of `group` rows; each
+    (group, output channel) pair gets one f32 scale = absmax / 7, and values
+    quantize to [-7, 7] (the symmetric int4 range; -8 is unused so the
+    format round-trips through negation). Returns (packed, scale):
+    packed [..., ceil(d_in/2), d_out] uint8 (see `pack_nibbles`),
+    scale [..., d_in/group, d_out] f32.
+    """
+    k = w.shape[-2]
+    g = _group_of(k, group)
+    ng = k // g
+    wg = w.astype(np.float32).reshape(w.shape[:-2] + (ng, g, w.shape[-1]))
+    absmax = np.abs(wg).max(axis=-2, keepdims=True)
+    scale = np.maximum(absmax, 1e-8) / 7.0
+    q = np.clip(np.round(wg / scale), -7, 7).astype(np.int8)
+    q = q.reshape(w.shape)
+    return pack_nibbles(q), scale[..., 0, :].reshape(
+        w.shape[:-2] + (ng, w.shape[-1])
+    ).astype(np.float32)
+
+
+def expert_format_bytes(
+    shapes: List[Tuple[int, int]], fmt: str, group: int = 64
+) -> int:
+    """Per-expert device bytes per MoE layer for one residency format,
+    scale planes included — the single bytes-per-expert-per-tier rule that
+    `ExpertStore.tier_slot_bytes`, `ResidencyManager.split_budget_tiered`,
+    and the bench_memory capacity claims all share. `shapes` lists the
+    (d_in, d_out) of each expert tensor (w_in, w_gate, w_out)."""
+    tot = 0
+    for k, n in shapes:
+        if fmt == "int8":
+            tot += k * n + 4 * n                    # int8 rows + [1, n] f32 scale
+        else:
+            assert fmt == "int4", fmt
+            g = _group_of(k, group)
+            tot += ((k + 1) // 2) * n + 4 * (k // g) * n
+    return tot
+
+
 class EvictionPolicy:
     """Replacement policy for one (group, sub) slot pool.
 
@@ -308,12 +381,15 @@ class TransferStats:
     prepare_time: float = 0.0      # synchronous upload time inside the forward path
     replica_loads: int = 0         # extra-copy uploads of hot experts (also in loads)
     rebalance_moves: int = 0       # primaries migrated by rebalance_homes
+    promotions: int = 0            # warm (int4) -> hot (int8) tier moves
+    demotions: int = 0             # hot (int8) -> warm (int4) tier moves
 
     def reset(self):
         self.bytes_h2d = self.loads = self.evictions = self.hits = 0
         self.dropped = 0
         self.prepare_time = 0.0
         self.replica_loads = self.rebalance_moves = 0
+        self.promotions = self.demotions = 0
 
 
 class ExpertStore:
@@ -350,6 +426,7 @@ class ExpertStore:
         scale_granularity: Optional[str] = None,  # "channel" | "tensor"
         sharded: Optional[ShardedStoreConfig] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
+        tier: Optional[TierConfig] = None,        # None => cfg.quant.tier
     ):
         assert cfg.moe.enabled, "ExpertStore requires an MoE config"
         assert eviction in EVICTION_POLICIES, eviction
@@ -401,6 +478,64 @@ class ExpertStore:
         self.quant = host_quant
         self.stats = TransferStats()
 
+        # --- hierarchical residency tiers (hot int8 / warm int4 / cold host)
+        # `slots_per_layer` stays the budget in INT8-slot currency; the warm
+        # tier converts its share into int4 slots via the per-tier
+        # bytes-per-expert rule (scale planes included), so a tiered store
+        # at N slots costs the same device bytes as an untiered one at N.
+        self.tier = cfg.quant.tier if tier is None else tier
+        self.tiered = bool(self.tier is not None and self.tier.enabled)
+        moe_p0 = params["blocks"][f"sub{self.moe_subs[0]}"]["moe"]
+        self._expert_shapes = [
+            tuple(moe_p0[t].shape[2:]) for t in EXPERT_TENSORS
+        ]
+        if self.tiered:
+            assert self.quantized_slots, (
+                "the int4 warm tier layers on int8-native slots "
+                "(--int4-slots requires --quantized-slots)"
+            )
+            assert self.sharded.replicate_hot == 0, (
+                "hot-expert replication and residency tiering are mutually "
+                "exclusive (a replica's tier would be ambiguous)"
+            )
+            b8 = expert_format_bytes(self._expert_shapes, "int8")
+            b4 = expert_format_bytes(
+                self._expert_shapes, "int4", self.tier.group_size
+            )
+            # combined slot count caps at E: more slots than experts would
+            # shrink the per-slot dispatch capacity (C ~ tokens / n_slots)
+            # below the dense forward's for no residency gain, silently
+            # dropping tokens the untiered store would serve
+            if self.tier.warm_slots is not None:
+                S8 = min(max(slots_per_layer, 1), self.E)
+                S4 = min(self.tier.warm_slots, self.E - S8)
+            else:
+                S8 = max(1, int(round(slots_per_layer * self.tier.tier_split)))
+                S8 = min(S8, self.E)
+                S4 = min(
+                    max(0, ((slots_per_layer - S8) * b8) // b4),
+                    self.E - S8,
+                )
+            if self.shards > 1:
+                S8 = max((S8 // self.shards) * self.shards, self.shards)
+                S4 = (S4 // self.shards) * self.shards
+            self.S8, self.S4 = int(S8), int(S4)
+            self.S = self.S8 + self.S4
+            self.S8_loc = self.S8 // self.shards
+            self.S4_loc = self.S4 // self.shards
+            self.S_loc = self.S8_loc + self.S4_loc
+            if self.S4 == 0:
+                # degenerate all-hot config: with no warm slots the store
+                # must be BEHAVIORALLY identical to the untiered quantized
+                # path, so drop the tier flag entirely — otherwise the
+                # tier-only branches (α-mass EMA feeds, tier-aware policy
+                # admits, rebalance gating) would diverge from the plain
+                # store's bookkeeping with zero tier capacity to show for it
+                self.tiered = False
+        else:
+            self.S8, self.S4 = self.S, 0
+            self.S8_loc, self.S4_loc = self.S_loc, 0
+
         # device slot writers: module-level jits for the single-shard case;
         # per-store jits pinned to the pool NamedSharding when the pools are
         # mesh-sharded (out_shardings keeps GSPMD from re-replicating the
@@ -433,11 +568,20 @@ class ExpertStore:
         # --- split params: experts + routers -> host; rest stays on device
         self.host: Dict[str, Dict[str, np.ndarray]] = {}
         self.host_scale: Dict[str, Dict[str, np.ndarray]] = {}
+        # int4 host masters (tiered stores only): quantized from the SAME
+        # f32 originals as the int8 masters, never from the int8 rows —
+        # demotion re-uploads host int4 rows and promotion re-uploads host
+        # int8 rows, so a tier move is always a requantization from master,
+        # never a lossy int8<->int4 transcode.
+        self.host4: Dict[str, Dict[str, np.ndarray]] = {}
+        self.host4_scale: Dict[str, Dict[str, np.ndarray]] = {}
         serve_params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
         for s in self.moe_subs:
             moe_p = serve_params["blocks"][f"sub{s}"]["moe"]
             self.host[f"sub{s}"] = {}
             self.host_scale[f"sub{s}"] = {}
+            self.host4[f"sub{s}"] = {}
+            self.host4_scale[f"sub{s}"] = {}
             for t in EXPERT_TENSORS:
                 w = np.asarray(moe_p[t])
                 if host_quant == "int8":
@@ -446,21 +590,41 @@ class ExpertStore:
                     self.host_scale[f"sub{s}"][t] = scale
                 else:
                     self.host[f"sub{s}"][t] = _spill(f"sub{s}_{t}", w)
+                if self.tiered and self.S4 > 0:
+                    q4, s4 = quantize_expert_q4(w, self.tier.group_size)
+                    self.host4[f"sub{s}"][t] = _spill(f"sub{s}_{t}_q4", q4)
+                    self.host4_scale[f"sub{s}"][t] = s4
             for t in EXPERT_TENSORS:
                 full = moe_p[t]
                 G, E = full.shape[:2]
+                k_in, n_out = full.shape[2:]
                 if self.quantized_slots:
                     # int8 slot pool + per-expert scale plane: the residency
                     # format IS the transfer format (no dequant hop anywhere)
                     moe_p[t] = self._place(
-                        jnp.zeros((G, self.S, *full.shape[2:]), jnp.int8)
+                        jnp.zeros((G, self.S8, *full.shape[2:]), jnp.int8)
                     )
                     moe_p[t + "_scale"] = self._place(
-                        jnp.zeros((G, self.S, 1, full.shape[-1]), jnp.float32)
+                        jnp.zeros((G, self.S8, 1, full.shape[-1]), jnp.float32)
                     )
                 else:
                     moe_p[t] = self._place(
-                        jnp.zeros((G, self.S, *full.shape[2:]), full.dtype)
+                        jnp.zeros((G, self.S8, *full.shape[2:]), full.dtype)
+                    )
+                if self.tiered and self.S4 > 0:
+                    # warm tier: nibble-packed int4 pool + per-group scale
+                    # plane, addressed by (global slot - S8). Absent when
+                    # S4 == 0 so the all-hot degenerate config's params tree
+                    # (and therefore its dispatch) is byte-identical to the
+                    # untiered quantized path.
+                    g4 = _group_of(k_in, self.tier.group_size)
+                    moe_p[t + "_q4"] = self._place(
+                        jnp.zeros(
+                            (G, self.S4, (k_in + 1) // 2, n_out), jnp.uint8
+                        )
+                    )
+                    moe_p[t + "_q4_scale"] = self._place(
+                        jnp.zeros((G, self.S4, k_in // g4, n_out), jnp.float32)
                     )
             moe_p.pop("router", None)  # routers never participate in forward
         self.serve_params = serve_params
@@ -475,6 +639,12 @@ class ExpertStore:
         self.resident: Dict[Tuple[int, int], Dict[int, int]] = {}
         self.policy: Dict[Tuple[int, int], List[EvictionPolicy]] = {}
         self.free: Dict[Tuple[int, int], List[List[int]]] = {}
+        # warm-tier (int4) twins of policy/free: global warm slot ids live
+        # in [S8, S8 + S4), per-shard partitions [S8 + m*S4_loc, ...). The
+        # hot structures are untouched by tiering, so an all-hot tier config
+        # (S4 = 0) takes exactly the untiered bookkeeping paths.
+        self.policy4: Dict[Tuple[int, int], List[EvictionPolicy]] = {}
+        self.free4: Dict[Tuple[int, int], List[List[int]]] = {}
         self.pinned: Dict[Tuple[int, int], set] = {}
         # replica copies per (g, s): expert -> {shard: global slot}. EXTRA
         # copies only — the primary stays in `resident`; each shard's
@@ -490,7 +660,15 @@ class ExpertStore:
                     EVICTION_POLICIES[eviction]() for _ in range(self.shards)
                 ]
                 self.free[(g, s)] = [
-                    list(range(m * self.S_loc, (m + 1) * self.S_loc))
+                    list(range(m * self.S8_loc, (m + 1) * self.S8_loc))
+                    for m in range(self.shards)
+                ]
+                self.policy4[(g, s)] = [
+                    EVICTION_POLICIES[eviction]() for _ in range(self.shards)
+                ]
+                self.free4[(g, s)] = [
+                    list(range(self.S8 + m * self.S4_loc,
+                               self.S8 + (m + 1) * self.S4_loc))
                     for m in range(self.shards)
                 ]
                 self.pinned[(g, s)] = set()
@@ -529,9 +707,22 @@ class ExpertStore:
         return int(self.home[e])
 
     def shard_slots(self, shard: int) -> range:
-        """Global slot ids owned by `shard` (a contiguous partition, so the
-        mesh-sharded pool array needs no permutation)."""
-        return range(shard * self.S_loc, (shard + 1) * self.S_loc)
+        """Global HOT slot ids owned by `shard` (a contiguous partition, so
+        the mesh-sharded pool array needs no permutation). Warm (int4) slot
+        ids live in the separate [S8 + shard*S4_loc, ...) partition."""
+        return range(shard * self.S8_loc, (shard + 1) * self.S8_loc)
+
+    def slot_shard(self, slot: int) -> int:
+        """Hosting shard of a global slot id, tier-aware: hot slots are
+        partitioned over [0, S8), warm slots over [S8, S8+S4). Degenerates
+        to `slot // S_loc` when the store is untiered."""
+        if self.S4 and slot >= self.S8:
+            return (int(slot) - self.S8) // self.S4_loc
+        return int(slot) // self.S8_loc
+
+    def slot_tier(self, slot: int) -> str:
+        """'hot' (int8 pool) or 'warm' (int4 pool) for a global slot id."""
+        return "warm" if (self.S4 and slot >= self.S8) else "hot"
 
     def local_trans(self, trans: np.ndarray) -> np.ndarray:
         """Global translation table [L, E] -> per-shard LOCAL slot ids
@@ -539,7 +730,16 @@ class ExpertStore:
         thing on device from the global ids; this is the host-side view
         (tests + debugging). Derived from the slot id, not the home table:
         under replication/rebalancing an expert's primary may be hosted
-        off its (current) home shard."""
+        off its (current) home shard. Tiered stores concatenate the local
+        spaces: a shard's hot slots map to [0, S8_loc) and its warm slots
+        to [S8_loc, S8_loc + S4_loc)."""
+        if self.S4:
+            warm = trans >= self.S8
+            local = np.where(
+                warm, self.S8_loc + (trans - self.S8) % self.S4_loc,
+                trans % self.S8_loc,
+            )
+            return np.where(trans >= 0, local, -1).astype(np.int32)
         local = np.where(trans >= 0, trans % self.S_loc, -1)
         return local.astype(np.int32)
 
@@ -553,21 +753,24 @@ class ExpertStore:
     # ------------------------------------------------------------------
     def device_bytes(self) -> int:
         """Bytes of expert weights resident on device (the paper's metric),
-        including the scale planes when slots are int8-resident."""
+        including the scale planes when slots are int8-resident and the
+        warm-tier int4 pools + per-group scale planes when tiered."""
         tot = 0
         for s in self.moe_subs:
             moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
             for t in EXPERT_TENSORS:
-                tot += moe_p[t].nbytes
-                sc = moe_p.get(t + "_scale")
-                if sc is not None:
-                    tot += sc.nbytes
+                for key in (t, t + "_scale", t + "_q4", t + "_q4_scale"):
+                    arr = moe_p.get(key)
+                    if arr is not None:
+                        tot += arr.nbytes
         return tot
 
     def expert_slot_bytes(self) -> int:
-        """Device bytes one expert slot costs per MoE layer in the current
-        residency format (fp vs int8+scales) — the denominator of the
-        capacity-at-equal-bytes comparison the quantized-slot benches make."""
+        """Device bytes one HOT expert slot costs per MoE layer in the
+        current residency format (fp vs int8+scales), scale planes included
+        — the denominator of the capacity-at-equal-bytes comparison the
+        quantized-slot benches make. Warm-tier (int4) slots cost
+        `tier_slot_bytes()["warm"]` instead."""
         tot = 0
         for s in self.moe_subs:
             moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
@@ -578,6 +781,17 @@ class ExpertStore:
                 if sc is not None:
                     tot += sc.nbytes // (sc.shape[0] * sc.shape[1])
         return tot // len(self.moe_subs)
+
+    def tier_slot_bytes(self) -> Dict[str, int]:
+        """Per-expert device bytes per MoE layer for each residency tier
+        (scale planes included), from the shared `expert_format_bytes`
+        rule — the same numbers `ResidencyManager.split_budget_tiered` and
+        the bench_memory tiered-capacity rows use."""
+        group = self.tier.group_size if self.tier is not None else 64
+        return {
+            "hot": expert_format_bytes(self._expert_shapes, "int8"),
+            "warm": expert_format_bytes(self._expert_shapes, "int4", group),
+        }
 
     def full_expert_bytes(self) -> int:
         return sum(
@@ -619,11 +833,21 @@ class ExpertStore:
         protected = needed_set | self.pinned[(g, s)]
         if extra_protected:
             protected |= extra_protected
-        if mass is not None and self.shards > 1:
+        # experts that may not MOVE between tiers: pinned (never demote by
+        # contract) and extra-protected (an unreleased ticket's translation
+        # may point at the current slot, or an upload to it is mid-flight —
+        # a tier move frees that slot for reuse, which would let a pending
+        # forward read foreign weights). The CURRENT plan's needed set is
+        # safe to move: its translation snapshots after planning.
+        move_blocked = set(self.pinned[(g, s)])
+        if extra_protected:
+            move_blocked |= extra_protected
+        if mass is not None and (self.shards > 1 or self.tiered):
             # decayed α EMA (per layer + per home shard): replication's hot
-            # threshold, the least-loaded replica pick, and rebalance_homes
-            # all read these. The decay is per plan call, spread so one full
-            # table pass decays by sharded.alpha_decay overall.
+            # threshold, the least-loaded replica pick, rebalance_homes, and
+            # the tier promotion/demotion ranking all read these. The decay
+            # is per plan call, spread so one full table pass decays by
+            # sharded.alpha_decay overall.
             d = self.sharded.alpha_decay ** (1.0 / max(self.L, 1))
             ema = self.alpha_ema[(g, s)]
             ema *= d
@@ -638,10 +862,18 @@ class ExpertStore:
             e = int(e)
             w = float(mass[e]) if mass is not None else 0.0
             if e in res:
+                self.stats.hits += 1
+                if (
+                    self.tiered and res[e] >= self.S8
+                    and e not in move_blocked
+                    and self._promote(g, s, e, w, protected, move_blocked,
+                                      pending)
+                ):
+                    mutated = True
+                    continue
                 # touch the HOSTING shard's policy — under promotion or
                 # rebalancing the primary may live off its home shard
-                self.stats.hits += 1
-                policies[res[e] // self.S_loc].touch(e, w)
+                self._touch(g, s, e, res[e], w)
                 continue
             sh = int(self.home[e])          # new loads go to the home shard
             policy = policies[sh]
@@ -654,8 +886,20 @@ class ExpertStore:
                 slot = self._reclaim_replica(g, s, sh, protected)
             if slot is None:
                 victim = policy.pick_victim(protected)
-                if victim is None:  # everything resident is protected => drop
-                    self.stats.dropped += 1
+                if victim is None:
+                    if self.tiered:
+                        # hot tier exhausted by protected residents: the
+                        # overflow loads straight into a warm (int4) slot
+                        # instead of dropping — combined capacity is S8+S4
+                        wslot = self._take_warm_slot(g, s, sh, protected)
+                        if wslot is not None:
+                            res[e] = wslot
+                            self.policy4[(g, s)][sh].admit(e, w)
+                            pending.append((g, wslot, e))
+                            self.stats.loads += 1
+                            mutated = True
+                            continue
+                    self.stats.dropped += 1  # everything resident protected
                     continue
                 slot = res.pop(victim)
                 v_reps = self.replicas[(g, s)].get(victim)
@@ -668,6 +912,21 @@ class ExpertStore:
                     if not v_reps:
                         del self.replicas[(g, s)][victim]
                     policies[m].admit(victim, 0.0)
+                elif self.tiered and victim not in move_blocked:
+                    # demote instead of evict: the victim survives as a
+                    # warm int4 resident (re-uploaded from the host int4
+                    # master, never transcoded from its int8 slot)
+                    wslot = self._take_warm_slot(g, s, sh, protected)
+                    if wslot is not None:
+                        res[victim] = wslot
+                        self.policy4[(g, s)][sh].admit(
+                            victim, float(self.alpha_ema[(g, s)][victim])
+                        )
+                        pending.append((g, wslot, victim))
+                        self.stats.demotions += 1
+                        self.stats.loads += 1
+                    else:
+                        self.stats.evictions += 1
                 else:
                     self.stats.evictions += 1
             res[e] = slot
@@ -682,6 +941,99 @@ class ExpertStore:
         if mutated:
             self._epoch += 1
         return pending
+
+    def _touch(self, g: int, s: int, e: int, slot: int, w: float) -> None:
+        """Route a reference to the policy of the tier + shard hosting `slot`."""
+        sh = self.slot_shard(slot)
+        if self.S4 and slot >= self.S8:
+            self.policy4[(g, s)][sh].touch(e, w)
+        else:
+            self.policy[(g, s)][sh].touch(e, w)
+
+    def _take_warm_slot(
+        self, g: int, s: int, sh: int, protected: Set[int]
+    ) -> Optional[int]:
+        """Claim one warm (int4) slot on shard `sh`: a free slot if any,
+        else evict the warm tier's policy victim to host. Returns the
+        global slot id, or None when the warm tier has no reclaimable slot
+        (including the S4 == 0 degenerate config)."""
+        free4 = self.free4[(g, s)][sh]
+        if free4:
+            return free4.pop()
+        v4 = self.policy4[(g, s)][sh].pick_victim(protected)
+        if v4 is None:
+            return None
+        slot4 = self.resident[(g, s)].pop(v4)
+        self.stats.evictions += 1
+        return slot4
+
+    def _peek_hot_victim(
+        self, g: int, s: int, sh: int, excluded: Set[int]
+    ) -> Optional[int]:
+        """Lowest-decayed-α hot resident on shard `sh` not in `excluded` —
+        a non-mutating peek (unlike pick_victim) for promotion hysteresis."""
+        res = self.resident[(g, s)]
+        ema = self.alpha_ema[(g, s)]
+        best = None
+        for e2, slot in res.items():
+            if slot >= self.S8 or self.slot_shard(slot) != sh or e2 in excluded:
+                continue
+            if best is None or ema[e2] < ema[best]:
+                best = e2
+        return best
+
+    def _promote(
+        self,
+        g: int,
+        s: int,
+        e: int,
+        w: float,
+        protected: Set[int],
+        move_blocked: Set[int],
+        pending: List[Tuple[int, int, int]],
+    ) -> bool:
+        """Try to move warm-resident `e` into the hot tier: into a free hot
+        slot when one exists, else by SWAPPING with the coldest demotable
+        hot resident — but only when e's decayed α mass beats the victim's
+        by `tier.promote_margin` (hysteresis, so two experts of similar mass
+        never ping-pong between tiers). Promotion re-uploads the host int8
+        rows (quantized from the f32 master — never an int4 upcast); the
+        swap demotes the victim into e's old warm slot, so no capacity is
+        created or destroyed. Appends the uploads to `pending`; returns
+        True iff the move happened (caller then skips the plain touch)."""
+        res = self.resident[(g, s)]
+        ema = self.alpha_ema[(g, s)]
+        wslot = res[e]
+        sh = self.slot_shard(wslot)
+        free = self.free[(g, s)][sh]
+        if free:
+            hot_slot = free.pop()
+            self.free4[(g, s)][sh].append(wslot)
+            self.policy4[(g, s)][sh].forget(e)
+            res[e] = hot_slot
+            self.policy[(g, s)][sh].admit(e, w)
+            pending.append((g, hot_slot, e))
+            self.stats.promotions += 1
+            self.stats.loads += 1
+            return True
+        v = self._peek_hot_victim(g, s, sh, protected | move_blocked)
+        if v is None or float(ema[e]) <= 0.0:
+            return False
+        if float(ema[e]) < self.tier.promote_margin * float(ema[v]):
+            return False
+        hot_slot = res[v]
+        res[e] = hot_slot
+        res[v] = wslot
+        self.policy[(g, s)][sh].forget(v)
+        self.policy4[(g, s)][sh].forget(e)
+        self.policy[(g, s)][sh].admit(e, w)
+        self.policy4[(g, s)][sh].admit(v, float(ema[v]))
+        pending.append((g, hot_slot, e))
+        pending.append((g, wslot, v))
+        self.stats.promotions += 1
+        self.stats.demotions += 1
+        self.stats.loads += 2
+        return True
 
     def _reclaim_replica(
         self, g: int, s: int, sh: int, protected: Set[int]
@@ -783,6 +1135,12 @@ class ExpertStore:
             return
         write = self._set if self._prefetcher is None else self._set_cow
         write_q = self._set_q if self._prefetcher is None else self._set_q_cow
+        if self.S4:
+            warm = [i for i in items if i[1] >= self.S8]
+            items = [i for i in items if i[1] < self.S8]
+            self._commit_warm(s, warm, write)
+            if not items:
+                return
         gs = np.array([i[0] for i in items], np.int32)
         sl = np.array([i[1] for i in items], np.int32)
         es = np.array([i[2] for i in items], np.int32)
@@ -808,6 +1166,30 @@ class ExpertStore:
             else:
                 self.stats.bytes_h2d += w_host.nbytes
                 moe_p[t] = write(moe_p[t], gs_j, sl_j, jnp.asarray(w_host))
+
+    def _commit_warm(
+        self, s: int, items: List[Tuple[int, int, int]], write
+    ) -> None:
+        """Batched host->device writes into the warm (int4) pools: the
+        nibble-packed slabs and per-group scale planes land as-is from the
+        host int4 masters (no transcode hop anywhere — the residency format
+        is the transfer format, same as the int8 hot path)."""
+        if not items:
+            return
+        gs = np.array([i[0] for i in items], np.int32)
+        sl = np.array([i[1] - self.S8 for i in items], np.int32)  # pool index
+        es = np.array([i[2] for i in items], np.int32)
+        moe_p = self.serve_params["blocks"][f"sub{s}"]["moe"]
+        gs_j, sl_j = jnp.asarray(gs), jnp.asarray(sl)
+        for t in EXPERT_TENSORS:
+            q4 = self.host4[f"sub{s}"][t][gs, es]
+            s4 = self.host4_scale[f"sub{s}"][t][gs, es]
+            self.stats.bytes_h2d += q4.nbytes + s4.nbytes
+            moe_p[t + "_q4"] = write(moe_p[t + "_q4"], gs_j, sl_j,
+                                     jnp.asarray(q4))
+            moe_p[t + "_q4_scale"] = write(
+                moe_p[t + "_q4_scale"], gs_j, sl_j, jnp.asarray(s4)
+            )
 
     def trans_row(self, l: int) -> np.ndarray:
         g, s = self.layer_to_gs(l)
@@ -847,9 +1229,10 @@ class ExpertStore:
             needed = table.active_experts(l)
             mass = None
             # sharded stores always take the mass: the α EMA feeds the hot
-            # threshold for replication and the rebalance placement scores
+            # threshold for replication and the rebalance placement scores;
+            # tiered stores take it too — the EMA ranks tier moves
             if (len(needed) > self.S or self.eviction == "alpha"
-                    or self.shards > 1):
+                    or self.shards > 1 or self.tiered):
                 mass = table.activation_mass(l, self.E)
             if len(needed) > self.S:
                 # tighter budget than the active set: keep the highest-α-mass
@@ -955,7 +1338,7 @@ class ExpertStore:
                     copies = [int(trans[l, e])] + [
                         int(sl) for sl in by_shard.values()
                     ]
-                    copies.sort(key=lambda sl: (score[sl // self.S_loc], sl))
+                    copies.sort(key=lambda sl: (score[self.slot_shard(sl)], sl))
                     for r in range(self.R):
                         cand[l, e, r] = copies[r % len(copies)]
         return cand
@@ -984,7 +1367,10 @@ class ExpertStore:
         taken before, during, or after a move points at slots that still
         hold the expert's weights. Returns the number of primaries moved.
         """
-        if self.shards <= 1:
+        if self.shards <= 1 or self.tiered:
+            # tiered stores skip rebalancing: a migrated primary's tier
+            # would have to be re-derived per shard, and tiering already
+            # does its own α-driven placement (promotion/demotion)
             return 0
         pf = self._prefetcher
         moved = 0
@@ -1421,7 +1807,7 @@ class PrefetchPipeline:
                 for g, slot, e in items:
                     ev = threading.Event()
                     self._pending[(g, s)].setdefault(e, {})[slot] = ev
-                    sh = slot // self.store.S_loc
+                    sh = self.store.slot_shard(slot)
                     jobs.setdefault(sh, {}).setdefault(s, []).append(
                         (g, slot, e, ev)
                     )
@@ -1479,7 +1865,7 @@ class PrefetchPipeline:
             for g, slot, e in items:
                 ev = threading.Event()
                 self._pending[(g, s)].setdefault(e, {})[slot] = ev
-                sh = slot // self.store.S_loc
+                sh = self.store.slot_shard(slot)
                 jobs.setdefault(sh, {}).setdefault(s, []).append(
                     (g, slot, e, ev)
                 )
@@ -1702,14 +2088,23 @@ class PrefetchPipeline:
         staging = self._staging[shard][i]
         consumed: List[Array] = []
 
-        gs = np.array([r[0] for r in rows], np.int32)
-        sl = np.array([r[1] for r in rows], np.int32)
-        es = np.array([r[2] for r in rows], np.int32)
+        # split the batch by destination tier: hot rows stage the int8
+        # masters into the int8 pools, warm rows the int4 masters into the
+        # q4 pools — both ride the same staging ring, and the batch's ready
+        # fences fire only after BOTH commits (below)
+        if store.S4:
+            hot_rows = [r for r in rows if r[1] < store.S8]
+            warm_rows = [r for r in rows if r[1] >= store.S8]
+        else:
+            hot_rows, warm_rows = rows, []
+        gs = np.array([r[0] for r in hot_rows], np.int32)
+        sl = np.array([r[1] for r in hot_rows], np.int32)
+        es = np.array([r[2] for r in hot_rows], np.int32)
         # stage + H2D outside the lock: host arrays are immutable and the
         # staging slabs are transfer-thread-private, so only the slot-pool
         # read-modify-write below needs to serialize with other commits
         staged = []
-        for t in EXPERT_TENSORS:
+        for t in EXPERT_TENSORS if hot_rows else ():
             w_view = self._stage(staging, (s, t), store.host[f"sub{s}"][t], gs, es)
             dev = _staged_put(w_view)
             consumed.append(dev)
@@ -1723,6 +2118,25 @@ class PrefetchPipeline:
                 consumed.append(dscale)
                 nbytes += s_view.nbytes
             staged.append((t, dev, dscale, nbytes))
+        staged_warm = []
+        if warm_rows:
+            gs4 = np.array([r[0] for r in warm_rows], np.int32)
+            sl4 = np.array([r[1] - store.S8 for r in warm_rows], np.int32)
+            es4 = np.array([r[2] for r in warm_rows], np.int32)
+            for t in EXPERT_TENSORS:
+                q_view = self._stage(
+                    staging, (s, t, "q4"), store.host4[f"sub{s}"][t], gs4, es4
+                )
+                dq = _staged_put(q_view)
+                consumed.append(dq)
+                s_view = self._stage(
+                    staging, (s, t, "q4scale"),
+                    store.host4_scale[f"sub{s}"][t], gs4, es4,
+                )
+                ds4 = _staged_put(s_view)
+                consumed.append(ds4)
+                staged_warm.append((t, dq, ds4, q_view.nbytes + s_view.nbytes))
+            dgs4, dsl4 = jnp.asarray(gs4), jnp.asarray(sl4)
         dgs, dsl = jnp.asarray(gs), jnp.asarray(sl)
         with self._lock:
             moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
@@ -1740,6 +2154,14 @@ class PrefetchPipeline:
                     moe_p[t] = store._set_q_cow(moe_p[t], dgs, dsl, dev, dscale)
                 else:
                     moe_p[t] = store._set_cow(moe_p[t], dgs, dsl, dev)
+            for t, dq, ds4, nbytes in staged_warm:
+                store.stats.bytes_h2d += nbytes
+                moe_p[t + "_q4"] = store._set_cow(
+                    moe_p[t + "_q4"], dgs4, dsl4, dq
+                )
+                moe_p[t + "_q4_scale"] = store._set_cow(
+                    moe_p[t + "_q4_scale"], dgs4, dsl4, ds4
+                )
             # every tensor of every expert in this batch is committed:
             # ready fences may fire now (no half-written slot is observable)
             for g, slot, e, ev in rows:

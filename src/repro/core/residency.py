@@ -570,3 +570,35 @@ class ResidencyManager:
         left = total_bytes - (pages + 1) * page_bytes
         slots = max(min_slots, left // (expert_slot_bytes * max(n_moe_layers, 1)))
         return int(slots), int(pages)
+
+    @staticmethod
+    def split_budget_tiered(
+        total_bytes: int,
+        hot_slot_bytes: int,
+        warm_slot_bytes: int,
+        page_bytes: int,
+        n_moe_layers: int,
+        tier_split: float = 0.5,
+        expert_mass: float = 1.0,
+        kv_mass: float = 1.0,
+        min_slots: int = 1,
+        min_pages: int = 1,
+    ) -> Tuple[int, int, int]:
+        """Tiered variant of `split_budget`: the expert share of the budget
+        further splits `tier_split` into int8 hot slots and the remainder
+        into int4 warm slots (per-tier bytes from
+        `ExpertStore.tier_slot_bytes` — scale planes included), returning
+        (hot_slots, warm_slots, kv_pages) per MoE layer. The same expert
+        byte budget buys ~2x the resident experts once the warm share
+        dominates, which is the point of the warm tier."""
+        assert 0.0 < tier_split <= 1.0, tier_split
+        assert warm_slot_bytes > 0, warm_slot_bytes
+        hot, pages = ResidencyManager.split_budget(
+            total_bytes, hot_slot_bytes, page_bytes, n_moe_layers,
+            expert_mass=expert_mass, kv_mass=kv_mass,
+            min_slots=min_slots, min_pages=min_pages,
+        )
+        hot8 = max(min_slots, int(round(hot * tier_split)))
+        warm_bytes = (hot - hot8) * hot_slot_bytes
+        warm4 = int(warm_bytes // warm_slot_bytes)
+        return int(hot8), int(warm4), int(pages)

@@ -146,6 +146,123 @@ def expert_ffn_q(
     )(xe, w_in_q, w_in_scale, w_gate_q, w_gate_scale, w_out_q, w_out_scale)
 
 
+def _unpack_nibbles(p, k: int):
+    """[k//2, n] nibble-packed uint8 -> [k, n] signed int4 values as int8.
+
+    Byte i holds contraction rows 2i (low nibble) / 2i+1 (high nibble),
+    two's complement in [-8, 7] — must match `ref.unpack_int4_ref` and the
+    numpy packer in core/offload.py bit-for-bit."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = (p >> 4).astype(jnp.int8)
+    v = jnp.stack([lo, hi], axis=1).reshape(k, p.shape[-1])
+    return jnp.where(v >= 8, v - 16, v)
+
+
+def _ffn_kernel_q4(
+    x_ref, wi_ref, wis_ref, wg_ref, wgs_ref, wo_ref, wos_ref, o_ref,
+    *, act: str, glu: bool,
+):
+    """Int4 fused-dequant variant: weight tiles arrive nibble-packed uint8
+    (4× fewer bytes than fp32, 2× fewer than int8) and are unpacked to the
+    compute dtype in VMEM. Scales are per GROUP along the contraction axis,
+    so they do NOT commute with the full contraction — instead each f-tile
+    contracts group-by-group (a batched [bc, g] x [g, bf] dot with the group
+    axis as the batch dim), applies the [n_groups, bf] scale plane to the
+    stacked partials in f32, and sums over groups in the epilogue."""
+    j = pl.program_id(2)  # f-tile index (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                               # [bc, d]
+    bc, d = x.shape
+    gd_n = wis_ref.shape[1]                                    # groups along d
+    gd = d // gd_n
+    bf = wis_ref.shape[2]
+    gf_n = wos_ref.shape[1]                                    # w_out groups in tile
+    gf = bf // gf_n
+
+    def grouped_dot(lhs, w_packed, scale, n_groups, gsz):
+        # lhs [bc, k] x packed [k//2, n] with scale [n_groups, n] -> [bc, n]
+        k = n_groups * gsz
+        w = _unpack_nibbles(w_packed, k).astype(lhs.dtype)     # [k, n]
+        lg = lhs.reshape(bc, n_groups, gsz).swapaxes(0, 1)     # [ng, bc, g]
+        wg_ = w.reshape(n_groups, gsz, -1)                     # [ng, g, n]
+        part = jax.lax.dot_general(
+            lg, wg_, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                                      # [ng, bc, n]
+        return (part * scale[:, None, :].astype(jnp.float32)).sum(0)
+
+    h = grouped_dot(x, wi_ref[0], wis_ref[0], gd_n, gd)        # [bc, bf]
+    if glu:
+        g = grouped_dot(x, wg_ref[0], wgs_ref[0], gd_n, gd)
+        h = _act(g, act) * h
+    else:
+        h = _act(h, act)
+    out = grouped_dot(h.astype(x.dtype), wo_ref[0], wos_ref[0], gf_n, gf)
+    o_ref[...] += out[None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "glu", "bc", "bf", "interpret")
+)
+def expert_ffn_q4(
+    xe: Array,                      # [E, C, d]
+    w_in_q4: Array,                 # [E, d//2, F] uint8 (packed along d)
+    w_in_scale: Array,              # [E, d//g, F] f32 per-group scales
+    w_gate_q4: Optional[Array],     # [E, d//2, F] uint8 (None => non-gated)
+    w_gate_scale: Optional[Array],  # [E, d//g, F] f32
+    w_out_q4: Array,                # [E, F//2, d] uint8 (packed along F)
+    w_out_scale: Array,             # [E, F//g, d] f32
+    act: str = "silu",
+    bc: int = 128,
+    bf: int = 128,
+    interpret: bool = False,
+    glu: Optional[bool] = None,
+) -> Array:
+    """Slot-stacked expert FFN over int4-resident weights (SiDA warm-tier
+    slots): same grid/accumulation scheme as `expert_ffn_q`, but the weight
+    operands stream from HBM nibble-packed (two int4 values per byte) and
+    the per-group scales fold into a grouped-contraction f32 epilogue."""
+    E, C, d = xe.shape
+    F = w_in_q4.shape[-1]
+    glu = (w_gate_q4 is not None) if glu is None else glu
+    bc = min(bc, C)
+    bf = min(bf, F)
+    assert C % bc == 0 and F % bf == 0, (C, bc, F, bf)
+    assert d % 2 == 0 and F % 2 == 0, (d, F)  # nibble packing needs even dims
+    gd_n = w_in_scale.shape[1]
+    gf_n = w_out_scale.shape[1]
+    assert d % gd_n == 0 and F % gf_n == 0, (d, gd_n, F, gf_n)
+    g_out = F // gf_n
+    # each f-tile must cover whole w_out scale groups so the (1, bf//g, d)
+    # scale block at index j lines up with the packed (1, bf//2, d) block
+    assert bf % g_out == 0, (bf, g_out)
+    if w_gate_q4 is None:
+        w_gate_q4 = w_in_q4        # placeholder operands (never read)
+        w_gate_scale = w_in_scale
+
+    grid = (E, C // bc, F // bf)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel_q4, act=act, glu=glu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((1, d // 2, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, gd_n, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, d // 2, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, gd_n, bf), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, bf // 2, d), lambda e, i, j: (e, j, 0)),
+            pl.BlockSpec((1, bf // g_out, d), lambda e, i, j: (e, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), xe.dtype),
+        interpret=interpret,
+    )(xe, w_in_q4, w_in_scale, w_gate_q4, w_gate_scale, w_out_q4, w_out_scale)
+
+
 @functools.partial(
     jax.jit, static_argnames=("act", "glu", "bc", "bf", "interpret")
 )

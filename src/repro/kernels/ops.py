@@ -38,6 +38,16 @@ def expert_ffn_q(xe, w_in_q, w_in_scale, w_gate_q, w_gate_scale,
     )
 
 
+def expert_ffn_q4(xe, w_in_q4, w_in_scale, w_gate_q4, w_gate_scale,
+                  w_out_q4, w_out_scale, act: str = "silu", **kw):
+    """Fused-dequant expert FFN over nibble-packed int4 weights with
+    per-group scales (warm-tier residency slots)."""
+    return _eg.expert_ffn_q4(
+        xe, w_in_q4, w_in_scale, w_gate_q4, w_gate_scale,
+        w_out_q4, w_out_scale, act=act, interpret=_interpret(), **kw
+    )
+
+
 def sparsemax(z, **kw):
     return _sm.sparsemax(z, interpret=_interpret(), **kw)
 

@@ -59,6 +59,57 @@ def expert_ffn_q_ref(
     return expert_ffn_ref(xe, wi, wg, wo, act=act)
 
 
+def unpack_int4_ref(packed: Array, k: int) -> Array:
+    """Nibble-packed uint8 [..., ceil(k/2), n] -> int8 [..., k, n].
+
+    Byte i holds contraction rows 2i (low nibble) and 2i+1 (high nibble);
+    nibbles are two's-complement int4 in [-8, 7]. The in-kernel unpack in
+    `expert_gemm._ffn_kernel_q4` is this exact computation."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = (packed >> 4).astype(jnp.int8)
+    v = jnp.stack([lo, hi], axis=-2)                 # [..., k/2, 2, n]
+    v = v.reshape(*packed.shape[:-2], -1, packed.shape[-1])[..., :k, :]
+    return jnp.where(v >= 8, v - 16, v)
+
+
+def dequantize_q4_ref(packed: Array, scale: Array, k: int) -> Array:
+    """int4-packed tensor + per-group per-output-channel scales -> f32.
+
+    scale [..., n_groups, n] carries one f32 per `k // n_groups` contraction
+    rows per output channel; groups tile the contraction axis in order."""
+    q = unpack_int4_ref(packed, k).astype(jnp.float32)
+    ng = scale.shape[-2]
+    gs = k // ng
+    s = jnp.repeat(scale.astype(jnp.float32), gs, axis=-2)
+    return q * s
+
+
+def expert_ffn_q4_ref(
+    xe: Array,             # [E, C, d]
+    w_in_q4: Array,        # [E, d//2, F] uint8 (nibble-packed along d)
+    w_in_scale: Array,     # [E, d//g, F] f32 per-group scales
+    w_gate_q4: Array,      # [E, d//2, F] uint8 or None
+    w_gate_scale: Array,   # [E, d//g, F] or None
+    w_out_q4: Array,       # [E, F//2, d] uint8 (packed along F)
+    w_out_scale: Array,    # [E, F//g, d] f32
+    act: str = "silu",
+) -> Array:
+    """Int4 group-quantized expert FFN oracle: dequantize-then-compute.
+
+    Unlike the int8 per-output-channel case, per-GROUP scales do NOT commute
+    with the contraction — the fused kernel computes per-group partial dots
+    and applies the scales in the f32 epilogue, which is mathematically this
+    materialized-dequant form (same sum, reassociated per group)."""
+    d = xe.shape[-1]
+    F = w_out_q4.shape[-2] * 2
+    wi = dequantize_q4_ref(w_in_q4, w_in_scale, d).astype(xe.dtype)
+    wg = None
+    if w_gate_q4 is not None:
+        wg = dequantize_q4_ref(w_gate_q4, w_gate_scale, d).astype(xe.dtype)
+    wo = dequantize_q4_ref(w_out_q4, w_out_scale, F).astype(xe.dtype)
+    return expert_ffn_ref(xe, wi, wg, wo, act=act)
+
+
 def sparsemax_ref(z: Array) -> Array:
     """Row-wise Euclidean projection onto the simplex (Martins & Astudillo)."""
     K = z.shape[-1]

@@ -23,7 +23,7 @@ import argparse
 import jax
 import numpy as np
 
-from repro.configs.base import get_config
+from repro.configs.base import TierConfig, get_config
 from repro.core.baselines import OnDemandServer, PrefetchAllServer, StandardServer
 from repro.core.engine import SiDAEngine
 from repro.core.hash_fn import init_hash_fn
@@ -53,7 +53,7 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
                  prefetch_depth: int = 0, staging_buffers: int = 2,
                  host_quant: str = "none", quantized_slots: bool = False,
                  scale_granularity: str = "channel", ep_shards: int = 1,
-                 replicate_hot: int = 0):
+                 replicate_hot: int = 0, tier: TierConfig | None = None):
     if engine == "standard":
         return StandardServer(cfg, params)
     if engine == "ondemand":
@@ -69,7 +69,19 @@ def build_engine(engine: str, cfg, params, slots: int, eviction: str = "fifo",
         cfg, params, hp, slots_per_layer=slots, eviction=eviction,
         prefetch_depth=prefetch_depth, staging_buffers=staging_buffers,
         host_quant=host_quant, quantized_slots=quantized_slots,
-        scale_granularity=scale_granularity, ctx=ctx, sharded=sharded,
+        scale_granularity=scale_granularity, tier=tier, ctx=ctx, sharded=sharded,
+    )
+
+
+def serve_tier(args) -> TierConfig | None:
+    """TierConfig for --int4-slots (hot int8 / warm int4 residency tiers),
+    or None when tiering is off (the untiered path must stay byte-identical,
+    so no TierConfig object is threaded at all)."""
+    if not args.int4_slots:
+        return None
+    return TierConfig(
+        int4_slots=True, tier_split=args.tier_split,
+        group_size=args.quant_group,
     )
 
 
@@ -80,6 +92,19 @@ def validate_serve_args(args) -> None:
     def die(msg: str) -> None:
         raise SystemExit(f"serve: invalid flags: {msg}")
 
+    if args.int4_slots:
+        if not args.quantized_slots:
+            die("--int4-slots extends the quantized slot pool: also pass "
+                "--quantized-slots (hot tier stays int8)")
+        if args.replicate_hot:
+            die("--int4-slots and --replicate-hot are mutually exclusive "
+                "(replicas assume a single uniform slot pool)")
+        if not (0.0 < args.tier_split <= 1.0):
+            die(f"--tier-split {args.tier_split} must be in (0, 1]: the "
+                "fraction of the slot byte budget held as int8 hot slots")
+        if args.quant_group <= 0:
+            die("--quant-group must be >= 1 (int4 scale group size along "
+                "the contraction axis)")
     if args.kv_pages < 0 or args.page_size <= 0 or args.prefill_chunk < 0:
         die("--kv-pages/--prefill-chunk must be >= 0 and --page-size >= 1")
     if args.replicate_hot < 0 or args.rebalance_interval < 0:
@@ -177,6 +202,7 @@ def run_request_server(cfg, params, args) -> None:
         host_quant=args.host_quant,
         quantized_slots=args.quantized_slots,
         scale_granularity=args.scale_granularity,
+        tier=serve_tier(args),
         spec_mode=args.spec_mode,
         spec_k=args.spec_k,
         ctx=ctx, sharded=sharded,
@@ -194,6 +220,8 @@ def run_request_server(cfg, params, args) -> None:
           f"eviction={args.eviction} rate={args.rate}rps "
           f"prefetch_depth={args.prefetch_depth} "
           f"quantized_slots={args.quantized_slots} "
+          f"int4_slots={args.int4_slots} "
+          f"tier_split={args.tier_split} "
           f"spec={args.spec_mode}/k{args.spec_k} "
           f"ep_shards={args.ep_shards} "
           f"replicate_hot={args.replicate_hot} "
@@ -233,6 +261,18 @@ def main():
     ap.add_argument("--scale-granularity", default="channel",
                     choices=["channel", "tensor"],
                     help="int8 scale granularity per expert tensor")
+    ap.add_argument("--int4-slots", action="store_true",
+                    help="hierarchical residency tiers: keep the hot tier "
+                         "int8 and add a warm tier of nibble-packed int4 "
+                         "slots with per-group scales (~2x experts per "
+                         "byte); requires --quantized-slots")
+    ap.add_argument("--tier-split", type=float, default=0.5,
+                    help="fraction of the slot byte budget held as int8 hot "
+                         "slots; the remainder becomes int4 warm slots "
+                         "(1.0 = all-hot, degenerate to --quantized-slots)")
+    ap.add_argument("--quant-group", type=int, default=64,
+                    help="int4 scale group size along the contraction axis "
+                         "(smaller = tighter error, more scale-plane bytes)")
     ap.add_argument("--spec-mode", default="off", choices=["off", "draft"],
                     help="speculative decode: 'draft' unrolls the hash "
                          "predictor's tied-embedding next-token head and "
@@ -302,7 +342,8 @@ def main():
     srv = build_engine(args.engine, cfg, params, args.slots, args.eviction,
                        args.prefetch_depth, args.staging_buffers,
                        args.host_quant, args.quantized_slots,
-                       args.scale_granularity, args.ep_shards)
+                       args.scale_granularity, args.ep_shards,
+                       tier=serve_tier(args))
     metrics = srv.serve(batches)
     print(f"engine={args.engine} slots={args.slots}")
     for k, v in metrics.summary().items():

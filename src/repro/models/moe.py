@@ -198,8 +198,14 @@ def _dispatch_combine(params, xt, ids, w, cfg, ctx, dispatch, served=False):
     m = cfg.moe
     T, d = xt.shape
     # E comes from the weight stack, not the config: SiDA serving passes slot
-    # buffers with S_slots << num_experts and slot-translated ids.
+    # buffers with S_slots << num_experts and slot-translated ids. A tiered
+    # store publishes TWO stacks — int8 hot slots [S8] plus nibble-packed
+    # int4 warm slots [S4] — addressed as one combined slot space [S8+S4)
+    # (hot first), so the dispatch below needs no tier awareness beyond the
+    # stack split inside apply_expert_stack_blocked.
     E, K = params["w_in"].shape[0], ids.shape[-1]
+    if "w_in_q4" in params:
+        E += params["w_in_q4"].shape[0]
     blk = _block_tokens(T)
     n = T // blk
     C = _capacity(cfg, blk, E)
@@ -335,7 +341,11 @@ def _dispatch_combine_ep(
     mesh = ctx.mesh
     maxis = maxis or ctx.expert_axis or ctx.model_axis
     mext = mesh.shape[maxis]
-    E = params["w_in"].shape[0]
+    S8 = params["w_in"].shape[0]
+    tiered = "w_in_q4" in params
+    S4 = params["w_in_q4"].shape[0] if tiered else 0
+    E = S8 + S4
+    S8_loc, S4_loc = S8 // mext, S4 // mext
     E_loc = E // mext
     T, d = xt.shape
     K = ids.shape[-1]
@@ -347,14 +357,32 @@ def _dispatch_combine_ep(
     wnames = ["w_in", "w_gate", "w_out"]
     if quantized:
         wnames += [t + "_scale" for t in ("w_in", "w_gate", "w_out")]
+    if tiered:
+        for t in ("w_in", "w_gate", "w_out"):
+            wnames += [t + "_q4", t + "_q4_scale"]
     wvals = [params[t] for t in wnames]
 
     def inner(x_b, ids_b, w_b, *wts):
         p_loc = dict(zip(wnames, wts))      # this shard's slot-pool slice
         nl = x_b.shape[0]
-        e0 = jax.lax.axis_index(maxis) * E_loc
-        idsl = ids_b - e0                                   # [nl, blk, K]
-        local = (idsl >= 0) & (idsl < E_loc)
+        if tiered:
+            # tiered slot space: each shard owns TWO contiguous global
+            # ranges — hot [m*S8_loc, (m+1)*S8_loc) and warm
+            # [S8 + m*S4_loc, S8 + (m+1)*S4_loc) — mapped onto the local
+            # combined stack [0, S8_loc) ++ [S8_loc, S8_loc + S4_loc).
+            # With S4 = 0 this never runs: the params tree has no q4 keys,
+            # so the untiered single-range check below stays bit-identical.
+            mi = jax.lax.axis_index(maxis)
+            hot_l = ids_b - mi * S8_loc
+            is_hot = (ids_b < S8) & (hot_l >= 0) & (hot_l < S8_loc)
+            warm_l = ids_b - S8 - mi * S4_loc
+            is_warm = (ids_b >= S8) & (warm_l >= 0) & (warm_l < S4_loc)
+            local = is_hot | is_warm
+            idsl = jnp.where(is_warm, S8_loc + warm_l, hot_l)
+        else:
+            e0 = jax.lax.axis_index(maxis) * E_loc
+            idsl = ids_b - e0                               # [nl, blk, K]
+            local = (idsl >= 0) & (idsl < E_loc)
         idsl_c = jnp.clip(idsl, 0, E_loc - 1)
         oh = jax.nn.one_hot(
             jnp.where(local, idsl_c, E_loc), E_loc + 1, dtype=jnp.int32
@@ -419,6 +447,13 @@ def expert_params_quantized(p: dict) -> bool:
     return "w_in_scale" in p
 
 
+def expert_params_tiered(p: dict) -> bool:
+    """True when the stack also carries a warm int4 tier: the tiered
+    ExpertStore publishes nibble-packed `w_*_q4` pools (+ per-group
+    `w_*_q4_scale` planes) alongside the int8 hot pools."""
+    return "w_in_q4" in p
+
+
 def _use_pallas_default() -> bool:
     """Serving-path default for routing the expert FFN through the Pallas
     kernels: opt-in via REPRO_MOE_PALLAS=1 (the kernels need MXU-aligned
@@ -453,6 +488,16 @@ def apply_expert_stack_blocked(
     """
     if use_pallas is None:
         use_pallas = _use_pallas_default()
+    if expert_params_tiered(p):
+        # mixed-format resident set: rows [0, S8) are int8 hot slots, rows
+        # [S8, S8+S4) are nibble-packed int4 warm slots — each block routes
+        # through its format's (fused-dequant) kernel / oracle and the
+        # outputs concatenate back into the combined slot order
+        S8 = p["w_in"].shape[0]
+        hot = {k: v for k, v in p.items() if "_q4" not in k}
+        y8 = apply_expert_stack_blocked(hot, xe[:, :S8], cfg, use_pallas)
+        y4 = _apply_expert_stack_q4(p, xe[:, S8:], cfg, use_pallas)
+        return jnp.concatenate([y8, y4], axis=1)
     quantized = expert_params_quantized(p)
     if use_pallas:
         from repro.kernels import ops
@@ -490,6 +535,43 @@ def apply_expert_stack_blocked(
     else:
         h = act_fn(cfg.act)(h)
     return jnp.einsum("necf,efd->necd", h, wo)
+
+
+def _apply_expert_stack_q4(
+    p: dict, xe: Array, cfg: ModelConfig, use_pallas: bool
+) -> Array:
+    """xe: [n, S4, C, d] -> [n, S4, C, d] through the warm-tier int4 slots.
+
+    Pallas path: `ops.expert_ffn_q4` (nibble unpack + per-group scales in
+    the f32 epilogue, fused). jnp path: materialized per-group dequant then
+    the standard einsum FFN — the oracle, and exactly
+    `kernels/ref.expert_ffn_q4_ref` reassociated."""
+    wi, wis = p["w_in_q4"], p["w_in_q4_scale"]
+    wg, wgs = (
+        (p["w_gate_q4"], p["w_gate_q4_scale"]) if cfg.glu else (None, None)
+    )
+    wo, wos = p["w_out_q4"], p["w_out_q4_scale"]
+    if use_pallas:
+        from repro.kernels import ops
+
+        n, E, C, d = xe.shape
+        x2 = xe.transpose(1, 0, 2, 3).reshape(E, n * C, d)
+        out = ops.expert_ffn_q4(x2, wi, wis, wg, wgs, wo, wos, act=cfg.act)
+        return out.reshape(E, n, C, d).transpose(1, 0, 2, 3)
+    from repro.kernels.ref import dequantize_q4_ref
+
+    d = xe.shape[-1]
+    F = wi.shape[-1]
+    wi_f = dequantize_q4_ref(wi, wis, d).astype(xe.dtype)
+    wo_f = dequantize_q4_ref(wo, wos, F).astype(xe.dtype)
+    h = jnp.einsum("necd,edf->necf", xe, wi_f)
+    if cfg.glu:
+        wg_f = dequantize_q4_ref(wg, wgs, d).astype(xe.dtype)
+        g = jnp.einsum("necd,edf->necf", xe, wg_f)
+        h = act_fn(cfg.act)(g) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    return jnp.einsum("necf,efd->necd", h, wo_f)
 
 
 def _constrain_necd(x: Array, ctx: ShardingCtx, P_dims: int = 4) -> Array:

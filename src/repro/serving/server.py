@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, TierConfig
 from repro.core.decode_engine import (
     draft_unroll_fn,
     hash_fn_step,
@@ -106,6 +106,7 @@ class RequestServer:
         staging_buffers: Optional[int] = None,
         quantized_slots: Optional[bool] = None,
         scale_granularity: Optional[str] = None,
+        tier: Optional[TierConfig] = None,
         spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
         spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
         sharded: Optional[ShardedStoreConfig] = None,
@@ -134,7 +135,7 @@ class RequestServer:
         self.store = ExpertStore(
             cfg, params, slots_per_layer, host_quant=host_quant, eviction=eviction,
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
-            sharded=sharded, mesh=ctx.mesh,
+            tier=tier, sharded=sharded, mesh=ctx.mesh,
         )
         self.prefetch: Optional[PrefetchPipeline] = PrefetchPipeline.maybe_create(
             self.store, cfg, prefetch_depth, staging_buffers

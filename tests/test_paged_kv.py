@@ -624,7 +624,9 @@ def test_flash_decode_paged_matches_ref(window):
 def _args(**over):
     base = dict(engine="server", kv_pages=0, page_size=16, prefill_chunk=0,
                 max_seq=0, seq=32, new_tokens=8, spec_mode="off", spec_k=4,
-                ep_shards=1, replicate_hot=0, rebalance_interval=0.0)
+                ep_shards=1, replicate_hot=0, rebalance_interval=0.0,
+                quantized_slots=False, int4_slots=False, tier_split=0.5,
+                quant_group=64)
     base.update(over)
     return argparse.Namespace(**base)
 
@@ -633,8 +635,15 @@ def test_validate_serve_args():
     validate_serve_args(_args())                       # ring mode: fine
     validate_serve_args(_args(kv_pages=8))             # paged: fine
     validate_serve_args(_args(kv_pages=8, prefill_chunk=8, max_seq=256))
+    validate_serve_args(_args(int4_slots=True, quantized_slots=True))
 
     bad = [
+        _args(int4_slots=True),                        # needs quantized slots
+        _args(int4_slots=True, quantized_slots=True,   # excludes replication
+              replicate_hot=1, ep_shards=4),
+        _args(int4_slots=True, quantized_slots=True, tier_split=0.0),
+        _args(int4_slots=True, quantized_slots=True, tier_split=1.5),
+        _args(int4_slots=True, quantized_slots=True, quant_group=0),
         _args(prefill_chunk=8),                        # chunk needs pages
         _args(max_seq=64),                             # max_seq needs pages
         _args(kv_pages=8, engine="sida"),              # server-only flags

@@ -18,7 +18,14 @@ import pytest
 
 from conftest import reduced_params
 from repro.core.hash_table import HashTable
-from repro.core.offload import ExpertStore, PrefetchPipeline, quantize_expert
+from repro.core.offload import (
+    ExpertStore,
+    PrefetchPipeline,
+    pack_nibbles,
+    quantize_expert,
+    quantize_expert_q4,
+    unpack_nibbles,
+)
 from repro.kernels import ops, ref
 from repro.models.attention import ShardingCtx
 from repro.models.moe import apply_expert_stack_blocked
@@ -159,6 +166,187 @@ def test_apply_expert_stack_blocked_quantized_pallas_vs_jnp():
         p[t], p[t + "_scale"] = q, s
     a = apply_expert_stack_blocked(p, xe, cfg, use_pallas=False)
     b = apply_expert_stack_blocked(p, xe, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# int4: nibble packing + per-group quantization (warm-tier format)
+# ---------------------------------------------------------------------------
+
+
+def _quantized4(w, group=64):
+    q, s = quantize_expert_q4(np.asarray(w), group)
+    return jnp.asarray(q), jnp.asarray(s)
+
+
+@pytest.mark.parametrize("k", [1, 7, 8, 15, 64])
+def test_nibble_pack_unpack_exact(k):
+    """Pack/unpack is exact for every int4 value, including ODD contraction
+    dims (the last byte's high nibble is zero padding, sliced off)."""
+    rng = np.random.default_rng(0)
+    q = rng.integers(-8, 8, (3, k, 5)).astype(np.int8)
+    p = pack_nibbles(q)
+    assert p.dtype == np.uint8 and p.shape == (3, (k + 1) // 2, 5)
+    np.testing.assert_array_equal(unpack_nibbles(p, k), q)
+    # the jnp oracle unpack (the kernel's contract) agrees bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_int4_ref(jnp.asarray(p), k)), q
+    )
+
+
+@pytest.mark.parametrize("group", [16, 32, 64])
+def test_quantize_q4_roundtrip_error_bound(group):
+    w = np.asarray(jax.random.normal(KEY, (2, 64, 48))) * 0.3
+    q, s = quantize_expert_q4(w, group)
+    assert q.dtype == np.uint8 and q.shape == (2, 32, 48)
+    assert s.shape == (2, 64 // group, 48)
+    deq = np.asarray(ref.dequantize_q4_ref(jnp.asarray(q), jnp.asarray(s), 64))
+    # symmetric round-to-nearest over 15 levels: error <= group scale / 2
+    s_full = np.repeat(s, group, axis=-2)
+    assert (np.abs(w - deq) <= s_full / 2 + 1e-7).all()
+
+
+def test_quantize_q4_odd_contraction_dim():
+    """Odd k: one zero row pads the last byte; dequant restores exactly k
+    rows and the pad never leaks into the scales."""
+    w = np.asarray(jax.random.normal(KEY, (1, 33, 8))) * 0.1
+    q, s = quantize_expert_q4(w, group=64)  # 33 % 64 != 0 -> one group
+    assert q.shape == (1, 17, 8) and s.shape == (1, 1, 8)
+    deq = np.asarray(ref.dequantize_q4_ref(jnp.asarray(q), jnp.asarray(s), 33))
+    assert (np.abs(w - deq) <= np.repeat(s, 33, axis=-2) / 2 + 1e-7).all()
+
+
+def test_q4_group_sweep_vs_int8():
+    """Group-size sweep: finer int4 groups are monotonically no looser in
+    mean round-trip error, and per-channel int8 beats every int4 group
+    (the precision each tier trades for capacity)."""
+    w = np.asarray(jax.random.normal(KEY, (2, 128, 32))) * 0.3
+    w[:, 5] *= 10.0  # an outlier row: coarse groups absorb it, fine ones don't
+    errs = {}
+    for group in (128, 64, 32):
+        q, s = quantize_expert_q4(w, group)
+        deq = np.asarray(
+            ref.dequantize_q4_ref(jnp.asarray(q), jnp.asarray(s), 128)
+        )
+        errs[group] = np.abs(w - deq).mean()
+    assert errs[32] <= errs[64] <= errs[128]
+    q8, s8 = quantize_expert(w, "channel")
+    err8 = np.abs(w - q8.astype(np.float32) * s8).mean()
+    assert err8 < errs[32]
+
+
+# ---------------------------------------------------------------------------
+# fused-dequant int4 kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,C,d,F", [
+    (1, 128, 128, 128),
+    (3, 128, 256, 384),
+    (2, 256, 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_ffn_q4_matches_oracle(E, C, d, F, dtype):
+    ks = jax.random.split(KEY, 4)
+    xe = jax.random.normal(ks[0], (E, C, d), dtype)
+    wi = _quantized4(jax.random.normal(ks[1], (E, d, F)) * 0.05)
+    wg = _quantized4(jax.random.normal(ks[2], (E, d, F)) * 0.05)
+    wo = _quantized4(jax.random.normal(ks[3], (E, F, d)) * 0.05)
+    got = ops.expert_ffn_q4(xe, *wi, *wg, *wo)
+    want = ref.expert_ffn_q4_ref(xe, *wi, *wg, *wo)
+    assert got.dtype == xe.dtype
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("act,glu", [("silu", True), ("gelu", False), ("relu", True)])
+def test_expert_ffn_q4_acts(act, glu):
+    ks = jax.random.split(KEY, 4)
+    E, C, d, F = 2, 128, 256, 256
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wi = _quantized4(jax.random.normal(ks[1], (E, d, F)) * 0.05)
+    wg = (None, None)
+    if glu:
+        wg = _quantized4(jax.random.normal(ks[2], (E, d, F)) * 0.05)
+    wo = _quantized4(jax.random.normal(ks[3], (E, F, d)) * 0.05)
+    got = ops.expert_ffn_q4(xe, *wi, *wg, *wo, act=act)
+    want = ref.expert_ffn_q4_ref(xe, *wi, *wg, *wo, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("group", [32, 64, 128])
+def test_expert_ffn_q4_group_sweep(group):
+    """Per-group scales do NOT commute with the contraction: each group
+    size exercises a different partial-dot split in the kernel epilogue,
+    and every one must match the materialized-dequant oracle."""
+    ks = jax.random.split(KEY, 4)
+    E, C, d, F = 2, 128, 256, 128
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wi = _quantized4(jax.random.normal(ks[1], (E, d, F)) * 0.05, group)
+    wg = _quantized4(jax.random.normal(ks[2], (E, d, F)) * 0.05, group)
+    wo = _quantized4(jax.random.normal(ks[3], (E, F, d)) * 0.05, group)
+    got = ops.expert_ffn_q4(xe, *wi, *wg, *wo, bf=128)
+    want = ref.expert_ffn_q4_ref(xe, *wi, *wg, *wo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_expert_ffn_q4_block_sweep():
+    """Different BlockSpec tilings must agree (the per-group epilogue is
+    applied per f-tile, so bf must stay a multiple of the w_out group)."""
+    ks = jax.random.split(KEY, 4)
+    E, C, d, F = 2, 256, 128, 256
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wi = _quantized4(jax.random.normal(ks[1], (E, d, F)) * 0.05)
+    wg = _quantized4(jax.random.normal(ks[2], (E, d, F)) * 0.05)
+    wo = _quantized4(jax.random.normal(ks[3], (E, F, d)) * 0.05)
+    want = ref.expert_ffn_q4_ref(xe, *wi, *wg, *wo)
+    for bc, bf in [(64, 64), (128, 128), (256, 256), (128, 64)]:
+        got = ops.expert_ffn_q4(xe, *wi, *wg, *wo, bc=bc, bf=bf)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_expert_ffn_q4_close_to_fp():
+    """End-to-end accuracy contract: int4 with per-group scales tracks the
+    unquantized fp FFN within the (documented) ~2x-int8 error budget."""
+    ks = jax.random.split(KEY, 4)
+    E, C, d, F = 2, 128, 256, 256
+    xe = jax.random.normal(ks[0], (E, C, d))
+    wi = jax.random.normal(ks[1], (E, d, F)) * 0.05
+    wg = jax.random.normal(ks[2], (E, d, F)) * 0.05
+    wo = jax.random.normal(ks[3], (E, F, d)) * 0.05
+    got = ops.expert_ffn_q4(
+        xe, *_quantized4(wi), *_quantized4(wg), *_quantized4(wo)
+    )
+    fp = ref.expert_ffn_ref(xe, wi, wg, wo)
+    rel = float(jnp.abs(got - fp).max() / jnp.abs(fp).max())
+    assert rel < 0.15, rel
+
+
+def test_apply_expert_stack_blocked_tiered_pallas_vs_jnp():
+    """models/moe.py threading: a TIERED param dict (int8 hot stack + int4
+    warm stack) routes each block through its format's kernel (use_pallas)
+    and the inline-dequant einsums identically, concatenated back into the
+    combined slot order."""
+    cfg, _ = reduced_params("switch-base-8")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, d_expert=128))
+    ks = jax.random.split(KEY, 6)
+    S8, S4, d, F = 2, 2, cfg.d_model, 128
+    xe = jax.random.normal(ks[0], (2, S8 + S4, 128, d))
+    p = {}
+    for i, (t, shape) in enumerate([("w_in", (S8, d, F)), ("w_gate", (S8, d, F)),
+                                    ("w_out", (S8, F, d))]):
+        q, s = _quantized(jax.random.normal(ks[i + 1], shape) * 0.05)
+        p[t], p[t + "_scale"] = q, s
+    for i, (t, shape) in enumerate([("w_in", (S4, d, F)), ("w_gate", (S4, d, F)),
+                                    ("w_out", (S4, F, d))]):
+        q4, s4 = _quantized4(jax.random.normal(ks[i + 3], shape) * 0.05)
+        p[t + "_q4"], p[t + "_q4_scale"] = q4, s4
+    a = apply_expert_stack_blocked(p, xe, cfg, use_pallas=False)
+    b = apply_expert_stack_blocked(p, xe, cfg, use_pallas=True)
+    assert a.shape == xe.shape
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
 
 
