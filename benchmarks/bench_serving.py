@@ -87,7 +87,8 @@ def _requests(cfg, n: int, rate: float, seed: int, slo: float) -> List[Request]:
 def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
                    prefetch_depth=0, realtime=True, quantized_slots=False,
                    tier=None, spec_mode="off", spec_k=4, ep_shards=1,
-                   replicate_hot=0, rebalance_interval=0.0):
+                   replicate_hot=0, rebalance_interval=0.0,
+                   faults=None, fence_timeout_s=None, streams=None):
     from repro.launch.serve import ep_setup
 
     ctx, sharded = ep_setup(ep_shards, replicate_hot)
@@ -98,6 +99,7 @@ def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
         prefetch_depth=prefetch_depth, quantized_slots=quantized_slots,
         tier=tier, spec_mode=spec_mode, spec_k=spec_k, ctx=ctx,
         sharded=sharded, rebalance_interval=rebalance_interval,
+        faults=faults, fence_timeout_s=fence_timeout_s,
     )
     # warm every jit shape outside the timed stream, then reset the clocks
     warm_rng = np.random.default_rng(99)
@@ -112,6 +114,9 @@ def serve_requests(cfg, params, hp, reqs, slots, lanes, eviction="lru",
     srv.telemetry = Telemetry()
     srv.run(reqs, realtime=realtime)
     out = srv.summary()
+    if streams is not None:
+        # rid -> generated tokens, for differential (chaos) comparisons
+        streams.update({r.rid: list(r.generated) for r in srv.completed})
     srv.close()
     return out
 
@@ -326,6 +331,52 @@ def shard_balance_probe(cfg, params, steps=24):
     return out
 
 
+def chaos_probe(cfg, params, hp, n_requests, slots, lanes, seed):
+    """Differential fault-tolerance probe: the IDENTICAL closed-loop stream
+    served by the async server fault-free, then again under seeded p=0.2
+    H2D upload faults. The supervision machinery (bounded retry/backoff;
+    on exhaustion, fence poisoning + slot rollback and waiter replanning;
+    K consecutive failures -> per-shard degraded sync fallback — see
+    core/offload.py) must make the faulted run COMPLETE THE FULL STREAM
+    with byte-identical token outputs: faults may only cost throughput,
+    never correctness. ``outputs_identical`` is the acceptance headline;
+    the retry/poison/fallback counters explain what the run survived, and
+    ``chaos_throughput_ratio`` prices it (closed-loop paired runs, same
+    shared-host noise caveats as stall_probe — read it as relative)."""
+    from repro.core.faults import FaultPlan
+
+    plan_text = "upload:fail,p=0.2"
+
+    def one(plan):
+        streams: Dict[int, List[int]] = {}
+        out = serve_requests(
+            cfg, params, hp, _requests(cfg, n_requests, 1e6, seed, None),
+            slots, lanes, prefetch_depth=2, realtime=False,
+            faults=plan, fence_timeout_s=5.0, streams=streams,
+        )
+        return out, streams
+
+    base, base_streams = one(None)
+    chaos, chaos_streams = one(FaultPlan.parse(plan_text, seed=seed + 1))
+    return {
+        "fault_plan": plan_text,
+        "outputs_identical": bool(base_streams == chaos_streams),
+        "completed_fault_free": base["completed"],
+        "completed_chaos": chaos["completed"],
+        "upload_retries": chaos["upload_retries"],
+        "upload_failures": chaos["upload_failures"],
+        "poisoned_fences": chaos["poisoned_fences"],
+        "sync_fallbacks": chaos["sync_fallbacks"],
+        "fence_timeouts": chaos["fence_timeouts"],
+        "degraded_shards": chaos["degraded_shards"],
+        "fault_free_tok_s": base["throughput_tok_s"],
+        "chaos_tok_s": chaos["throughput_tok_s"],
+        "chaos_throughput_ratio": (
+            chaos["throughput_tok_s"] / max(base["throughput_tok_s"], 1e-9)
+        ),
+    }
+
+
 def serve_prefill_fcfs(baseline_cls, cfg, params, reqs, slots) -> Dict[str, float]:
     """FCFS request-at-a-time prefill through a router-inline baseline."""
     from repro.serving.telemetry import Histogram
@@ -487,6 +538,12 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     # upload balance, fixed-home vs replicated + rebalanced (store +
     # pipeline level, so it runs regardless of device count)
     result["shard_load_balance"] = shard_balance_probe(cfg, params)
+    # the headline fault-tolerance delta: same stream fault-free vs under
+    # seeded p=0.2 upload faults — byte-identical outputs, priced in
+    # throughput (retry/poison/degrade machinery, see core/faults.py)
+    result["server_chaos"] = chaos_probe(
+        cfg, params, hp, n_requests, slots, lanes, seed
+    )
     return result
 
 

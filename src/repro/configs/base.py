@@ -60,6 +60,13 @@ class PrefetchConfig:
     enabled: bool = False
     depth: int = 2                    # max outstanding prefetch tickets
     staging_buffers: int = 2          # host staging slabs (2 = double-buffered)
+    # fault tolerance (see core/faults.py and ARCHITECTURE.md "Failure
+    # model"): a failed upload batch is retried with bounded exponential
+    # backoff; exhausted retries poison its fences, and `degrade_after`
+    # consecutive abandonments flip the shard to the synchronous path
+    max_retries: int = 3              # upload attempts = 1 + max_retries
+    backoff_s: float = 0.002          # base backoff (doubles per attempt)
+    degrade_after: int = 3            # consecutive failures -> degraded mode
 
 
 @dataclass(frozen=True)

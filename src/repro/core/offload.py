@@ -1191,6 +1191,45 @@ class ExpertStore:
                 moe_p[t + "_q4_scale"], gs_j, sl_j, jnp.asarray(s4)
             )
 
+    def rollback_upload(self, g: int, s: int, slot: int, e: int) -> bool:
+        """Undo plan-time residency publication for one (expert, slot)
+        whose upload was abandoned (caller holds `_lock`): the slot returns
+        to its tier's free list, so no translation built after this can
+        point at a slot whose bytes never landed. Handles primary and
+        replica copies and both residency tiers; a mapping that already
+        moved on (evict + reload raced the failure) is left alone — the
+        newer owner's upload governs that slot now. Returns True iff a
+        mapping was actually rolled back."""
+        sh = self.slot_shard(slot)
+        res = self.resident[(g, s)]
+        reps = self.replicas[(g, s)].get(e)
+        if reps is not None and reps.get(sh) == slot:
+            del reps[sh]
+            if not reps:
+                del self.replicas[(g, s)][e]
+        elif res.get(e) == slot:
+            del res[e]
+            if self.S4 and slot >= self.S8:
+                self.policy4[(g, s)][sh].forget(e)
+            else:
+                self.policy[(g, s)][sh].forget(e)
+            if reps:
+                # a live copy elsewhere keeps the expert resident: promote
+                # it to primary (mirrors plan_layer's victim handling)
+                m = min(reps)
+                res[e] = reps.pop(m)
+                if not reps:
+                    del self.replicas[(g, s)][e]
+                self.policy[(g, s)][m].admit(e, 0.0)
+        else:
+            return False        # re-planned since; nothing of ours to undo
+        if self.S4 and slot >= self.S8:
+            self.free4[(g, s)][sh].append(slot)
+        else:
+            self.free[(g, s)][sh].append(slot)
+        self._epoch += 1
+        return True
+
     def trans_row(self, l: int) -> np.ndarray:
         g, s = self.layer_to_gs(l)
         row = np.full((self.E,), -1, np.int32)
@@ -1257,15 +1296,26 @@ class ExpertStore:
         """
         t0 = time.perf_counter()
         pf = self._prefetcher
-        with self._lock:
-            trans, pending, needed = self.plan(
-                table, protect_fn=pf.protected_experts if pf is not None else None
-            )
-            for s, items in pending.items():
-                self.commit_loads(s, items)
-            fences = pf.events_for(needed) if pf is not None else []
-        for _, ev in fences:
-            ev.wait()
+        # fence poisoning makes this a loop: a waited fence whose upload was
+        # abandoned (ev.poisoned — see PrefetchPipeline._fail_rows) means the
+        # translation points at a rolled-back slot, so re-plan; the rollback
+        # already un-published the residency, so the next round loads the
+        # expert synchronously and sees no pending fence for it.
+        for _ in range(64):
+            with self._lock:
+                trans, pending, needed = self.plan(
+                    table,
+                    protect_fn=pf.protected_experts if pf is not None else None,
+                )
+                for s, items in pending.items():
+                    self.commit_loads(s, items)
+                fences = pf.events_for(needed) if pf is not None else []
+            poisoned = False
+            for _, ev in fences:
+                ev.wait()
+                poisoned |= bool(getattr(ev, "poisoned", False))
+            if not poisoned:
+                break
         self.stats.prepare_time += time.perf_counter() - t0
         return trans
 
@@ -1470,6 +1520,16 @@ class PrefetchStats:
     staging_waits: int = 0      # gathers that waited for a staging slab to drain
     warm_skipped: int = 0       # warming prefetches dropped (transfer backlog)
     stolen: int = 0             # jobs a fence found still queued and ran inline
+    # fault-tolerance accounting (see "supervised transfer threads" below)
+    upload_retries: int = 0     # failed upload attempts that were retried
+    upload_failures: int = 0    # upload batches abandoned (retries exhausted)
+    poisoned_fences: int = 0    # per-expert fences poisoned by abandonment
+    thread_crashes: int = 0     # transfer-loop exceptions outside a job guard
+    thread_restarts: int = 0    # supervised restarts (in-place or watchdog)
+    sync_fallbacks: int = 0     # uploads committed via the sync path (degraded
+                                # shards, dead-thread drains, inline producers)
+    job_errors: int = 0         # callable-job (K/V page-in) exceptions caught
+    degraded: int = 0           # shards currently in degraded (sync) mode
     # per-shard upload counts under expert-parallel sharded pools (one
     # transfer queue/thread per shard; `shards` is set by the pipeline so
     # the summary emits a row per shard — zeros included, since an idle
@@ -1484,6 +1544,11 @@ class PrefetchStats:
     def reset(self) -> None:
         self.submitted = self.uploads = self.staging_waits = 0
         self.warm_skipped = self.stolen = 0
+        self.upload_retries = self.upload_failures = self.poisoned_fences = 0
+        self.thread_crashes = self.thread_restarts = 0
+        self.sync_fallbacks = self.job_errors = 0
+        # `degraded` is a point-in-time shard count, not an event counter —
+        # a reset between bench phases must not forget a degraded shard
         self.stall_s = self.transfer_s = 0.0
         self.uploads_by_shard = {}
 
@@ -1497,6 +1562,14 @@ class PrefetchStats:
             "prefetch_staging_waits": float(self.staging_waits),
             "prefetch_warm_skipped": float(self.warm_skipped),
             "prefetch_stolen": float(self.stolen),
+            "prefetch_upload_retries": float(self.upload_retries),
+            "prefetch_upload_failures": float(self.upload_failures),
+            "prefetch_poisoned_fences": float(self.poisoned_fences),
+            "prefetch_thread_crashes": float(self.thread_crashes),
+            "prefetch_thread_restarts": float(self.thread_restarts),
+            "prefetch_sync_fallbacks": float(self.sync_fallbacks),
+            "prefetch_job_errors": float(self.job_errors),
+            "prefetch_degraded_shards": float(self.degraded),
         }
         if self.shards > 1:
             for sh in range(self.shards):
@@ -1551,26 +1624,46 @@ class PrefetchTicket:
         # queued per-shard transfer jobs [(shard, {sub: rows})] (stealable)
         self._job: Optional[List[Tuple[int, dict]]] = None
         self.released = False
+        # True once any of this ticket's fences was poisoned (its upload
+        # abandoned after exhausted retries). The ticket stays consumable —
+        # wait()'s replan already healed trans — but the flag lets the
+        # serving layer count fault-impacted ticks.
+        self.failed = False
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         """Make the ticket consumable: clear its ready fences AND re-plan
         any needed expert whose prefetch was dropped (slot contention with
-        other outstanding tickets) or evicted since planning — the
-        consuming ticket has priority, so the final residency matches what
-        the synchronous path would have loaded. Refreshes `trans` in place.
-        Returns False if `timeout` expired first."""
+        other outstanding tickets), evicted since planning, or rolled back
+        by a poisoned (abandoned) upload — the consuming ticket has
+        priority, so the final residency matches what the synchronous path
+        would have loaded. Refreshes `trans` in place.
+
+        Returns False if `timeout` expired first. CONTRACT: a False return
+        means `trans` may still reference experts that are not resident —
+        the caller must either call `wait()` again, or fall back to the
+        synchronous path (`store.prepare(...)`) and use ITS translation.
+        Never spin on wait(timeout) in a tight loop, and never forward with
+        a timed-out ticket's trans: the renormalized miss handling would
+        silently drop the unresident experts' mass."""
         return self._pipeline._refresh(self, timeout)
 
     def wait_experts(self, l: int, experts) -> None:
         """Partial fence: block only on uploads of `experts` at MoE layer
-        `l` — experts already resident (no pending upload) never block."""
+        `l` — experts already resident (no pending upload) never block.
+        A poisoned fence among them escalates to the full wait(): the
+        expert's slot was rolled back, so the partial fence alone no longer
+        guarantees a consumable translation."""
         g, s = self._pipeline.store.layer_to_gs(l)
         want = {int(e) for e in experts}
         t0 = time.perf_counter()
+        poisoned = False
         for (fg, fs, fe), ev in self._fences:
             if (fg, fs) == (g, s) and fe in want:
                 ev.wait()
+                poisoned |= bool(getattr(ev, "poisoned", False))
         self._pipeline.stats.stall_s += time.perf_counter() - t0
+        if poisoned:
+            self._pipeline._refresh(self)
 
     def release(self) -> None:
         """Drop eviction protection (call after the forward consumed the
@@ -1647,25 +1740,52 @@ class PrefetchPipeline:
         cfg,
         prefetch_depth: Optional[int] = None,
         staging_buffers: Optional[int] = None,
+        faults=None,
     ) -> Optional["PrefetchPipeline"]:
         """Resolve the prefetch knobs (explicit args > cfg.prefetch > off)
         and build a pipeline, or return None for the synchronous path —
         the single source of the precedence rule the engines and the
-        request server all share."""
+        request server all share. `faults` (a FaultPlan) and the retry /
+        degradation knobs ride cfg.prefetch."""
         depth = prefetch_depth if prefetch_depth is not None else (
             cfg.prefetch.depth if cfg.prefetch.enabled else 0
         )
         nbuf = (staging_buffers if staging_buffers is not None
                 else cfg.prefetch.staging_buffers)
-        return cls(store, depth, nbuf) if depth > 0 else None
+        if depth <= 0:
+            return None
+        pc = cfg.prefetch
+        return cls(
+            store, depth, nbuf, faults=faults,
+            max_retries=getattr(pc, "max_retries", 3),
+            backoff_s=getattr(pc, "backoff_s", 0.002),
+            degrade_after=getattr(pc, "degrade_after", 3),
+        )
 
-    def __init__(self, store: ExpertStore, depth: int = 2, staging_buffers: int = 2):
+    def __init__(
+        self,
+        store: ExpertStore,
+        depth: int = 2,
+        staging_buffers: int = 2,
+        faults=None,                    # Optional[FaultPlan]
+        max_retries: int = 3,           # upload attempts = 1 + max_retries
+        backoff_s: float = 0.002,       # base of the exponential backoff
+        degrade_after: int = 3,         # consecutive failures -> sync mode
+        max_thread_restarts: int = 3,   # in-place restarts before a shard
+                                        # thread is declared dead (watchdog
+                                        # revive() is the only way back)
+    ):
         assert store._prefetcher is None, "store already has a prefetch pipeline"
         self._acquire_switch_interval()
         self.store = store
         self.shards = store.shards
         self.depth = max(1, depth)
         self.n_staging = max(1, staging_buffers)
+        self.faults = faults
+        self.max_retries = max(0, max_retries)
+        self.backoff_s = backoff_s
+        self.degrade_after = max(1, degrade_after)
+        self.max_thread_restarts = max(0, max_thread_restarts)
         self.stats = PrefetchStats(shards=self.shards)
         self._lock = store._lock
         # three-class transfer queue PER SHARD: urgent consumer jobs (a
@@ -1700,9 +1820,23 @@ class PrefetchPipeline:
         self._buf_i = [0] * self.shards
         self._seq = 0
         self._closed = False
+        # supervision state (guarded by _jobs_cv like the queues):
+        #   degraded — the shard's uploads go through the synchronous
+        #     commit path (its thread may still be alive and draining);
+        #   dead     — the shard's thread exhausted its restarts and
+        #     exited: producers commit that shard's work inline;
+        #   current job / start time — what each thread is holding, so the
+        #     supervisor can poison a crashed job's fences and the
+        #     watchdog can spot a stalled one.
+        self._degraded = [False] * self.shards
+        self._dead = [False] * self.shards
+        self._fail_streak = [0] * self.shards
+        self._crash_count = [0] * self.shards
+        self._current_job: List[Optional[object]] = [None] * self.shards
+        self._job_started = [0.0] * self.shards
         self._threads = [
             threading.Thread(
-                target=self._transfer_loop, args=(m,),
+                target=self._transfer_main, args=(m,),
                 name=f"sida-prefetch-{m}", daemon=True,
             )
             for m in range(self.shards)
@@ -1825,13 +1959,27 @@ class PrefetchPipeline:
             # backpressure); a planned job is never dropped — its slots are
             # already assigned, so the upload must eventually happen
             ticket._job = [(sh, job) for sh, job in jobs.items()]
+            inline: List[Tuple[int, dict]] = []
             with self._jobs_cv:
                 for sh, job in jobs.items():
                     if protect:
-                        while len(self._jobs[sh][prio]) >= self.depth:
+                        # a dead shard's queue never drains: the wait must
+                        # break on _dead (set under this cv + notify_all)
+                        # or the producer deadlocks against a ghost
+                        while (
+                            len(self._jobs[sh][prio]) >= self.depth
+                            and not self._dead[sh] and not self._closed
+                        ):
                             self._jobs_cv.wait()
+                    if self._dead[sh]:
+                        inline.append((sh, job))
+                        continue
                     self._jobs[sh][prio].append(job)
                 self._jobs_cv.notify_all()
+            for sh, job in inline:
+                # no consumer thread: the producer pays for the upload
+                # itself via the sync path (degraded mode's whole contract)
+                self._commit_sync(sh, job)
         return ticket
 
     def submit_job(
@@ -1845,8 +1993,19 @@ class PrefetchPipeline:
         assert not self._closed, "pipeline is closed"
         job = _CallableJob(fn)
         with self._jobs_cv:
-            self._jobs[shard][priority].append(job)
-            self._jobs_cv.notify_all()
+            dead = self._dead[shard]
+            if not dead:
+                self._jobs[shard][priority].append(job)
+                self._jobs_cv.notify_all()
+        if dead:
+            # no consumer: run inline so the caller's done-fence still fires
+            try:
+                fn()
+            except Exception:
+                with self._jobs_cv:
+                    self.stats.job_errors += 1
+            finally:
+                job.done.set()
         return job.done
 
     def submit_loads(
@@ -1870,10 +2029,18 @@ class PrefetchPipeline:
                     (g, slot, e, ev)
                 )
         if jobs:
+            inline: List[Tuple[int, dict]] = []
             with self._jobs_cv:
                 for sh, job in jobs.items():
-                    self._jobs[sh][priority].append(job)
+                    if self._dead[sh]:
+                        inline.append((sh, job))
+                    else:
+                        self._jobs[sh][priority].append(job)
                 self._jobs_cv.notify_all()
+            for sh, job in inline:
+                # caller already holds the (reentrant) store lock; the sync
+                # commit nests under it, and the fences fire before return
+                self._commit_sync(sh, job)
 
     def _upload_done(
         self, g: int, s: int, slot: int, e: int, ev: threading.Event
@@ -1986,11 +2153,15 @@ class PrefetchPipeline:
                             ev for d in pend.values() for ev in d.values()
                         )
                 fences = self.events_for(ticket.needed)
+            poisoned = False
             for _, ev in fences:
                 if not ev.wait(_left()):
                     ok = False
                     break
-            if not ok or (progressed_all and not drain):
+                poisoned |= bool(getattr(ev, "poisoned", False))
+            # a poisoned fence means the expert was rolled back between the
+            # residency check and the wait — one more round replans it
+            if not ok or (progressed_all and not drain and not poisoned):
                 break
             done = all(ev.wait(_left()) for ev in drain)
             if not done:
@@ -2001,6 +2172,11 @@ class PrefetchPipeline:
         with self._lock:
             for l in ticket.needed:
                 ticket.trans[l] = store.trans_row(l)
+        if not ticket.failed and any(
+            getattr(ev, "poisoned", False) for _, ev in ticket._fences
+        ):
+            ticket.failed = True   # mark: an upload this ticket fenced on
+            # was abandoned (the replan above already healed trans)
         self.stats.stall_s += time.perf_counter() - t0
         return ok
 
@@ -2029,23 +2205,232 @@ class PrefetchPipeline:
             self._jobs_cv.notify_all()
             return job
 
+    def _transfer_main(self, shard: int) -> None:
+        """Supervised thread body: restart `_transfer_loop` after a crash
+        (an exception escaping the per-job guards — including an injected
+        `thread:crash`), poisoning the fences of whatever job the loop died
+        holding so its waiters replan instead of hanging. A shard that
+        crashes more than `max_thread_restarts` times is declared dead: its
+        queue drains synchronously here, producers commit its work inline
+        from then on, and only a watchdog `revive()` brings the async path
+        back."""
+        while True:
+            try:
+                self._transfer_loop(shard)
+                return                      # clean close() exit
+            except Exception:
+                job = self._current_job[shard]
+                self._current_job[shard] = None
+                with self._jobs_cv:
+                    self.stats.thread_crashes += 1
+                    self._crash_count[shard] += 1
+                    crashes = self._crash_count[shard]
+                    closed = self._closed
+                if job is not None:
+                    self._fail_job(shard, job)
+                if closed:
+                    return
+                if crashes > self.max_thread_restarts:
+                    with self._jobs_cv:
+                        self._dead[shard] = True
+                        self._set_degraded(shard, True)
+                        # wake producers parked in submit() backpressure —
+                        # they re-check _dead and commit inline
+                        self._jobs_cv.notify_all()
+                    self._drain_sync(shard)
+                    return
+                with self._jobs_cv:
+                    self.stats.thread_restarts += 1
+
     def _transfer_loop(self, shard: int) -> None:
         while True:
             job = self._next_job(shard)
             if job is None:
                 return
+            self._job_started[shard] = time.perf_counter()
+            self._current_job[shard] = job
+            if self.faults is not None:
+                self.faults.inject("thread")   # outside the per-job guards:
+                # the raise kills this loop; _transfer_main supervises
             t0 = time.perf_counter()
             if isinstance(job, _CallableJob):
                 try:
                     job.fn()
+                except Exception:
+                    # a failed page-in (or other callable) must not kill the
+                    # shard thread; its waiter sees `done` and re-checks the
+                    # state the callable was meant to establish
+                    with self._jobs_cv:
+                        self.stats.job_errors += 1
                 finally:
                     job.done.set()
             else:
-                for s, rows in job.items():
-                    self._upload(shard, s, rows)
+                self._run_upload_job(shard, job)
+            self._current_job[shard] = None
             dt = time.perf_counter() - t0
             with self._jobs_cv:  # shard threads share the stats object
                 self.stats.transfer_s += dt
+
+    def _run_upload_job(self, shard: int, job: Dict[int, List[tuple]]) -> None:
+        """Upload one expert job, sub-batch by sub-batch, retrying failed
+        attempts with bounded exponential backoff. Exhausted retries poison
+        the batch (see `_fail_rows`); a degraded shard skips the staged
+        path entirely and commits synchronously."""
+        if self._degraded[shard]:
+            self._commit_sync(shard, job)
+            return
+        for s, rows in job.items():
+            attempt = 0
+            while True:
+                try:
+                    self._upload(shard, s, rows)
+                    with self._jobs_cv:
+                        self._fail_streak[shard] = 0
+                    break
+                except Exception:
+                    attempt += 1
+                    if attempt > self.max_retries:
+                        self._fail_rows(shard, s, rows)
+                        break
+                    with self._jobs_cv:
+                        self.stats.upload_retries += 1
+                    # retries re-stage from the host masters, so a partial
+                    # commit from the failed attempt is simply overwritten
+                    time.sleep(self.backoff_s * (2.0 ** (attempt - 1)))
+
+    def _set_degraded(self, shard: int, value: bool) -> None:
+        """Flip one shard's degraded flag, keeping the stats count exact.
+        Caller holds `_jobs_cv`."""
+        if self._degraded[shard] != value:
+            self._degraded[shard] = value
+            self.stats.degraded += 1 if value else -1
+
+    def degraded_fraction(self) -> float:
+        """Fraction of shards in degraded (sync-fallback) mode — the
+        admission controller shrinks its shedding threshold by this, so
+        transfer faults surface as early rejections instead of SLO misses."""
+        return sum(self._degraded) / self.shards
+
+    def _fail_rows(self, shard: int, s: int, rows: List[tuple]) -> None:
+        """Abandon one upload batch after exhausted retries: roll every
+        planned slot back to the free list (the residency published at plan
+        time is withdrawn), retire the pending entries, then POISON the
+        fences — each event fires with `.poisoned = True`, so waiters
+        (`_refresh`, `prepare`, `wait_experts`) replan the experts instead
+        of blocking forever or consuming a slot whose bytes never landed.
+        `degrade_after` consecutive abandonments flip the shard to the
+        synchronous path."""
+        with self._lock:
+            for g, slot, e, ev in rows:
+                self.store.rollback_upload(g, s, slot, e)
+                self._upload_done(g, s, slot, e, ev)
+            self.stats.upload_failures += 1
+            self.stats.poisoned_fences += len(rows)
+        with self._jobs_cv:
+            self._fail_streak[shard] += 1
+            if self._fail_streak[shard] >= self.degrade_after:
+                self._set_degraded(shard, True)
+        for *_, ev in rows:
+            ev.poisoned = True       # before set(): waiters never see a
+            ev.set()                 # fired-but-unpoisoned abandoned fence
+
+    def _fail_job(self, shard: int, job) -> None:
+        """Poison a whole crashed job (rows may be partially uploaded —
+        `_fail_rows` rolls back only mappings still pointing at the planned
+        slot, and `_upload_done`'s identity check skips retired entries)."""
+        if isinstance(job, _CallableJob):
+            job.done.set()
+            return
+        for s, rows in job.items():
+            self._fail_rows(shard, s, rows)
+
+    def _commit_sync(self, shard: int, job: Dict[int, List[tuple]]) -> None:
+        """The degraded path: commit one job's uploads through the
+        synchronous `commit_loads` (host gather -> device write inline, no
+        staging ring, no injected upload faults) — byte-identical to what
+        the async path would have landed, just not overlapped."""
+        evs: List[threading.Event] = []
+        with self._lock:
+            for s, rows in job.items():
+                self.store.commit_loads(
+                    s, [(g, sl, e) for g, sl, e, _ in rows]
+                )
+                for g, sl, e, ev in rows:
+                    self._upload_done(g, s, sl, e, ev)
+                    evs.append(ev)
+            n = sum(len(r) for r in job.values())
+            self.stats.uploads += n
+            self.stats.uploads_by_shard[shard] = (
+                self.stats.uploads_by_shard.get(shard, 0) + n
+            )
+            self.stats.sync_fallbacks += n
+        for ev in evs:
+            ev.set()
+
+    def _drain_sync(self, shard: int) -> None:
+        """Drain `shard`'s queues on the calling thread via the synchronous
+        path — the dead-thread / close-time fallback that keeps the 'a
+        planned job is never dropped' invariant without a transfer thread."""
+        while True:
+            with self._jobs_cv:
+                q = next((q for q in self._jobs[shard] if q), None)
+                if q is None:
+                    return
+                job = q.popleft()
+                self._jobs_cv.notify_all()
+            if isinstance(job, _CallableJob):
+                try:
+                    job.fn()
+                except Exception:
+                    with self._jobs_cv:
+                        self.stats.job_errors += 1
+                finally:
+                    job.done.set()
+            else:
+                self._commit_sync(shard, job)
+
+    # -- watchdog (the server run loop calls this on an interval) -------
+    def watchdog(self, max_job_age_s: Optional[float] = None) -> Tuple[int, int]:
+        """Liveness + job-age monitor: revive dead shard threads (supervised
+        restart) and count jobs a live thread has held longer than
+        `max_job_age_s` (a stalled link — Python can't preempt the thread,
+        but the count surfaces in telemetry and the caller may degrade the
+        shard). Returns (revived, stalled)."""
+        revived = stalled = 0
+        now = time.perf_counter()
+        for m in range(self.shards):
+            if self._dead[m] and not self._closed:
+                revived += self.revive(m)
+            elif (
+                max_job_age_s is not None
+                and self._current_job[m] is not None
+                and now - self._job_started[m] > max_job_age_s
+            ):
+                stalled += 1
+        return revived, stalled
+
+    def revive(self, shard: int) -> int:
+        """Supervised restart of a dead shard thread: drain anything queued
+        meanwhile, spawn a fresh thread, and lift degraded mode (probation —
+        a still-faulty link just re-degrades after `degrade_after` more
+        failures). Returns 1 iff a thread was started."""
+        with self._jobs_cv:
+            if self._closed or not self._dead[shard]:
+                return 0
+            if self._threads[shard].is_alive():
+                return 0
+            self._dead[shard] = False
+            self._set_degraded(shard, False)
+            self._fail_streak[shard] = 0
+            self._crash_count[shard] = 0
+            t = threading.Thread(
+                target=self._transfer_main, args=(shard,),
+                name=f"sida-prefetch-{shard}", daemon=True,
+            )
+            self._threads[shard] = t
+            self.stats.thread_restarts += 1
+        t.start()
+        return 1
 
     def _stage(
         self,
@@ -2058,6 +2443,8 @@ class PrefetchPipeline:
         """Gather rows (g, e) of a host tensor [G, E, ...] straight into
         this buffer's persistent slab (grown on demand), so H2D always
         reads from a stable, reusable host region — the staging write."""
+        if self.faults is not None:
+            self.faults.inject("host_read")   # a failed host-master read
         n = len(gs)
         tail = arr.shape[2:]
         slab = buf.get(key)
@@ -2073,6 +2460,11 @@ class PrefetchPipeline:
         return view
 
     def _upload(self, shard: int, s: int, rows: List[tuple]) -> None:
+        if self.faults is not None:
+            # one schedulable operation per upload batch: `fail` raises
+            # (retried with backoff by _run_upload_job), `stall` sleeps
+            # (models a saturated or wedged H2D link)
+            self.faults.inject("upload")
         store = self.store
         i = self._buf_i[shard]
         self._buf_i[shard] = (i + 1) % self.n_staging
@@ -2176,7 +2568,14 @@ class PrefetchPipeline:
 
     # -- lifecycle ------------------------------------------------------
     def close(self) -> None:
-        """Drain queued uploads and join every per-shard transfer thread."""
+        """Drain queued uploads and join every per-shard transfer thread.
+
+        Idempotent, and safe after thread death: a crashed/dead shard's
+        leftover jobs are committed synchronously here (so every fence and
+        done-event the pipeline ever handed out fires before close
+        returns), leftover pending entries are retired, and the staging
+        rings are dropped — no poisoned-but-unreleased tickets, no leaked
+        slabs."""
         if self._closed:
             return
         with self._jobs_cv:
@@ -2184,6 +2583,20 @@ class PrefetchPipeline:
             self._jobs_cv.notify_all()
         for t in self._threads:
             t.join()
+        for m in range(self.shards):
+            self._drain_sync(m)   # no-op for shards whose thread drained
+        with self._lock:
+            # anything still pending after the drains belongs to a job a
+            # thread died holding mid-poison: fire the fences so no waiter
+            # outlives the pipeline
+            for pend in self._pending.values():
+                for slots_ev in pend.values():
+                    for ev in slots_ev.values():
+                        ev.poisoned = True
+                        ev.set()
+                pend.clear()
+        self._staging = [[] for _ in range(self.shards)]
+        self._staging_inflight = [[] for _ in range(self.shards)]
         self.store._prefetcher = None
         self._release_switch_interval()
 

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.base import TierConfig, get_config
 from repro.core.baselines import OnDemandServer, PrefetchAllServer, StandardServer
 from repro.core.engine import SiDAEngine
+from repro.core.faults import KNOWN_SITES, FaultPlan
 from repro.core.hash_fn import init_hash_fn
 from repro.core.offload import ShardedStoreConfig
 from repro.models.attention import ShardingCtx
@@ -157,6 +158,25 @@ def validate_serve_args(args) -> None:
             )
     elif args.max_seq:
         die("--max-seq needs the paged K/V cache: also pass --kv-pages")
+    if args.fault_plan:
+        if args.engine != "server":
+            die("--fault-plan applies to the request server: use "
+                "--engine server")
+        try:
+            plan = FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+        except ValueError as e:
+            die(f"--fault-plan: {e}")
+        for spec in plan.specs:
+            if spec.site not in KNOWN_SITES:
+                die(f"--fault-plan: site {spec.site!r} is not instrumented "
+                    f"(known sites: {', '.join(KNOWN_SITES)})")
+    if args.fence_timeout < 0 or args.shed_margin < 0:
+        die("--fence-timeout and --shed-margin must be >= 0")
+    if (args.fence_timeout or args.shed_margin) and args.engine != "server":
+        die("--fence-timeout/--shed-margin apply to the request server: "
+            "use --engine server")
+    if args.shed_margin and args.slo is None:
+        die("--shed-margin needs a deadline to protect: also pass --slo")
 
 
 def serve_bucket_limit(args) -> int:
@@ -176,7 +196,7 @@ def serve_bucket_limit(args) -> int:
 
 def run_request_server(cfg, params, args) -> None:
     from repro.core.residency import PagedKVConfig
-    from repro.serving import RequestServer, poisson_requests
+    from repro.serving import AdmissionController, RequestServer, poisson_requests
 
     hp = init_hash_fn(
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
@@ -192,6 +212,14 @@ def run_request_server(cfg, params, args) -> None:
             prefill_chunk=args.prefill_chunk, max_seq=args.max_seq,
         )
     ctx, sharded = ep_setup(args.ep_shards, args.replicate_hot)
+    faults = (
+        FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+        if args.fault_plan else None
+    )
+    shed = (
+        AdmissionController(margin=args.shed_margin)
+        if args.shed_margin else None
+    )
     srv = RequestServer(
         cfg, params, hp, slots_per_layer=args.slots,
         max_lanes=args.lanes, max_prefill_batch=args.prefill_batch,
@@ -208,6 +236,9 @@ def run_request_server(cfg, params, args) -> None:
         ctx=ctx, sharded=sharded,
         rebalance_interval=args.rebalance_interval,
         paged=paged,
+        faults=faults,
+        fence_timeout_s=args.fence_timeout or None,
+        shed=shed,
     )
     rng = np.random.default_rng(0)
     reqs = poisson_requests(
@@ -227,7 +258,9 @@ def run_request_server(cfg, params, args) -> None:
           f"replicate_hot={args.replicate_hot} "
           f"rebalance_interval={args.rebalance_interval} "
           f"kv_pages={args.kv_pages}x{args.page_size} "
-          f"prefill_chunk={args.prefill_chunk}")
+          f"prefill_chunk={args.prefill_chunk} "
+          f"fault_plan={args.fault_plan or 'none'} "
+          f"shed_margin={args.shed_margin}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
@@ -319,6 +352,23 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--slo", type=float, default=None, help="latency SLO (s)")
     ap.add_argument("--drop-expired", action="store_true")
+    ap.add_argument("--fault-plan", default="",
+                    help="seeded chaos schedule for the serving stack, e.g. "
+                         "'upload:fail,p=0.2;thread:crash@2' — see "
+                         "core/faults.py for the grammar. Exercises the "
+                         "supervision machinery (retry/backoff, fence "
+                         "poisoning, degraded sync fallback) deterministically")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="RNG seed for probabilistic (p=) fault specs")
+    ap.add_argument("--fence-timeout", type=float, default=0.0,
+                    help="bound (s) a serve tick waits on prefetch fences "
+                         "before falling back to a synchronous prepare "
+                         "(0 = wait indefinitely)")
+    ap.add_argument("--shed-margin", type=float, default=0.0,
+                    help="overload shedding: reject at admission when "
+                         "estimated queue wait exceeds this fraction of a "
+                         "request's deadline slack (0 = no shedding; "
+                         "requires --slo)")
     ap.add_argument("--no-realtime", action="store_true",
                     help="ignore arrival gaps (fast smoke runs)")
     args = ap.parse_args()

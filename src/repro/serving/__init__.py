@@ -4,6 +4,7 @@ batcher, request server, telemetry)."""
 from repro.serving.request import Request, RequestState, poisson_requests
 from repro.serving.scheduler import (
     DEFAULT_BUCKETS,
+    AdmissionController,
     LaneTable,
     Scheduler,
     bucket_len,
@@ -16,6 +17,7 @@ __all__ = [
     "RequestState",
     "poisson_requests",
     "DEFAULT_BUCKETS",
+    "AdmissionController",
     "LaneTable",
     "Scheduler",
     "bucket_len",

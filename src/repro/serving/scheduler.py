@@ -174,3 +174,76 @@ class Scheduler:
             r.state = RequestState.PREFILL
             self._aff_cache.pop(r.rid, None)
         return batch, bucket
+
+
+class AdmissionController:
+    """Overload shedding at the admission gate.
+
+    The estimate is classic back-of-queue wait: `queue depth × EMA of
+    observed per-request service time`. A request is shed (rejected with
+    reason `overloaded`) when that estimate exceeds `margin` of its
+    remaining slack — i.e. when, at the observed service rate, the request
+    would already have missed its deadline before reaching a lane. Shedding
+    at admission is the whole point: reject BEFORE burning prefill/decode
+    capacity on a guaranteed SLO miss, not after (`pop_expired` is the
+    too-late backstop).
+
+    Hysteresis: crossing the threshold latches the gate; it stays latched
+    until the estimate falls below `exit_frac` of a request's threshold, so
+    the admit/shed decision cannot chatter around the boundary while the
+    queue hovers at critical depth.
+
+    Degraded transfer shards (the prefetch pipeline's sync-fallback mode —
+    see core/offload.py) shrink the threshold by the degraded fraction:
+    when uploads have lost their overlap, true service times are about to
+    rise, so faults translate into earlier rejections instead of letting
+    admitted requests pile into SLO collapse.
+
+    Requests without an SLO fall back to `default_slo_s` slack; with
+    neither, they are never shed (there is no deadline to protect)."""
+
+    def __init__(
+        self,
+        margin: float = 0.8,          # shed when est. wait > margin × slack
+        exit_frac: float = 0.6,       # un-latch below exit_frac × threshold
+        ema_decay: float = 0.8,       # service-time EMA (new obs weight 1-d)
+        init_service_s: float = 0.0,  # prior before the first completion
+        default_slo_s: Optional[float] = None,
+        degraded_shrink: float = 0.5, # threshold ×= (1 - shrink × degraded)
+    ):
+        self.margin = margin
+        self.exit_frac = exit_frac
+        self.ema_decay = ema_decay
+        self.service_s = init_service_s
+        self.default_slo_s = default_slo_s
+        self.degraded_shrink = degraded_shrink
+        self.shedding = False         # the hysteresis latch
+
+    def observe(self, service_s: float) -> None:
+        """Feed one completed request's service time (prefill -> done)."""
+        if self.service_s <= 0.0:
+            self.service_s = service_s
+        else:
+            self.service_s = (
+                self.ema_decay * self.service_s
+                + (1.0 - self.ema_decay) * service_s
+            )
+
+    def est_wait_s(self, depth: int) -> float:
+        return depth * self.service_s
+
+    def should_shed(
+        self, depth: int, slack_s: Optional[float], degraded_frac: float = 0.0
+    ) -> bool:
+        """Decide one admission. `slack_s` is the request's remaining
+        deadline slack (None = no SLO). Updates the hysteresis latch."""
+        if slack_s is None:
+            slack_s = self.default_slo_s
+        if slack_s is None or self.service_s <= 0.0:
+            return False
+        thr = self.margin * max(slack_s, 0.0)
+        thr *= max(0.0, 1.0 - self.degraded_shrink * degraded_frac)
+        est = self.est_wait_s(depth)
+        shed = est > (self.exit_frac * thr if self.shedding else thr)
+        self.shedding = shed
+        return shed

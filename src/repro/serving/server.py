@@ -54,6 +54,7 @@ from repro.core.decode_engine import (
     select_accepted_state,
 )
 from repro.core.engine import SiDAEngine
+from repro.core.faults import FaultPlan
 from repro.core.hash_table import HashTable
 from repro.core.offload import ExpertStore, PrefetchPipeline, ShardedStoreConfig
 from repro.core.residency import KVPagePool, PagedKVConfig, ResidencyManager
@@ -66,7 +67,12 @@ from repro.models.transformer import (
     verify_step,
 )
 from repro.serving.request import Request, RequestState
-from repro.serving.scheduler import DEFAULT_BUCKETS, LaneTable, Scheduler
+from repro.serving.scheduler import (
+    DEFAULT_BUCKETS,
+    AdmissionController,
+    LaneTable,
+    Scheduler,
+)
 from repro.serving.telemetry import Telemetry
 
 
@@ -112,6 +118,11 @@ class RequestServer:
         sharded: Optional[ShardedStoreConfig] = None,
         rebalance_interval: float = 0.0,   # s between home re-placements; 0 = off
         paged: Optional[PagedKVConfig] = None,  # page-table K/V residency
+        faults: Optional[FaultPlan] = None,     # seeded chaos (core/faults.py)
+        fence_timeout_s: Optional[float] = None,  # per-tick ticket.wait bound
+        shed: Optional[AdmissionController] = None,  # overload admission gate
+        watchdog_interval_s: float = 0.25,  # thread-liveness check cadence
+        watchdog_max_job_age_s: Optional[float] = None,  # stalled-job alarm
     ):
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
@@ -137,8 +148,14 @@ class RequestServer:
             quantized_slots=quantized_slots, scale_granularity=scale_granularity,
             tier=tier, sharded=sharded, mesh=ctx.mesh,
         )
+        self.faults = faults
+        self.fence_timeout_s = fence_timeout_s
+        self.shed = shed
+        self.watchdog_interval_s = watchdog_interval_s
+        self.watchdog_max_job_age_s = watchdog_max_job_age_s
+        self._last_watchdog = 0.0
         self.prefetch: Optional[PrefetchPipeline] = PrefetchPipeline.maybe_create(
-            self.store, cfg, prefetch_depth, staging_buffers
+            self.store, cfg, prefetch_depth, staging_buffers, faults=faults
         )
         # prefetch_depth=0 keeps the engine from building a second pipeline
         # off cfg.prefetch when the server decided to run synchronously
@@ -389,6 +406,8 @@ class RequestServer:
         fire-and-forget warming prefetch (`protect=False` — a warmed expert
         may still be evicted before the request is scheduled; later tickets
         fence on any of its uploads still in flight)."""
+        if self.faults is not None:
+            self.faults.inject("hash")
         req.table = self.engine.build_table(req.rid, req.prompt[None, :])
         if self.prefetch is not None:
             self.prefetch.submit(req.table, protect=False)
@@ -411,6 +430,25 @@ class RequestServer:
             with self._lock:
                 self._long_queue.append(req)
             return
+        if self.shed is not None:
+            # overload shedding: estimated back-of-queue wait vs this
+            # request's remaining deadline slack. Degraded transfer shards
+            # shrink the threshold — uploads running synchronously mean
+            # observed service times are about to rise, so the gate closes
+            # early instead of admitting requests into an SLO collapse.
+            with self._lock:
+                depth = self.scheduler.pending() + len(self._long_queue)
+            degraded = (
+                self.prefetch.degraded_fraction()
+                if self.prefetch is not None
+                else 0.0
+            )
+            slack = req.slack(now) if req.slo_s is not None else None
+            if self.shed.should_shed(depth, slack, degraded):
+                self.telemetry.gauge("est_queue_wait_s").set(
+                    self.shed.est_wait_s(depth)
+                )
+                return self._reject(req, now, "overloaded")
         with self._lock:
             self.scheduler.enqueue(req)
 
@@ -507,6 +545,23 @@ class RequestServer:
             if r.finished():
                 self._finish(int(lanes[i]))
 
+    def _await_fences(self, ticket, prep: HashTable):
+        """Bounded wait on a prefetch ticket's ready fences. Returns the
+        translation to decode with. On timeout (`fence_timeout_s` elapsed —
+        the transfer threads are stalled, dead, or hopelessly backlogged)
+        the tick falls back to a synchronous `store.prepare` of the same
+        prediction: identical residency outcome, zero overlap, but the
+        serve loop never blocks past its configured bound behind a hung
+        fence. `fence_timeout_s=None` waits indefinitely (fences are still
+        poisoned — never abandoned — on transfer failure, so indefinite
+        means until retry/rollback resolves them, not forever)."""
+        with self.telemetry.timer("prefetch_fence_s"):
+            ok = ticket.wait(self.fence_timeout_s)
+        if ok:
+            return ticket.trans
+        self.telemetry.counter("prefetch_fence_timeouts").inc()
+        return self.store.prepare(prep)
+
     # ------------------------------------------------------------------
     # decode: one continuous-batch step
     # ------------------------------------------------------------------
@@ -594,21 +649,16 @@ class RequestServer:
             alpha_np = np.asarray(alpha)
         else:
             inputs, ids, alpha, states, ids_np, alpha_np = unrolled
+        spec_prep = HashTable(self._step, ids_np[:, active], alpha_np[:, active])
         if self.prefetch is not None:
             if ticket is None:
                 # one multi-token ticket: the union over all K draft
                 # positions of every active lane — a strict superset of
                 # each per-step ticket
-                ticket = self.prefetch.submit(HashTable(
-                    self._step, ids_np[:, active], alpha_np[:, active]
-                ))
-            with self.telemetry.timer("prefetch_fence_s"):
-                ticket.wait()
-            trans = ticket.trans
+                ticket = self.prefetch.submit(spec_prep)
+            trans = self._await_fences(ticket, spec_prep)
         else:
-            trans = self.store.prepare(HashTable(
-                self._step, ids_np[:, active], alpha_np[:, active]
-            ))
+            trans = self.store.prepare(spec_prep)
         slot_ids, w = self.store.translate_device(ids, alpha, trans)
         out_blk, n_acc, logits, self.cache, self.hstate = self._verify_masked(
             self.store.serve_params, self.cache, inputs,
@@ -714,9 +764,7 @@ class RequestServer:
         if self.prefetch is not None:
             if ticket is None:
                 ticket = self.prefetch.submit(prep)
-            with self.telemetry.timer("prefetch_fence_s"):
-                ticket.wait()
-            trans = ticket.trans
+            trans = self._await_fences(ticket, prep)
         else:
             trans = self.store.prepare(prep)
         full = HashTable(self._step, ids_np[:, :, None, :], alpha_np[:, :, None, :])
@@ -777,6 +825,11 @@ class RequestServer:
         self.telemetry.histogram("decode_tokens").observe(len(req.generated))
         if req.slo_s is not None and req.latency_s > req.slo_s:
             self.telemetry.counter("deadline_miss").inc()
+        if self.shed is not None and req.t_prefill >= 0:
+            # prefill-to-done is the service time the back-of-queue wait
+            # estimate multiplies by (queueing delay is what it predicts,
+            # so it must not be part of the sample)
+            self.shed.observe(now - req.t_prefill)
 
     # ------------------------------------------------------------------
     # chunked prefill: long prompts stream through the paged cache
@@ -822,9 +875,7 @@ class RequestServer:
         ticket = None
         if self.prefetch is not None:
             ticket = self.prefetch.submit(tbl)
-            with self.telemetry.timer("prefetch_fence_s"):
-                ticket.wait()
-            trans = ticket.trans
+            trans = self._await_fences(ticket, tbl)
         else:
             trans = self.store.prepare(tbl)
         slot_ids, w_t = self.store.translate(tbl, trans)
@@ -907,16 +958,34 @@ class RequestServer:
         self._t0 = time.perf_counter()
         stream = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
         hash_done = threading.Event()
+        hash_exc: List[BaseException] = []
 
         def hash_thread():
-            for req in stream:
-                if realtime:
-                    wait = req.arrival_s - (time.perf_counter() - self._t0)
-                    if wait > 0:
-                        time.sleep(wait)
-                self.build_request_table(req)
-                self.admit(req, time.perf_counter() - self._t0)
-            hash_done.set()
+            # Supervised: a per-request failure (a corrupt prompt, an
+            # injected `hash` fault) rejects THAT request and moves on; an
+            # unexpected escape is captured and re-raised on the main loop
+            # after join. Either way `hash_done` is GUARANTEED set — the
+            # main loop's exit test is `hash_done and queues empty`, so a
+            # silently dead hash thread would otherwise spin run() forever.
+            try:
+                for req in stream:
+                    if realtime:
+                        wait = req.arrival_s - (time.perf_counter() - self._t0)
+                        if wait > 0:
+                            time.sleep(wait)
+                    try:
+                        self.build_request_table(req)
+                    except Exception:
+                        self.telemetry.counter("hash_thread_errors").inc()
+                        self._reject(
+                            req, time.perf_counter() - self._t0, "hash_error"
+                        )
+                        continue
+                    self.admit(req, time.perf_counter() - self._t0)
+            except BaseException as e:  # noqa: BLE001 — re-raised after join
+                hash_exc.append(e)
+            finally:
+                hash_done.set()
 
         ht = threading.Thread(target=hash_thread)
         ht.start()
@@ -950,6 +1019,22 @@ class RequestServer:
                     depth = self.scheduler.pending() + len(self._long_queue)
                 self.telemetry.gauge("queue_depth").set(depth)
                 self.telemetry.gauge("active_lanes").set(len(self.lanes.active()))
+
+                if (
+                    self.prefetch is not None
+                    and self.watchdog_interval_s > 0
+                    and now - self._last_watchdog >= self.watchdog_interval_s
+                ):
+                    self._last_watchdog = now
+                    revived, stalled = self.prefetch.watchdog(
+                        self.watchdog_max_job_age_s
+                    )
+                    if revived:
+                        self.telemetry.counter("watchdog_revives").inc(revived)
+                    if stalled:
+                        self.telemetry.counter("prefetch_stalled_jobs").inc(
+                            stalled
+                        )
 
                 if (
                     self.rebalance_interval > 0
@@ -1020,6 +1105,10 @@ class RequestServer:
                     time.sleep(2e-4)
         finally:
             ht.join()
+        if hash_exc:
+            # an unexpected hash-thread death must fail the run loudly on
+            # the caller's thread, not leave a half-served stream behind
+            raise hash_exc[0]
         st = self.store.stats
         self.telemetry.counter("h2d_bytes").inc(st.bytes_h2d)
         self.telemetry.counter("expert_loads").inc(st.loads)
@@ -1033,6 +1122,11 @@ class RequestServer:
                 c.inc(v)
         if self.kv_pool is not None:
             for k, v in self.kv_pool.stats.summary().items():
+                c = self.telemetry.counter(k)
+                c.value = 0
+                c.inc(v)
+        if self.faults is not None:
+            for k, v in self.faults.summary().items():
                 c = self.telemetry.counter(k)
                 c.value = 0
                 c.inc(v)
@@ -1094,6 +1188,19 @@ class RequestServer:
             "upload_stall_s": stall,
             "upload_overlap_s": overlap,
             "async_prefetch": 1.0 if self.prefetch is not None else 0.0,
+            # fault tolerance: the supervision counters every chaos run
+            # (tests/test_faults.py, bench_serving server_chaos) asserts on
+            "rejected_overloaded": t.counter("requests_rejected_overloaded").value,
+            "rejected_hash_error": t.counter("requests_rejected_hash_error").value,
+            "upload_retries": t.counter("prefetch_upload_retries").value,
+            "upload_failures": t.counter("prefetch_upload_failures").value,
+            "poisoned_fences": t.counter("prefetch_poisoned_fences").value,
+            "thread_crashes": t.counter("prefetch_thread_crashes").value,
+            "thread_restarts": t.counter("prefetch_thread_restarts").value,
+            "sync_fallbacks": t.counter("prefetch_sync_fallbacks").value,
+            "fence_timeouts": t.counter("prefetch_fence_timeouts").value,
+            "watchdog_revives": t.counter("watchdog_revives").value,
+            "degraded_shards": t.counter("prefetch_degraded_shards").value,
         }
         if self.store.shards > 1:
             out["replicate_hot"] = float(self.store.sharded.replicate_hot)

@@ -10,18 +10,27 @@ from __future__ import annotations
 import contextlib
 import json
 import math
+import threading
 import time
 from typing import Dict, List, Optional
 
+# metrics are written from several threads at once (the hash-ahead thread
+# rejects/admits while the serve loop ticks and the transfer threads flush
+# stats); a float `+=` is read-modify-write, so unguarded concurrent incs
+# can drop counts. One shared lock is plenty — these are not hot-loop ops.
+_metrics_lock = threading.Lock()
+
 
 class Counter:
-    """Monotonic event count (requests completed, tokens generated, …)."""
+    """Monotonic event count (requests completed, tokens generated, …).
+    Thread-safe: admission runs on the hash thread, ticks on the main one."""
 
     def __init__(self) -> None:
         self.value: float = 0
 
     def inc(self, v: float = 1) -> None:
-        self.value += v
+        with _metrics_lock:
+            self.value += v
 
 
 class Gauge:
@@ -33,8 +42,9 @@ class Gauge:
         self.max: float = 0
 
     def set(self, v: float) -> None:
-        self.value = v
-        self.max = max(self.max, v)
+        with _metrics_lock:
+            self.value = v
+            self.max = max(self.max, v)
 
 
 class Histogram:
@@ -45,7 +55,8 @@ class Histogram:
         self.samples: List[float] = []
 
     def observe(self, v: float) -> None:
-        self.samples.append(float(v))
+        with _metrics_lock:
+            self.samples.append(float(v))
 
     @property
     def count(self) -> int:

@@ -22,6 +22,34 @@ from repro.models.attention import ShardingCtx
 from repro.models.transformer import init_params
 
 
+# Per-test hang ceiling. CI installs pytest-timeout and sets PYTEST_TIMEOUT
+# (a hung fence/join there kills the one test with a traceback instead of
+# eating the job's timeout-minutes). Locally the plugin may be absent, so
+# fall back to faulthandler: dump all thread stacks and hard-exit if a
+# single test exceeds REPRO_TEST_TIMEOUT_S (0 disables). The fault-injection
+# suite (tests/test_faults.py) is exactly where a supervision bug shows up
+# as a silent deadlock — a stack dump at timeout is the difference between
+# a diagnosable CI failure and a 30-minute mystery.
+_FALLBACK_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "600"))
+try:
+    import pytest_timeout  # noqa: F401  (plugin handles timeouts itself)
+
+    _HAVE_TIMEOUT_PLUGIN = True
+except ImportError:
+    _HAVE_TIMEOUT_PLUGIN = False
+
+if not _HAVE_TIMEOUT_PLUGIN and _FALLBACK_TIMEOUT_S > 0:
+    import faulthandler
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_protocol(item):
+        faulthandler.dump_traceback_later(_FALLBACK_TIMEOUT_S, exit=True)
+        try:
+            yield
+        finally:
+            faulthandler.cancel_dump_traceback_later()
+
+
 @pytest.fixture(scope="session")
 def ctx():
     return ShardingCtx()

@@ -1,0 +1,689 @@
+"""Fault tolerance: injection harness, supervised transfer threads, fence
+poisoning, degraded sync fallback, watchdog revival, and overload shedding.
+
+The load-bearing property throughout: faults may cost throughput, never
+correctness. Every recovery path (retry, poison+replan, degraded sync
+commit, dead-thread inline commit, fence-timeout sync fallback) must leave
+residency byte-identical to what the synchronous path would have loaded —
+the differential tests at the bottom assert exactly that on the full
+request server.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core.offload as offload
+from conftest import reduced_params
+from repro.core.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.core.hash_table import HashTable
+from repro.core.offload import EXPERT_TENSORS, ExpertStore, PrefetchPipeline
+from repro.serving import AdmissionController, Request
+
+
+def _store(slots, **kw):
+    cfg, params = reduced_params("switch-base-8")
+    return cfg, ExpertStore(cfg, params, slots_per_layer=slots, **kw)
+
+
+def _table(L, experts, idx=0):
+    n = len(experts)
+    ids = np.zeros((L, 1, n, 1), np.int32)
+    for j, e in enumerate(experts):
+        ids[:, 0, j, 0] = e
+    return HashTable(idx, ids, np.ones((L, 1, n, 1), np.float32))
+
+
+def _assert_resident_matches_host(store):
+    for l in range(store.L):
+        g, s = store.layer_to_gs(l)
+        moe_p = store.serve_params["blocks"][f"sub{s}"]["moe"]
+        for e, slot in store.resident[(g, s)].items():
+            for t in EXPERT_TENSORS:
+                np.testing.assert_array_equal(
+                    np.asarray(moe_p[t][g, slot]),
+                    store.host[f"sub{s}"][t][g, e],
+                    err_msg=f"layer {l} expert {e} tensor {t}",
+                )
+
+
+def _assert_slot_accounting(store):
+    """No slot may be leaked or double-booked: every hot/warm slot is
+    either on a free list or backing exactly one residency mapping."""
+    for (g, s), res in store.resident.items():
+        used = sorted(res.values())
+        assert len(used) == len(set(used)), f"({g},{s}): slot double-booked"
+        free = {x for m in range(store.shards) for x in store.free[(g, s)][m]}
+        if store.S4:
+            free |= {
+                x for m in range(store.shards) for x in store.free4[(g, s)][m]
+            }
+        assert not (free & set(used)), f"({g},{s}): slot both free and used"
+        assert len(free) + len(used) == store.S, (
+            f"({g},{s}): {len(free)} free + {len(used)} used != {store.S}"
+        )
+
+
+def _wait_for(pred, timeout=20.0, msg="condition"):
+    t0 = time.perf_counter()
+    while not pred():
+        if time.perf_counter() - t0 > timeout:
+            pytest.fail(f"timed out waiting for {msg}")
+        time.sleep(0.002)
+
+
+@pytest.fixture
+def slow_link(monkeypatch):
+    """Model a saturated H2D link: every staged put sleeps first."""
+
+    def patch(delay):
+        real = offload._staged_put
+
+        def slow(x):
+            time.sleep(delay)
+            return real(x)
+
+        monkeypatch.setattr(offload, "_staged_put", slow)
+
+    return patch
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: grammar + scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_parse_grammar():
+    s = FaultSpec.parse("upload:fail@3")
+    assert (s.site, s.kind, s.nth, s.times, s.p) == ("upload", "fail", 3, 1, 0.0)
+    s = FaultSpec.parse("upload:fail@3x2")
+    assert (s.nth, s.times) == (3, 2)
+    s = FaultSpec.parse("upload:stall=0.05,p=.1")
+    assert (s.kind, s.delay_s, s.p) == ("stall", 0.05, 0.1)
+    s = FaultSpec.parse(" thread:crash@2 ")
+    assert (s.site, s.kind, s.nth) == ("thread", "crash", 2)
+    plan = FaultPlan.parse("upload:fail@1;hash:fail,p=0.5", seed=3)
+    assert len(plan.specs) == 2 and plan.seed == 3
+
+
+@pytest.mark.parametrize("bad", [
+    "upload",                 # no kind
+    "upload:explode@1",       # unknown kind
+    "upload:fail@0",          # nth must be >= 1
+    "upload:fail@2x0",        # times must be >= 1
+    "upload:fail",            # neither @nth nor p=
+    "upload:stall@1",         # stall needs =delay_s
+    "upload:fail,p=1.5",      # p out of range
+    "upload:fail,q=0.5",      # unknown modifier
+])
+def test_fault_spec_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultSpec.parse(bad)
+
+
+def test_fault_plan_nth_window():
+    plan = FaultPlan.parse("upload:fail@3x2")
+    fired = []
+    for i in range(1, 7):
+        try:
+            plan.inject("upload")
+        except InjectedFault as e:
+            assert e.site == "upload" and e.n == i
+            fired.append(i)
+    assert fired == [3, 4]
+    assert plan.ops("upload") == 6 and plan.fired("upload") == 2
+
+
+def test_fault_plan_probabilistic_is_seed_deterministic():
+    def pattern(seed):
+        plan = FaultPlan.parse("upload:fail,p=0.3", seed=seed)
+        out = []
+        for _ in range(64):
+            try:
+                plan.inject("upload")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = pattern(7), pattern(7)
+    assert a == b, "same seed must give the identical schedule"
+    assert 0 < sum(a) < 64, "p=0.3 over 64 ops should fire sometimes"
+    assert pattern(8) != a, "a different seed should (a.s.) differ"
+
+
+def test_fault_plan_sites_are_independent():
+    """Ops at one site must not perturb another site's p-schedule: each
+    site draws from its own (seed, site)-keyed RNG."""
+    lone = FaultPlan.parse("upload:fail,p=0.3", seed=5)
+    mixed = FaultPlan.parse("upload:fail,p=0.3;hash:fail,p=0.9", seed=5)
+
+    def upload_pattern(plan, interleave):
+        out = []
+        for _ in range(32):
+            if interleave:
+                try:
+                    plan.inject("hash")
+                except InjectedFault:
+                    pass
+            try:
+                plan.inject("upload")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    assert upload_pattern(lone, False) == upload_pattern(mixed, True)
+
+
+def test_fault_plan_stall_sleeps_not_raises():
+    plan = FaultPlan.parse("upload:stall=0.05@1")
+    t0 = time.perf_counter()
+    plan.inject("upload")      # stall: sleeps, returns
+    assert time.perf_counter() - t0 >= 0.04
+    plan.inject("upload")      # past the window: no-op
+    assert plan.fired("upload") == 1
+
+
+def test_unmatched_site_is_free():
+    plan = FaultPlan.parse("upload:fail@1")
+    plan.inject("host_read")   # no spec for this site: never raises
+    assert plan.ops("host_read") == 1 and plan.fired("host_read") == 0
+
+
+# ---------------------------------------------------------------------------
+# supervised uploads: retry, poisoning, degradation, death, revival
+# ---------------------------------------------------------------------------
+
+
+def test_transient_upload_fault_is_retried():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=2, faults=FaultPlan.parse("upload:fail@1"),
+        max_retries=3, backoff_s=0.001,
+    )
+    try:
+        tk = pipe.submit(_table(store.L, [0, 1]))
+        # let the transfer thread own the job (wait() would steal it and
+        # commit inline, bypassing the faulted _upload path entirely)
+        _wait_for(lambda: pipe.stats.upload_retries >= 1, msg="a retry")
+        assert tk.wait(timeout=20)
+        assert not tk.failed
+        slot_ids, w = store.translate(_table(store.L, [0, 1]), tk.trans)
+        assert (w > 0).all()
+        _assert_resident_matches_host(store)
+        tk.release()
+    finally:
+        pipe.close()
+    assert pipe.stats.upload_retries >= 1
+    assert pipe.stats.upload_failures == 0
+    assert pipe.stats.poisoned_fences == 0
+
+
+def test_exhausted_retries_poison_rollback_and_replan():
+    """A persistently failing upload batch is abandoned: slots roll back to
+    the free list, fences fire poisoned, and the waiting ticket's replan
+    reloads the experts through the sync commit — the consumer still gets
+    a fully resident, byte-correct translation."""
+    cfg, store = _store(2)
+    plan = FaultPlan.parse("upload:fail@1x10")   # the staged path only
+    pipe = PrefetchPipeline(
+        store, depth=2, faults=plan, max_retries=2, backoff_s=0.001,
+        degrade_after=99,                        # isolate poisoning
+    )
+    try:
+        t = _table(store.L, [0, 1])
+        tk = pipe.submit(t)
+        _wait_for(lambda: pipe.stats.upload_failures >= 1, msg="abandonment")
+        assert tk.wait(timeout=20), "poisoned fences must not hang waiters"
+        assert tk.failed, "ticket must record that a fence was poisoned"
+        slot_ids, w = store.translate(t, tk.trans)
+        assert (w > 0).all(), "replan must heal the translation"
+        _assert_resident_matches_host(store)
+        _assert_slot_accounting(store)
+        tk.release()
+    finally:
+        pipe.close()
+    assert pipe.stats.poisoned_fences >= 1
+    _assert_slot_accounting(store)
+
+
+def test_consecutive_failures_degrade_shard_to_sync():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=4, faults=FaultPlan.parse("upload:fail,p=1.0"),
+        max_retries=0, backoff_s=0.0, degrade_after=1,
+    )
+    try:
+        tk0 = pipe.submit(_table(store.L, [0]))
+        _wait_for(lambda: pipe.degraded_fraction() == 1.0, msg="degradation")
+        assert tk0.wait(timeout=20)
+        tk0.release()
+        # degraded shard: uploads commit through the sync path, which the
+        # fault plan does not instrument — byte-identical, just inline
+        tk = pipe.submit(_table(store.L, [2, 3]))
+        # let the degraded thread take the job (wait() would steal it)
+        _wait_for(lambda: pipe.stats.sync_fallbacks > 0, msg="sync fallback")
+        assert tk.wait(timeout=20)
+        assert not tk.failed
+        _assert_resident_matches_host(store)
+        tk.release()
+        assert pipe.stats.sync_fallbacks > 0
+        assert pipe.stats.degraded == 1
+    finally:
+        pipe.close()
+
+
+def test_thread_crash_is_supervised_and_restarted():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=2, faults=FaultPlan.parse("thread:crash@1"),
+        max_thread_restarts=3,
+    )
+    try:
+        t = _table(store.L, [0, 1])
+        tk = pipe.submit(t)
+        _wait_for(lambda: pipe.stats.thread_crashes >= 1, msg="the crash")
+        # the crashed job's fences were poisoned; the waiter replans
+        assert tk.wait(timeout=20)
+        slot_ids, w = store.translate(t, tk.trans)
+        assert (w > 0).all()
+        tk.release()
+        _wait_for(lambda: pipe._threads[0].is_alive(), msg="restart")
+        assert pipe.stats.thread_restarts >= 1
+        assert not pipe._dead[0]
+        # the restarted thread serves later submits asynchronously
+        tk2 = pipe.submit(_table(store.L, [2, 3], idx=1))
+        assert tk2.wait(timeout=20)
+        _assert_resident_matches_host(store)
+        tk2.release()
+    finally:
+        pipe.close()
+
+
+def test_dead_thread_inline_commit_and_watchdog_revival():
+    """Crashes past max_thread_restarts declare the shard dead: producers
+    commit its uploads inline (no deadlock against a ghost thread), and the
+    watchdog's supervised restart brings the async path back."""
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=1, faults=FaultPlan.parse("thread:crash@1"),
+        max_thread_restarts=0,
+    )
+    try:
+        tk0 = pipe.submit(_table(store.L, [0]))
+        _wait_for(lambda: pipe._dead[0], msg="shard death")
+        assert tk0.wait(timeout=20)
+        tk0.release()
+        # dead shard: submit must neither block in backpressure nor hang a
+        # fence — the producer commits synchronously
+        tk = pipe.submit(_table(store.L, [2, 3], idx=1))
+        assert tk.wait(timeout=20)
+        _assert_resident_matches_host(store)
+        tk.release()
+        assert pipe.stats.sync_fallbacks > 0
+
+        revived, _ = pipe.watchdog()
+        assert revived == 1
+        assert not pipe._dead[0] and pipe.degraded_fraction() == 0.0
+        _wait_for(lambda: pipe._threads[0].is_alive(), msg="revived thread")
+        ups = pipe.stats.uploads
+        tk2 = pipe.submit(_table(store.L, [0, 1], idx=2))
+        _wait_for(lambda: pipe.stats.uploads > ups, msg="async upload")
+        assert tk2.wait(timeout=20)
+        tk2.release()
+        _assert_resident_matches_host(store)
+    finally:
+        pipe.close()
+
+
+def test_watchdog_flags_stalled_job():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=2, faults=FaultPlan.parse("upload:stall=0.4@1"),
+    )
+    try:
+        tk = pipe.submit(_table(store.L, [0, 1]))
+        _wait_for(lambda: pipe._current_job[0] is not None, msg="job pickup")
+        time.sleep(0.1)
+        stalled = 0
+        t0 = time.perf_counter()
+        while stalled == 0 and time.perf_counter() - t0 < 2.0:
+            _, stalled = pipe.watchdog(max_job_age_s=0.05)
+            time.sleep(0.01)
+        assert stalled >= 1, "watchdog should flag the stalled upload"
+        assert tk.wait(timeout=20)   # the stall ends; the upload lands
+        tk.release()
+    finally:
+        pipe.close()
+
+
+def test_host_read_fault_is_supervised_too():
+    """host_read faults fire inside _stage — same retry machinery."""
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=2, faults=FaultPlan.parse("host_read:fail@1"),
+        max_retries=3, backoff_s=0.001,
+    )
+    try:
+        tk = pipe.submit(_table(store.L, [0, 1]))
+        _wait_for(lambda: pipe.stats.upload_retries >= 1, msg="a retry")
+        assert tk.wait(timeout=20)
+        _assert_resident_matches_host(store)
+        tk.release()
+    finally:
+        pipe.close()
+    assert pipe.stats.upload_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# ticket.wait(timeout) contract + shutdown hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_ticket_wait_timeout_contract(slow_link):
+    """wait(timeout)->False leaves trans unconsumable by contract; the
+    caller falls back to store.prepare and gets a correct translation.
+    A later untimed wait() still converges."""
+    slow_link(0.3)
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(store, depth=2)
+    try:
+        t = _table(store.L, [0, 1])
+        tk = pipe.submit(t)
+        # the transfer thread must own the job, else wait() steals it and
+        # commits inline before the timeout can trigger
+        _wait_for(lambda: pipe._current_job[0] is not None, msg="job pickup")
+        assert tk.wait(timeout=0.01) is False
+        # fallback: the sync path blocks until the in-flight upload lands
+        # and returns a translation safe to forward with
+        trans = store.prepare(t)
+        slot_ids, w = store.translate(t, trans)
+        assert (w > 0).all()
+        _assert_resident_matches_host(store)
+        assert tk.wait(timeout=20)   # the ticket itself also recovers
+        tk.release()
+    finally:
+        pipe.close()
+
+
+def test_close_is_idempotent_with_inflight_uploads(slow_link):
+    slow_link(0.1)
+    cfg, store = _store(4)
+    pipe = PrefetchPipeline(store, depth=4, staging_buffers=2)
+    tickets = [
+        pipe.submit(_table(store.L, [2 * i % 4, (2 * i + 1) % 4], idx=i))
+        for i in range(3)
+    ]
+    pipe.close()
+    pipe.close()   # idempotent
+    for t in pipe._threads:
+        assert not t.is_alive()
+    # every fence the pipeline ever handed out fired (possibly poisoned)
+    for tk in tickets:
+        for _, ev in tk._fences:
+            assert ev.is_set()
+    assert all(not pend for pend in pipe._pending.values())
+    assert pipe._staging == [[] for _ in range(pipe.shards)]
+    _assert_slot_accounting(store)
+
+
+def test_close_after_thread_death_drains_and_fires_fences():
+    cfg, store = _store(2)
+    pipe = PrefetchPipeline(
+        store, depth=4, faults=FaultPlan.parse("thread:crash@1"),
+        max_thread_restarts=0,
+    )
+    tk0 = pipe.submit(_table(store.L, [0]))
+    _wait_for(lambda: pipe._dead[0], msg="shard death")
+    tk1 = pipe.submit(_table(store.L, [2, 3], idx=1))
+    pipe.close()
+    for tk in (tk0, tk1):
+        for _, ev in tk._fences:
+            assert ev.is_set()
+    assert all(not pend for pend in pipe._pending.values())
+    _assert_slot_accounting(store)
+
+
+# ---------------------------------------------------------------------------
+# admission controller units
+# ---------------------------------------------------------------------------
+
+
+def test_admission_controller_threshold_and_hysteresis():
+    a = AdmissionController(margin=0.8, exit_frac=0.6, init_service_s=0.1)
+    assert not a.should_shed(2, 1.0)     # est 0.2 <= thr 0.8
+    assert a.should_shed(10, 1.0)        # est 1.0 > 0.8: latch
+    assert a.shedding
+    assert a.should_shed(5, 1.0)         # est 0.5 > 0.48 (latched)
+    assert not a.should_shed(4, 1.0)     # est 0.4 <= 0.48: unlatch
+    assert not a.shedding
+
+
+def test_admission_controller_no_slo_and_default():
+    a = AdmissionController(init_service_s=0.1)
+    assert not a.should_shed(10 ** 6, None)   # nothing to protect
+    b = AdmissionController(init_service_s=0.1, default_slo_s=1.0)
+    assert b.should_shed(10 ** 6, None)
+    c = AdmissionController()                 # no prior, no observations
+    assert not c.should_shed(10 ** 6, 0.001)
+
+
+def test_admission_controller_degradation_shrinks_threshold():
+    a = AdmissionController(margin=0.8, init_service_s=0.1)
+    assert not a.should_shed(6, 1.0, degraded_frac=0.0)   # 0.6 <= 0.8
+    a.shedding = False
+    assert a.should_shed(6, 1.0, degraded_frac=1.0)       # thr -> 0.4
+
+
+def test_admission_controller_ema():
+    a = AdmissionController(ema_decay=0.5)
+    a.observe(1.0)
+    assert a.service_s == 1.0          # first sample seeds the EMA
+    a.observe(0.0)
+    assert a.service_s == 0.5
+
+
+# ---------------------------------------------------------------------------
+# request server: hash-thread supervision, fence timeout, chaos, shedding
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_moe():
+    import dataclasses
+
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.core.hash_fn import init_hash_fn
+    from repro.models.transformer import init_params, n_moe_layers
+
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=2,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    return cfg, params, hp
+
+
+def _requests(cfg, n, seed=0, max_new=3, slo=None):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, (int(p),)).astype(np.int32),
+            max_new_tokens=max_new, arrival_s=0.0, slo_s=slo,
+        )
+        for i, p in enumerate(rng.integers(4, 9, size=n))
+    ]
+
+
+def _serve(cfg, params, hp, reqs, lanes=2, slots=None, **kw):
+    from repro.serving import RequestServer
+
+    srv = RequestServer(
+        cfg, params, hp,
+        slots_per_layer=slots or cfg.moe.num_experts,
+        max_lanes=lanes, max_prefill_batch=lanes, buckets=(8, 16),
+        cache_len=32, **kw,
+    )
+    srv.run(reqs, realtime=False)
+    return srv
+
+
+def test_server_hash_fault_rejects_request_and_continues(tiny_moe):
+    cfg, params, hp = tiny_moe
+    reqs = _requests(cfg, 4, seed=0)
+    srv = _serve(
+        cfg, params, hp, reqs,
+        faults=FaultPlan.parse("hash:fail@2"),
+    )
+    try:
+        assert len(srv.completed) == 3
+        assert len(srv.rejected) == 1
+        assert srv.rejected[0].reject_reason == "hash_error"
+        assert srv.telemetry.counter("hash_thread_errors").value == 1
+        assert srv.summary()["rejected_hash_error"] == 1.0
+    finally:
+        srv.close()
+
+
+def test_server_hash_thread_escape_reraises_not_spins(tiny_moe):
+    """An exception escaping the per-request guard must terminate run()
+    with that exception on the caller's thread — the pre-fix behavior was
+    an unset hash_done event spinning the serve loop forever."""
+    from repro.serving import RequestServer
+
+    cfg, params, hp = tiny_moe
+    srv = RequestServer(
+        cfg, params, hp, slots_per_layer=cfg.moe.num_experts,
+        max_lanes=1, max_prefill_batch=1, buckets=(8, 16), cache_len=32,
+    )
+
+    def boom(req, now):
+        raise RuntimeError("admission blew up")
+
+    srv.admit = boom
+    try:
+        with pytest.raises(RuntimeError, match="admission blew up"):
+            srv.run(_requests(cfg, 2, seed=1), realtime=False)
+    finally:
+        srv.close()
+
+
+def test_server_chaos_upload_faults_byte_identical(tiny_moe):
+    """The acceptance differential: seeded p=0.2 upload faults with
+    retry/poison/degrade supervision — the async server completes the full
+    stream with token streams byte-identical to the fault-free run."""
+    cfg, params, hp = tiny_moe
+    n = 6
+    # slots < E: every tick churns uploads through the faulty link, not
+    # just the warm-up — the supervision machinery is continuously hot
+    ref_srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=2), slots=2,
+        prefetch_depth=2,
+    )
+    ref = {r.rid: list(r.generated) for r in ref_srv.completed}
+    ref_srv.close()
+    assert len(ref) == n
+
+    plan = FaultPlan.parse("upload:fail,p=0.2", seed=11)
+    srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=2), slots=2,
+        prefetch_depth=2, faults=plan, fence_timeout_s=10.0,
+    )
+    try:
+        got = {r.rid: list(r.generated) for r in srv.completed}
+        assert got == ref, "faults must never change tokens, only timing"
+        assert plan.fired("upload") >= 1, "chaos run saw no faults (vacuous)"
+        s = srv.summary()
+        assert s["upload_retries"] + s["upload_failures"] >= 1
+        # no waiter may block past its configured fence timeout
+        fence = srv.telemetry.histogram("prefetch_fence_s")
+        assert not fence.samples or max(fence.samples) < 10.0
+    finally:
+        srv.close()
+
+
+def test_server_fence_timeout_falls_back_to_sync(tiny_moe, slow_link):
+    """satellite: a timed-out ticket never forwards its stale trans — the
+    tick re-prepares synchronously and the outputs stay byte-identical."""
+    cfg, params, hp = tiny_moe
+    n = 6
+    # slots < E keeps decode ticks planning fresh uploads (this stream
+    # churns ~8 expert loads through 2 slots), so their fence waits
+    # actually race the slowed link instead of all-hitting
+    ref_srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=2), slots=2,
+        prefetch_depth=2,
+    )
+    ref = {r.rid: list(r.generated) for r in ref_srv.completed}
+    ref_srv.close()
+    assert len(ref) == n
+
+    slow_link(0.05)
+    srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=2), slots=2,
+        prefetch_depth=2, fence_timeout_s=0.005,
+    )
+    try:
+        got = {r.rid: list(r.generated) for r in srv.completed}
+        assert got == ref
+        assert srv.telemetry.counter("prefetch_fence_timeouts").value >= 1
+    finally:
+        srv.close()
+
+
+def test_server_overload_sheds_before_deadline_misses(tiny_moe):
+    """Sustained overload (a pessimistic service-time prior makes every
+    queued request a predicted SLO miss) must surface as `overloaded`
+    rejections at admission — and no ADMITTED request may miss its
+    deadline."""
+    cfg, params, hp = tiny_moe
+    n = 8
+    shed = AdmissionController(margin=0.8, init_service_s=1000.0)
+    srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=4, slo=300.0), lanes=1,
+        shed=shed,
+    )
+    try:
+        s = srv.summary()
+        assert s["rejected_overloaded"] >= 1, "overload never shed"
+        assert s["deadline_miss"] == 0, "an admitted request missed its SLO"
+        assert len(srv.completed) + len(srv.rejected) == n
+        for r in srv.rejected:
+            assert r.reject_reason == "overloaded"
+    finally:
+        srv.close()
+
+
+def test_server_survives_transfer_thread_crashes(tiny_moe):
+    """End-to-end: transfer threads that crash mid-stream are restarted by
+    their supervisor, the crashed jobs' fences poison + replan, and the
+    stream still completes byte-identically."""
+    cfg, params, hp = tiny_moe
+    n = 4
+    ref_srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=5), prefetch_depth=2,
+    )
+    ref = {r.rid: list(r.generated) for r in ref_srv.completed}
+    ref_srv.close()
+
+    srv = _serve(
+        cfg, params, hp, _requests(cfg, n, seed=5), prefetch_depth=2,
+        faults=FaultPlan.parse("thread:crash@1x2"),
+        watchdog_interval_s=0.01,
+    )
+    try:
+        got = {r.rid: list(r.generated) for r in srv.completed}
+        assert got == ref
+        assert srv.telemetry.counter("prefetch_thread_crashes").value >= 1
+    finally:
+        srv.close()
