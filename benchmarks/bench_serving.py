@@ -54,7 +54,9 @@ Poisson arrivals through the continuous-batching RequestServer vs
 Emits JSON (stdout + experiments/bench/serving.json) with p50/p95/p99
 latency, TTFT, sustained throughput, expert-cache hit rate, and
 upload-stall time per engine, plus an ``async_prefetch`` block comparing
-sync vs async stall directly.
+sync vs async stall directly, and a ``server_multitenant`` block (two-tenant
+WFQ isolation: a light tenant's SLO attainment solo vs under a heavy
+tenant's flood — see multitenant_probe).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--requests 16 --rate 8]
 """
@@ -70,7 +72,13 @@ import numpy as np
 
 from benchmarks.common import Row, get_system
 from repro.core.baselines import OnDemandServer, PrefetchAllServer
-from repro.serving import RequestServer, Telemetry, poisson_requests
+from repro.serving import (
+    RequestServer,
+    ServingConfig,
+    Telemetry,
+    TenantConfig,
+    poisson_requests,
+)
 from repro.serving.request import Request
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
@@ -377,6 +385,92 @@ def chaos_probe(cfg, params, hp, n_requests, slots, lanes, seed):
     }
 
 
+def multitenant_probe(cfg, params, hp, n_requests, slots, lanes, seed,
+                      slo=20.0):
+    """Two-tenant skewed-load isolation probe (the WFQ acceptance bar):
+    a LIGHT tenant's realtime Poisson stream with an SLO, served
+
+      * solo — the attainment ceiling this machine can give it;
+      * alongside a HEAVY tenant's 3x closed-loop flood, WFQ engaged
+        (equal weights): deficit round robin must keep the light tenant's
+        SLO attainment >= 0.9 of the solo run — the heavy tenant's offered
+        load buys it nothing beyond its weight share;
+      * same combined stream WITHOUT tenant separation (the pre-tenant
+        single-queue scheduler): the unprotected contrast, where the
+        flood's earlier deadlines starve the light stream at the EDF gate.
+
+    ``attainment_ratio`` (wfq / solo) is the headline; >= 0.9 is the bar."""
+
+    def light_stream():
+        rng = np.random.default_rng(seed)
+        return poisson_requests(
+            rng, n_requests, rate_rps=4.0, vocab_size=cfg.vocab_size,
+            prompt_len_range=(4, 24), max_new_range=(2, 8), slo_s=slo,
+            tenant="light",
+        )
+
+    def heavy_stream():
+        rng = np.random.default_rng(seed + 1)
+        return poisson_requests(
+            rng, 3 * n_requests, rate_rps=1e6, vocab_size=cfg.vocab_size,
+            prompt_len_range=(4, 24), max_new_range=(2, 8), slo_s=slo,
+            tenant="heavy", rid_base=10_000,
+        )
+
+    def run(reqs, tenants):
+        config = ServingConfig.from_kwargs(
+            slots_per_layer=slots, max_lanes=lanes, max_prefill_batch=lanes,
+            buckets=(8, 16, 32), cache_len=48, eviction="lru",
+            tenants=tenants,
+        )
+        srv = RequestServer(cfg, params, hp, config)
+        warm = poisson_requests(
+            np.random.default_rng(99), 2 * lanes, rate_rps=1e6,
+            vocab_size=cfg.vocab_size, prompt_len_range=(4, 24),
+            max_new_range=(2, 8),
+        )
+        srv.run(warm, realtime=False)
+        srv.store.stats.reset()
+        srv.telemetry = Telemetry()
+        srv.run(reqs, realtime=True)
+        arrived = sum(1 for r in reqs if r.tenant == "light")
+        ok = sum(
+            1 for r in srv.completed
+            if r.tenant == "light" and r.latency_s <= (r.slo_s or np.inf)
+        )
+        light_done = sum(1 for r in srv.completed if r.tenant == "light")
+        summary = srv.tenant_summary()
+        srv.close()
+        return ok / max(arrived, 1), light_done, summary
+
+    light = TenantConfig("light", weight=1.0)
+    heavy = TenantConfig("heavy", weight=1.0)
+    solo_att, _, _ = run(light_stream(), (light,))
+    combined = sorted(
+        light_stream() + heavy_stream(), key=lambda r: r.arrival_s
+    )
+    wfq_att, wfq_done, summary = run(combined, (light, heavy))
+    combined = sorted(
+        light_stream() + heavy_stream(), key=lambda r: r.arrival_s
+    )
+    flat_att, flat_done, _ = run(combined, ())
+    return {
+        "light_requests": n_requests,
+        "heavy_requests": 3 * n_requests,
+        "slo_s": slo,
+        "light_solo_attainment": solo_att,
+        "light_wfq_attainment": wfq_att,
+        "light_unprotected_attainment": flat_att,
+        "attainment_ratio": wfq_att / max(solo_att, 1e-9),
+        "light_completed_wfq": wfq_done,
+        "light_completed_unprotected": flat_done,
+        "heavy_completed_wfq": summary["heavy"]["completed"],
+        "light_p95_latency_s": summary["light"]["p95_latency_s"],
+        "heavy_p95_latency_s": summary["heavy"]["p95_latency_s"],
+        "light_pinned_share": summary["light"]["pinned_share"],
+    }
+
+
 def serve_prefill_fcfs(baseline_cls, cfg, params, reqs, slots) -> Dict[str, float]:
     """FCFS request-at-a-time prefill through a router-inline baseline."""
     from repro.serving.telemetry import Histogram
@@ -543,6 +637,12 @@ def bench(E=8, n_requests=12, rate=6.0, slots=2, lanes=4, slo=20.0, seed=0):
     # throughput (retry/poison/degrade machinery, see core/faults.py)
     result["server_chaos"] = chaos_probe(
         cfg, params, hp, n_requests, slots, lanes, seed
+    )
+    # the headline multi-tenant delta: a light tenant's SLO attainment
+    # solo vs under a heavy tenant's 3x flood, WFQ vs the unprotected
+    # single-queue path (attainment_ratio >= 0.9 is the acceptance bar)
+    result["server_multitenant"] = multitenant_probe(
+        cfg, params, hp, n_requests, slots, lanes, seed, slo=slo
     )
     return result
 

@@ -383,6 +383,7 @@ class TransferStats:
     rebalance_moves: int = 0       # primaries migrated by rebalance_homes
     promotions: int = 0            # warm (int4) -> hot (int8) tier moves
     demotions: int = 0             # hot (int8) -> warm (int4) tier moves
+    pin_quota_refusals: int = 0    # tenant pins refused at the quota cap
 
     def reset(self):
         self.bytes_h2d = self.loads = self.evictions = self.hits = 0
@@ -390,6 +391,7 @@ class TransferStats:
         self.prepare_time = 0.0
         self.replica_loads = self.rebalance_moves = 0
         self.promotions = self.demotions = 0
+        self.pin_quota_refusals = 0
 
 
 class ExpertStore:
@@ -674,6 +676,14 @@ class ExpertStore:
                 self.pinned[(g, s)] = set()
                 self.replicas[(g, s)] = {}
                 self.alpha_ema[(g, s)] = np.zeros((self.E,), np.float64)
+        # multi-tenant pin attribution: which tenant owns each tenant-scoped
+        # pin (per (g, s): expert -> tenant), and each tenant's quota as a
+        # fraction of the per-layer slot count. Legacy tenant-less pins stay
+        # unattributed and uncapped, so single-tenant behavior is unchanged.
+        self.pin_owner: Dict[Tuple[int, int], Dict[int, str]] = {
+            k: {} for k in self.pinned
+        }
+        self.pin_quota: Dict[str, float] = {}
         # decayed α mass dispatched per home shard (the load half of
         # shard_load_score; the other half is measured upload traffic)
         self._shard_alpha = np.zeros((self.shards,), np.float64)
@@ -799,16 +809,85 @@ class ExpertStore:
         )
 
     # ------------------------------------------------------------------
-    def pin_experts(self, l: int, experts) -> None:
+    def set_pin_quota(self, tenant: str, frac: float) -> None:
+        """Cap `tenant`'s pinned-slot share: at most `floor(frac x S)` of
+        each layer's S device slots may be pinned under this tenant's name
+        (the multi-tenant front door registers `TenantConfig.pin_quota`
+        here at server construction)."""
+        if not (0.0 < frac <= 1.0):
+            raise ValueError(f"pin quota for {tenant!r} must be in (0, 1]")
+        self.pin_quota[tenant] = float(frac)
+
+    def pin_cap(self, tenant: str) -> int:
+        """Per-layer pinned-slot cap for `tenant` (S slots when no quota)."""
+        return int(self.pin_quota.get(tenant, 1.0) * self.S)
+
+    def pinned_count(self, l: int, tenant: str) -> int:
+        g, s = self.layer_to_gs(l)
+        return sum(1 for t in self.pin_owner[(g, s)].values() if t == tenant)
+
+    def pinned_share(self, tenant: str) -> float:
+        """Largest fraction of any layer's slot pool held pinned by
+        `tenant` — the quantity the quota provably bounds."""
+        if self.S <= 0:
+            return 0.0
+        worst = 0
+        for owners in self.pin_owner.values():
+            worst = max(worst, sum(1 for t in owners.values() if t == tenant))
+        return worst / self.S
+
+    def pin_experts(self, l: int, experts, tenant: Optional[str] = None) -> Set[int]:
         """Mark experts at MoE layer `l` as never-evictable (hot experts a
         deployment wants permanently resident). Pinned experts still load
-        through the normal prepare path; they just cannot be victims."""
-        g, s = self.layer_to_gs(l)
-        self.pinned[(g, s)].update(int(e) for e in experts)
+        through the normal prepare path; they just cannot be victims.
 
-    def unpin_experts(self, l: int, experts) -> None:
+        With `tenant` set, the pin is attributed and counted against the
+        tenant's `set_pin_quota` cap: pins beyond `floor(quota x S)` per
+        layer are REFUSED (skipped, tallied in `stats.pin_quota_refusals`)
+        so no tenant can monopolize the slot pools every other tenant's hit
+        rate depends on. Returns the experts actually pinned by this call
+        (legacy tenant-less pins are unattributed, uncapped, and behave
+        exactly as before)."""
         g, s = self.layer_to_gs(l)
-        self.pinned[(g, s)].difference_update(int(e) for e in experts)
+        with self._lock:
+            pool = self.pinned[(g, s)]
+            if tenant is None:
+                new = {int(e) for e in experts}
+                pool.update(new)
+                return new
+            owners = self.pin_owner[(g, s)]
+            cap = self.pin_cap(tenant)
+            held = sum(1 for t in owners.values() if t == tenant)
+            granted: Set[int] = set()
+            for e in sorted(int(x) for x in experts):
+                if owners.get(e) == tenant:
+                    granted.add(e)      # idempotent re-pin, no new charge
+                    continue
+                if e in pool:
+                    # pinned by someone else (or unattributed): not a new
+                    # pin, not this tenant's to hold — refuse attribution
+                    self.stats.pin_quota_refusals += 1
+                    continue
+                if held >= cap:
+                    self.stats.pin_quota_refusals += 1
+                    continue
+                pool.add(e)
+                owners[e] = tenant
+                held += 1
+                granted.add(e)
+            return granted
+
+    def unpin_experts(self, l: int, experts, tenant: Optional[str] = None) -> None:
+        """Release pins. With `tenant` set, only that tenant's own pins are
+        released (a tenant cannot unpin another tenant's experts)."""
+        g, s = self.layer_to_gs(l)
+        with self._lock:
+            owners = self.pin_owner[(g, s)]
+            for e in (int(x) for x in experts):
+                if tenant is not None and owners.get(e) != tenant:
+                    continue
+                self.pinned[(g, s)].discard(e)
+                owners.pop(e, None)
 
     def plan_layer(
         self,

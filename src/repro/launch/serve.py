@@ -26,11 +26,15 @@ import numpy as np
 from repro.configs.base import TierConfig, get_config
 from repro.core.baselines import OnDemandServer, PrefetchAllServer, StandardServer
 from repro.core.engine import SiDAEngine
-from repro.core.faults import KNOWN_SITES, FaultPlan
 from repro.core.hash_fn import init_hash_fn
 from repro.core.offload import ShardedStoreConfig
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import init_params, n_moe_layers
+from repro.serving.config import (
+    ServingConfig,
+    ServingConfigError,
+    add_serving_args,
+)
 
 
 def ep_setup(ep_shards: int, replicate_hot: int = 0):
@@ -86,166 +90,71 @@ def serve_tier(args) -> TierConfig | None:
     )
 
 
-def validate_serve_args(args) -> None:
+def validate_serve_args(args) -> "ServingConfig":
     """Fail fast on incoherent flag combinations, with actionable errors —
-    the alternative is a mid-run assert deep inside the server/pool."""
+    the alternative is a mid-run assert deep inside the server/pool.
+
+    All cross-field CONFIG rules live in `ServingConfig.from_args/validate`
+    (serving/config.py) — this wrapper adds only the launcher-level checks
+    (which flags require `--engine server`) and converts the structured
+    `ServingConfigError` into the CLI's SystemExit."""
 
     def die(msg: str) -> None:
         raise SystemExit(f"serve: invalid flags: {msg}")
 
-    if args.int4_slots:
-        if not args.quantized_slots:
-            die("--int4-slots extends the quantized slot pool: also pass "
-                "--quantized-slots (hot tier stays int8)")
-        if args.replicate_hot:
-            die("--int4-slots and --replicate-hot are mutually exclusive "
-                "(replicas assume a single uniform slot pool)")
-        if not (0.0 < args.tier_split <= 1.0):
-            die(f"--tier-split {args.tier_split} must be in (0, 1]: the "
-                "fraction of the slot byte budget held as int8 hot slots")
-        if args.quant_group <= 0:
-            die("--quant-group must be >= 1 (int4 scale group size along "
-                "the contraction axis)")
-    if args.kv_pages < 0 or args.page_size <= 0 or args.prefill_chunk < 0:
-        die("--kv-pages/--prefill-chunk must be >= 0 and --page-size >= 1")
-    if args.replicate_hot < 0 or args.rebalance_interval < 0:
-        die("--replicate-hot and --rebalance-interval must be >= 0")
-    if (args.replicate_hot or args.rebalance_interval) and args.ep_shards <= 1:
-        die("--replicate-hot/--rebalance-interval need --ep-shards > 1 "
-            "(replication and placement act across expert-parallel shards)")
-    if args.rebalance_interval and args.engine != "server":
-        die("--rebalance-interval applies to the request server: "
-            "use --engine server")
-    if args.prefill_chunk and not args.kv_pages:
-        die("--prefill-chunk needs the paged K/V cache: also pass --kv-pages")
-    if args.kv_pages:
-        if args.engine != "server":
-            die("--kv-pages applies to the request server: use --engine server")
-        resident = args.kv_pages * args.page_size
-        seq_len = args.max_seq or resident
-        if args.max_seq and args.max_seq < resident:
-            die(
-                f"--max-seq {args.max_seq} is below the resident pool "
-                f"({args.kv_pages} x {args.page_size} = {resident}); drop "
-                "--max-seq or shrink the pool"
-            )
-        if args.seq > serve_bucket_limit(args) and not args.prefill_chunk:
-            die(
-                f"--seq {args.seq} exceeds the largest prefill bucket "
-                f"({serve_bucket_limit(args)}): such prompts would be "
-                "rejected at admission — pass --prefill-chunk to stream "
-                "them through the paged cache, or raise --kv-pages"
-            )
-        if args.seq + args.new_tokens > seq_len:
-            die(
-                f"--seq {args.seq} + --new-tokens {args.new_tokens} exceeds "
-                f"the addressable range {seq_len}: such requests would be "
-                "rejected at admission — raise --max-seq (spilled pages "
-                "live on host, so it may exceed the resident pool)"
-            )
-        need = -(-serve_bucket_limit(args) // args.page_size)
-        if args.kv_pages < need:
-            die(
-                f"--kv-pages {args.kv_pages} cannot seed one full prefill "
-                f"bucket ({serve_bucket_limit(args)} tokens = {need} pages "
-                f"of {args.page_size}); raise --kv-pages to >= {need}"
-            )
-        if args.spec_mode == "draft" and args.spec_k > resident:
-            die(
-                f"--spec-k {args.spec_k} exceeds the resident K/V pool "
-                f"({resident} positions); a verify block must fit in "
-                "device pages"
-            )
-    elif args.max_seq:
-        die("--max-seq needs the paged K/V cache: also pass --kv-pages")
-    if args.fault_plan:
-        if args.engine != "server":
-            die("--fault-plan applies to the request server: use "
-                "--engine server")
-        try:
-            plan = FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
-        except ValueError as e:
-            die(f"--fault-plan: {e}")
-        for spec in plan.specs:
-            if spec.site not in KNOWN_SITES:
-                die(f"--fault-plan: site {spec.site!r} is not instrumented "
-                    f"(known sites: {', '.join(KNOWN_SITES)})")
-    if args.fence_timeout < 0 or args.shed_margin < 0:
-        die("--fence-timeout and --shed-margin must be >= 0")
-    if (args.fence_timeout or args.shed_margin) and args.engine != "server":
-        die("--fence-timeout/--shed-margin apply to the request server: "
-            "use --engine server")
-    if args.shed_margin and args.slo is None:
-        die("--shed-margin needs a deadline to protect: also pass --slo")
+    if args.engine != "server":
+        server_only = {
+            "--rebalance-interval": args.rebalance_interval,
+            "--kv-pages": args.kv_pages,
+            "--max-seq": args.max_seq,
+            "--prefill-chunk": args.prefill_chunk,
+            "--fault-plan": args.fault_plan,
+            "--fence-timeout": args.fence_timeout,
+            "--shed-margin": args.shed_margin,
+            "--tenants": args.tenants,
+        }
+        for flag, val in server_only.items():
+            if val:
+                die(f"{flag} applies to the request server: "
+                    "use --engine server")
+    if args.shed_margin and args.slo is None and not args.tenants:
+        die("--shed-margin needs a deadline to protect: also pass --slo "
+            "(or tenant default SLOs)")
+    try:
+        return ServingConfig.from_args(args)
+    except ServingConfigError as e:
+        die(str(e))
 
 
-def serve_bucket_limit(args) -> int:
-    """Largest prefill bucket the launcher will build. Paged serving caps
-    buckets at what the resident pool can seed in one shot (and, with
-    chunked prefill on, at the default 128 — longer prompts stream)."""
-    limit = args.seq
-    if args.kv_pages:
-        limit = min(limit, args.kv_pages * args.page_size)
-        if args.prefill_chunk:
-            limit = min(limit, 128)
-    bucket = 8
-    while bucket < limit:
-        bucket *= 2
-    return bucket
+def run_request_server(cfg, params, args, serving_cfg=None) -> None:
+    from repro.serving import RequestServer, poisson_requests
 
-
-def run_request_server(cfg, params, args) -> None:
-    from repro.core.residency import PagedKVConfig
-    from repro.serving import AdmissionController, RequestServer, poisson_requests
-
+    if serving_cfg is None:
+        serving_cfg = validate_serve_args(args)
     hp = init_hash_fn(
         jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
         cfg.moe.num_experts, d_h=64, draft=args.spec_mode == "draft",
     )
-    buckets = [8]
-    while buckets[-1] < serve_bucket_limit(args):
-        buckets.append(2 * buckets[-1])
-    paged = None
-    if args.kv_pages:
-        paged = PagedKVConfig(
-            page_size=args.page_size, kv_pages=args.kv_pages,
-            prefill_chunk=args.prefill_chunk, max_seq=args.max_seq,
-        )
-    ctx, sharded = ep_setup(args.ep_shards, args.replicate_hot)
-    faults = (
-        FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
-        if args.fault_plan else None
-    )
-    shed = (
-        AdmissionController(margin=args.shed_margin)
-        if args.shed_margin else None
-    )
-    srv = RequestServer(
-        cfg, params, hp, slots_per_layer=args.slots,
-        max_lanes=args.lanes, max_prefill_batch=args.prefill_batch,
-        buckets=tuple(buckets), eviction=args.eviction,
-        drop_expired=args.drop_expired,
-        prefetch_depth=args.prefetch_depth,
-        staging_buffers=args.staging_buffers,
-        host_quant=args.host_quant,
-        quantized_slots=args.quantized_slots,
-        scale_granularity=args.scale_granularity,
-        tier=serve_tier(args),
-        spec_mode=args.spec_mode,
-        spec_k=args.spec_k,
-        ctx=ctx, sharded=sharded,
-        rebalance_interval=args.rebalance_interval,
-        paged=paged,
-        faults=faults,
-        fence_timeout_s=args.fence_timeout or None,
-        shed=shed,
-    )
+    ctx, _ = ep_setup(args.ep_shards, args.replicate_hot)
+    srv = RequestServer(cfg, params, hp, serving_cfg, ctx=ctx)
     rng = np.random.default_rng(0)
-    reqs = poisson_requests(
-        rng, args.requests, rate_rps=args.rate, vocab_size=cfg.vocab_size,
-        prompt_len_range=(4, args.seq), max_new_range=(2, args.new_tokens),
-        slo_s=args.slo,
-    )
+    if serving_cfg.multitenant:
+        # one independent Poisson stream per tenant, all at --rate; rid
+        # ranges are disjoint so logs stay unambiguous
+        reqs = []
+        for i, t in enumerate(serving_cfg.tenants):
+            reqs.extend(poisson_requests(
+                rng, args.requests, rate_rps=args.rate,
+                vocab_size=cfg.vocab_size, prompt_len_range=(4, args.seq),
+                max_new_range=(2, args.new_tokens),
+                slo_s=args.slo, tenant=t.name, rid_base=i * args.requests,
+            ))
+    else:
+        reqs = poisson_requests(
+            rng, args.requests, rate_rps=args.rate, vocab_size=cfg.vocab_size,
+            prompt_len_range=(4, args.seq), max_new_range=(2, args.new_tokens),
+            slo_s=args.slo,
+        )
     srv.run(reqs, realtime=not args.no_realtime)
     print(f"engine=server slots={args.slots} lanes={args.lanes} "
           f"eviction={args.eviction} rate={args.rate}rps "
@@ -260,119 +169,57 @@ def run_request_server(cfg, params, args) -> None:
           f"kv_pages={args.kv_pages}x{args.page_size} "
           f"prefill_chunk={args.prefill_chunk} "
           f"fault_plan={args.fault_plan or 'none'} "
-          f"shed_margin={args.shed_margin}")
+          f"shed_margin={args.shed_margin} "
+          f"tenants={args.tenants or 'none'}")
     for k, v in srv.summary().items():
         print(f"  {k:20s} {v:.4f}")
+    for name, block in srv.tenant_summary().items():
+        print(f"  tenant {name}:")
+        for k, v in block.items():
+            print(f"    {k:20s} {v:.4f}")
     print(srv.telemetry.to_json())
     srv.close()
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI: launcher/workload flags declared here, every serving
+    knob registered from `SERVE_FLAGS` (serving/config.py) — one table
+    drives argparse, `ServingConfig.from_args`, and the README flag table
+    (tools/gen_flags.py), so the three cannot drift."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="switch-base-8")
+    ap.add_argument("--arch", default="switch-base-8",
+                    help="architecture config name (configs/)")
     ap.add_argument("--engine", default="sida",
                     choices=["sida", "standard", "ondemand", "prefetchall",
-                             "server"])
-    ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--batches", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=32)
-    ap.add_argument("--full", action="store_true", help="full-size config")
-    ap.add_argument("--eviction", default="fifo",
-                    choices=["fifo", "lru", "alpha"])
-    ap.add_argument("--prefetch-depth", type=int, default=0,
-                    help="async prefetch lookahead (0 = synchronous uploads)")
-    ap.add_argument("--staging-buffers", type=int, default=2,
-                    help="host staging slabs for the transfer thread")
-    ap.add_argument("--host-quant", default="none", choices=["none", "int8"],
-                    help="host expert tier format (int8 halves H2D bytes; "
-                         "dequantised at slot write unless --quantized-slots)")
-    ap.add_argument("--quantized-slots", action="store_true",
-                    help="int8 device-resident slots + fused-dequant expert "
-                         "FFN (2-4x resident experts per slot byte; implies "
-                         "--host-quant int8)")
-    ap.add_argument("--scale-granularity", default="channel",
-                    choices=["channel", "tensor"],
-                    help="int8 scale granularity per expert tensor")
-    ap.add_argument("--int4-slots", action="store_true",
-                    help="hierarchical residency tiers: keep the hot tier "
-                         "int8 and add a warm tier of nibble-packed int4 "
-                         "slots with per-group scales (~2x experts per "
-                         "byte); requires --quantized-slots")
-    ap.add_argument("--tier-split", type=float, default=0.5,
-                    help="fraction of the slot byte budget held as int8 hot "
-                         "slots; the remainder becomes int4 warm slots "
-                         "(1.0 = all-hot, degenerate to --quantized-slots)")
-    ap.add_argument("--quant-group", type=int, default=64,
-                    help="int4 scale group size along the contraction axis "
-                         "(smaller = tighter error, more scale-plane bytes)")
-    ap.add_argument("--spec-mode", default="off", choices=["off", "draft"],
-                    help="speculative decode: 'draft' unrolls the hash "
-                         "predictor's tied-embedding next-token head and "
-                         "verifies k tokens per step (request-server mode)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="draft tokens proposed per verify step; the union "
-                         "of all k positions' predicted experts ships as "
-                         "one superset prefetch ticket")
-    ap.add_argument("--ep-shards", type=int, default=1,
-                    help="expert-parallel serving shards: partition the "
-                         "slot pools (and prefetch transfer queues) over a "
-                         "1-D 'model' mesh of this many devices; the expert "
-                         "FFN runs inside shard_map (fused dequant when "
-                         "--quantized-slots). 1 = single-device serving")
-    ap.add_argument("--replicate-hot", type=int, default=0,
-                    help="extra copies an α-mass-hot expert may hold on "
-                         "other shards (free slots only; translation "
-                         "round-robins tokens over the copies). Requires "
-                         "--ep-shards > 1; 0 = fixed single-copy placement")
-    ap.add_argument("--rebalance-interval", type=float, default=0.0,
-                    help="seconds between online home-shard re-placements "
-                         "driven by the decayed α-mass EMA (request-server "
-                         "mode; requires --ep-shards > 1; 0 = off)")
-    # request-server mode
-    ap.add_argument("--kv-pages", type=int, default=0,
-                    help="paged K/V cache: device page budget shared by all "
-                         "lanes (0 = ring cache). Spilled pages live on "
-                         "host and page back in over the prefetch queues")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="K/V page size in token positions")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="chunked prefill: stream prompts longer than the "
-                         "largest bucket through the paged cache in chunks "
-                         "of this many tokens, interleaved with decode "
-                         "ticks (0 = off; requires --kv-pages)")
-    ap.add_argument("--max-seq", type=int, default=0,
-                    help="addressable sequence length (page-table width); "
-                         "0 = kv-pages * page-size (everything resident). "
-                         "May exceed the resident pool: the excess spills")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--rate", type=float, default=4.0, help="arrivals/sec")
-    ap.add_argument("--lanes", type=int, default=4)
-    ap.add_argument("--prefill-batch", type=int, default=4)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--slo", type=float, default=None, help="latency SLO (s)")
-    ap.add_argument("--drop-expired", action="store_true")
-    ap.add_argument("--fault-plan", default="",
-                    help="seeded chaos schedule for the serving stack, e.g. "
-                         "'upload:fail,p=0.2;thread:crash@2' — see "
-                         "core/faults.py for the grammar. Exercises the "
-                         "supervision machinery (retry/backoff, fence "
-                         "poisoning, degraded sync fallback) deterministically")
-    ap.add_argument("--fault-seed", type=int, default=0,
-                    help="RNG seed for probabilistic (p=) fault specs")
-    ap.add_argument("--fence-timeout", type=float, default=0.0,
-                    help="bound (s) a serve tick waits on prefetch fences "
-                         "before falling back to a synchronous prepare "
-                         "(0 = wait indefinitely)")
-    ap.add_argument("--shed-margin", type=float, default=0.0,
-                    help="overload shedding: reject at admission when "
-                         "estimated queue wait exceeds this fraction of a "
-                         "request's deadline slack (0 = no shedding; "
-                         "requires --slo)")
+                             "server"],
+                    help="batch engines (sida | standard | ondemand | "
+                         "prefetchall) or the continuous-batching request "
+                         "server")
+    ap.add_argument("--batches", type=int, default=8,
+                    help="batch-mode workload: number of batches")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch-mode workload: sequences per batch")
+    ap.add_argument("--seq", type=int, default=32,
+                    help="workload sequence / max prompt length")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: reduced() laptop size)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="(server) Poisson-arrival requests (per tenant)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="(server) arrival rate, requests/sec")
+    ap.add_argument("--new-tokens", type=int, default=8,
+                    help="(server) max decode budget per request")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="(server) latency SLO in seconds (EDF deadline)")
     ap.add_argument("--no-realtime", action="store_true",
-                    help="ignore arrival gaps (fast smoke runs)")
-    args = ap.parse_args()
-    validate_serve_args(args)
+                    help="(server) ignore arrival gaps (fast smoke runs)")
+    add_serving_args(ap)
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
+    serving_cfg = validate_serve_args(args)
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -381,7 +228,7 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
 
     if args.engine == "server":
-        run_request_server(cfg, params, args)
+        run_request_server(cfg, params, args, serving_cfg)
         return
 
     rng = np.random.default_rng(0)

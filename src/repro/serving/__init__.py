@@ -1,26 +1,65 @@
 """Request-level serving: continuous batching + SLA-aware scheduling over
 the SiDA hash-ahead pipeline (request lifecycle, admission queue, lane
-batcher, request server, telemetry)."""
+batcher, request server, telemetry), behind one consolidated config object
+(`ServingConfig`) and a multi-tenant front door (`TenantConfig`, WFQ
+scheduling, per-tenant shedding/quotas/telemetry).
+
+This module IS the public serving API: everything in `__all__` is covered
+by the snapshot check in tools/check_api.py, so additions and removals are
+deliberate (update the snapshot with `python tools/check_api.py --update`).
+"""
+from repro.serving.config import (
+    BatchingConfig,
+    FaultToleranceConfig,
+    ParallelServeConfig,
+    PrefetchServeConfig,
+    QuantServeConfig,
+    ServingConfig,
+    ServingConfigError,
+    SpecServeConfig,
+    TenantConfig,
+    add_serving_args,
+    parse_tenants,
+)
 from repro.serving.request import Request, RequestState, poisson_requests
 from repro.serving.scheduler import (
     DEFAULT_BUCKETS,
     AdmissionController,
     LaneTable,
     Scheduler,
+    TenantAdmission,
+    WFQScheduler,
     bucket_len,
 )
 from repro.serving.server import RequestServer
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
+    # request lifecycle
     "Request",
     "RequestState",
     "poisson_requests",
+    # scheduling
     "DEFAULT_BUCKETS",
     "AdmissionController",
     "LaneTable",
     "Scheduler",
+    "TenantAdmission",
+    "WFQScheduler",
     "bucket_len",
+    # configuration
+    "BatchingConfig",
+    "FaultToleranceConfig",
+    "ParallelServeConfig",
+    "PrefetchServeConfig",
+    "QuantServeConfig",
+    "ServingConfig",
+    "ServingConfigError",
+    "SpecServeConfig",
+    "TenantConfig",
+    "add_serving_args",
+    "parse_tenants",
+    # server + telemetry
     "RequestServer",
     "Telemetry",
 ]

@@ -35,6 +35,9 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0             # offset from stream start
     slo_s: Optional[float] = None      # latency SLO; deadline = arrival + slo
+    tenant: str = "default"            # multi-tenant front door: owner id,
+    #                                    stamped at admission (WFQ queue,
+    #                                    token budget, telemetry partition)
 
     state: RequestState = RequestState.QUEUED
     generated: List[int] = field(default_factory=list)
@@ -97,6 +100,8 @@ def poisson_requests(
     prompt_len_range=(8, 32),
     max_new_range=(4, 16),
     slo_s: Optional[float] = None,
+    tenant: str = "default",
+    rid_base: int = 0,
 ) -> List[Request]:
     """Synthetic open-loop arrival stream: exponential inter-arrival gaps
     (Poisson process at `rate_rps`), uniform prompt lengths and decode
@@ -110,6 +115,9 @@ def poisson_requests(
         m = int(rng.integers(max_new_range[0], max_new_range[1] + 1))
         prompt = rng.integers(0, vocab_size, (p,)).astype(np.int32)
         reqs.append(
-            Request(rid=i, prompt=prompt, max_new_tokens=m, arrival_s=t, slo_s=slo_s)
+            Request(
+                rid=rid_base + i, prompt=prompt, max_new_tokens=m,
+                arrival_s=t, slo_s=slo_s, tenant=tenant,
+            )
         )
     return reqs

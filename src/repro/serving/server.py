@@ -40,13 +40,13 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, TierConfig
+from repro.configs.base import ModelConfig
 from repro.core.decode_engine import (
     draft_unroll_fn,
     hash_fn_step,
@@ -54,10 +54,9 @@ from repro.core.decode_engine import (
     select_accepted_state,
 )
 from repro.core.engine import SiDAEngine
-from repro.core.faults import FaultPlan
 from repro.core.hash_table import HashTable
-from repro.core.offload import ExpertStore, PrefetchPipeline, ShardedStoreConfig
-from repro.core.residency import KVPagePool, PagedKVConfig, ResidencyManager
+from repro.core.offload import ExpertStore, PrefetchPipeline
+from repro.core.residency import KVPagePool, ResidencyManager
 from repro.models.attention import ShardingCtx
 from repro.models.transformer import (
     decode_step,
@@ -66,12 +65,13 @@ from repro.models.transformer import (
     prefill_chunk_step,
     verify_step,
 )
+from repro.serving.config import ServingConfig
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import (
-    DEFAULT_BUCKETS,
-    AdmissionController,
     LaneTable,
     Scheduler,
+    TenantAdmission,
+    WFQScheduler,
 )
 from repro.serving.telemetry import Telemetry
 
@@ -95,35 +95,58 @@ class RequestServer:
         cfg: ModelConfig,
         params: dict,
         hash_params: dict,
-        slots_per_layer: int,
-        max_lanes: int = 4,
-        max_prefill_batch: int = 4,
-        buckets: Sequence[int] = DEFAULT_BUCKETS,
-        cache_len: int = 0,
-        serve_top_k: Optional[int] = None,
-        ctx: ShardingCtx = ShardingCtx(),
-        host_quant: str = "none",
-        eviction: str = "lru",
-        drop_expired: bool = False,
-        keep_prefill_logits: bool = False,
-        keep_decode_logits: bool = False,
-        telemetry: Optional[Telemetry] = None,
-        prefetch_depth: Optional[int] = None,
-        staging_buffers: Optional[int] = None,
-        quantized_slots: Optional[bool] = None,
-        scale_granularity: Optional[str] = None,
-        tier: Optional[TierConfig] = None,
-        spec_mode: Optional[str] = None,   # "off" | "draft"; None => cfg.spec
-        spec_k: Optional[int] = None,      # draft window; None => cfg.spec.k
-        sharded: Optional[ShardedStoreConfig] = None,
-        rebalance_interval: float = 0.0,   # s between home re-placements; 0 = off
-        paged: Optional[PagedKVConfig] = None,  # page-table K/V residency
-        faults: Optional[FaultPlan] = None,     # seeded chaos (core/faults.py)
-        fence_timeout_s: Optional[float] = None,  # per-tick ticket.wait bound
-        shed: Optional[AdmissionController] = None,  # overload admission gate
-        watchdog_interval_s: float = 0.25,  # thread-liveness check cadence
-        watchdog_max_job_age_s: Optional[float] = None,  # stalled-job alarm
+        config: Optional[ServingConfig] = None,
+        **kwargs,
     ):
+        """`config` is the consolidated `ServingConfig` (serving/config.py).
+
+        Back-compat shim (DEPRECATED): the historical flat keyword surface
+        (`slots_per_layer=…, max_lanes=…, prefetch_depth=…`, ~30 knobs) is
+        still accepted and routed through `ServingConfig.from_kwargs`; an
+        int in `config`'s position is the old positional `slots_per_layer`.
+        `ctx` and `telemetry` stay runtime keywords in both styles (live
+        mesh / shared registry objects are not configuration). Mixing a
+        ServingConfig with legacy config kwargs is a TypeError."""
+        ctx = kwargs.pop("ctx", None) or ShardingCtx()
+        telemetry = kwargs.pop("telemetry", None)
+        if isinstance(config, int):  # legacy positional slots_per_layer
+            kwargs["slots_per_layer"] = config
+            config = None
+        if config is None:
+            config = ServingConfig.from_kwargs(**kwargs)
+        elif kwargs:
+            raise TypeError(
+                "RequestServer: pass either a ServingConfig or the legacy "
+                f"flat kwargs, not both (got config= plus {sorted(kwargs)})"
+            )
+        self.config = config
+        slots_per_layer = config.slots_per_layer
+        max_lanes = config.batching.max_lanes
+        max_prefill_batch = config.batching.max_prefill_batch
+        buckets = config.batching.buckets
+        cache_len = config.batching.cache_len
+        drop_expired = config.batching.drop_expired
+        serve_top_k = config.serve_top_k
+        host_quant = config.quant.host_quant
+        eviction = config.eviction
+        keep_prefill_logits = config.keep_prefill_logits
+        keep_decode_logits = config.keep_decode_logits
+        prefetch_depth = config.prefetch.depth
+        staging_buffers = config.prefetch.staging_buffers
+        fence_timeout_s = config.prefetch.fence_timeout_s
+        watchdog_interval_s = config.prefetch.watchdog_interval_s
+        watchdog_max_job_age_s = config.prefetch.watchdog_max_job_age_s
+        quantized_slots = config.quant.quantized_slots
+        scale_granularity = config.quant.scale_granularity
+        tier = config.quant.tier
+        spec_mode = config.spec.mode
+        spec_k = config.spec.k
+        sharded = config.parallel.sharded
+        rebalance_interval = config.parallel.rebalance_interval
+        paged = config.paged
+        faults = config.faults.plan
+        shed = config.faults.shed
+
         assert cfg.moe.enabled, "RequestServer targets MoE architectures"
         assert not cfg.enc_dec and cfg.block_kind == "attn", (
             "decode lanes currently support attention-family decoder-only archs"
@@ -214,7 +237,25 @@ class RequestServer:
         self.keep_prefill_logits = keep_prefill_logits
         self.keep_decode_logits = keep_decode_logits
 
-        self.scheduler = Scheduler(buckets=self.buckets)
+        # multi-tenant front door: WFQ (deficit round robin over per-tenant
+        # queues) replaces the flat queue, the shed gate splits per tenant,
+        # and each tenant's pin quota registers with the store. The
+        # single-tenant path (no tenants configured) keeps the exact
+        # pre-tenant objects so its behavior stays byte-identical.
+        self.tenants = config.tenants
+        self.multitenant = config.multitenant
+        self._shed_mt: Optional[TenantAdmission] = None
+        if self.multitenant:
+            self.scheduler: Scheduler = WFQScheduler(
+                self.tenants, quantum=config.wfq_quantum, buckets=self.buckets
+            )
+            if shed is not None:
+                self._shed_mt = TenantAdmission(shed, self.tenants)
+            for t in self.tenants:
+                if t.pin_quota < 1.0:
+                    self.store.set_pin_quota(t.name, t.pin_quota)
+        else:
+            self.scheduler = Scheduler(buckets=self.buckets)
         self.lanes = LaneTable(max_lanes)
         self.telemetry = telemetry or Telemetry()
         self._lock = threading.Lock()
@@ -416,6 +457,14 @@ class RequestServer:
     def admit(self, req: Request, now: float) -> None:
         req.t_queued = now
         self.telemetry.counter("requests_arrived").inc()
+        if self.multitenant:
+            # stamp the tenant's contract onto the request at admission:
+            # requests without their own SLO inherit the tenant default
+            # (deadline-driven scheduling/shedding key off it)
+            tcfg = self.config.tenant(req.tenant)
+            if tcfg is not None and req.slo_s is None:
+                req.slo_s = tcfg.default_slo_s
+            self.telemetry.tenant(req.tenant).counter("requests_arrived").inc()
         P = req.prompt_len
         if self.paged is not None and P + req.max_new_tokens > self.cache_len:
             # the page table cannot address positions past cache_len, so the
@@ -430,7 +479,26 @@ class RequestServer:
             with self._lock:
                 self._long_queue.append(req)
             return
-        if self.shed is not None:
+        if self._shed_mt is not None:
+            # tenant-aware shedding: the decision reads only THIS tenant's
+            # queue depth and service-time EMA, so one tenant's overload
+            # closes one tenant's gate — the others keep admitting
+            with self._lock:
+                depth = self.scheduler.pending_tenant(req.tenant) + sum(
+                    1 for r in self._long_queue if r.tenant == req.tenant
+                )
+            degraded = (
+                self.prefetch.degraded_fraction()
+                if self.prefetch is not None
+                else 0.0
+            )
+            slack = req.slack(now) if req.slo_s is not None else None
+            if self._shed_mt.should_shed(req.tenant, depth, slack, degraded):
+                self.telemetry.tenant(req.tenant).gauge(
+                    "est_queue_wait_s"
+                ).set(self._shed_mt.controller(req.tenant).est_wait_s(depth))
+                return self._reject(req, now, "overloaded")
+        elif self.shed is not None:
             # overload shedding: estimated back-of-queue wait vs this
             # request's remaining deadline slack. Degraded transfer shards
             # shrink the threshold — uploads running synchronously mean
@@ -459,6 +527,10 @@ class RequestServer:
         self.rejected.append(req)
         self.telemetry.counter("requests_rejected").inc()
         self.telemetry.counter(f"requests_rejected_{reason}").inc()
+        if self.multitenant:
+            tt = self.telemetry.tenant(req.tenant)
+            tt.counter("requests_rejected").inc()
+            tt.counter(f"requests_rejected_{reason}").inc()
 
     # ------------------------------------------------------------------
     # prefill: length-bucketed batch -> lanes
@@ -513,6 +585,8 @@ class RequestServer:
             r.emit(first)
             self.lane_tokens[lanes[i]] = first
             self.telemetry.histogram("ttft_s").observe(r.ttft_s)
+            if self.multitenant:
+                self.scheduler.debit(r.tenant, 1, now)
         if self.kv_pool is not None:
             # scatter each request's rope'd K/V into its lane's pages
             # host-side (allocating/spilling as needed), then install pos
@@ -697,6 +771,11 @@ class RequestServer:
                     req.decode_logits.append(logits_np[i, lane].copy())
                 self.lane_tokens[lane] = out_np[lane, i]
                 self.telemetry.counter("tokens_generated").inc()
+                if self.multitenant:
+                    self.telemetry.tenant(req.tenant).counter(
+                        "tokens_generated"
+                    ).inc()
+                    self.scheduler.debit(req.tenant, 1, now)
                 if req.finished():
                     self._finish(lane)
                     break
@@ -796,6 +875,14 @@ class RequestServer:
                 req.decode_logits.append(logits_np[lane].copy())
             self.lane_tokens[lane] = next_tok[lane]
             self.telemetry.counter("tokens_generated").inc()
+            if self.multitenant:
+                # per-tenant accounting: the generated token both marks the
+                # tenant's partition and debits its rate budget (WFQ defers
+                # the tenant's next prefill once the bucket runs dry)
+                self.telemetry.tenant(req.tenant).counter(
+                    "tokens_generated"
+                ).inc()
+                self.scheduler.debit(req.tenant, 1, now)
             if req.finished():
                 self._finish(lane)
 
@@ -823,13 +910,26 @@ class RequestServer:
         self.telemetry.counter("requests_completed").inc()
         self.telemetry.histogram("latency_s").observe(req.latency_s)
         self.telemetry.histogram("decode_tokens").observe(len(req.generated))
-        if req.slo_s is not None and req.latency_s > req.slo_s:
+        missed = req.slo_s is not None and req.latency_s > req.slo_s
+        if missed:
             self.telemetry.counter("deadline_miss").inc()
-        if self.shed is not None and req.t_prefill >= 0:
+        if self.multitenant:
+            tt = self.telemetry.tenant(req.tenant)
+            tt.counter("requests_completed").inc()
+            tt.histogram("latency_s").observe(req.latency_s)
+            tt.histogram("ttft_s").observe(req.ttft_s)
+            tt.histogram("decode_tokens").observe(len(req.generated))
+            if missed:
+                tt.counter("deadline_miss").inc()
+        service = now - req.t_prefill
+        if req.t_prefill >= 0:
             # prefill-to-done is the service time the back-of-queue wait
             # estimate multiplies by (queueing delay is what it predicts,
             # so it must not be part of the sample)
-            self.shed.observe(now - req.t_prefill)
+            if self._shed_mt is not None:
+                self._shed_mt.observe(req.tenant, service)
+            elif self.shed is not None:
+                self.shed.observe(service)
 
     # ------------------------------------------------------------------
     # chunked prefill: long prompts stream through the paged cache
@@ -941,6 +1041,8 @@ class RequestServer:
         req.t_first_token = time.perf_counter() - self._t0
         req.emit(first)
         self.telemetry.histogram("ttft_s").observe(req.ttft_s)
+        if self.multitenant:
+            self.scheduler.debit(req.tenant, 1, now)
         self.telemetry.counter("long_prefills_completed").inc()
         self._chunk_state = None
         if req.finished():
@@ -1231,4 +1333,35 @@ class RequestServer:
             ).value
         else:
             out["paged_kv"] = 0.0
+        return out
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant summary block (multi-tenant runs; {} otherwise):
+        arrivals/completions/rejections, token counts, latency percentiles,
+        and SLO attainment — the fraction of the tenant's ARRIVED requests
+        that completed within their deadline (sheds and misses both count
+        against it, which is what a tenant's contract actually measures).
+        Tenants without SLOs report attainment over completions alone."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name in self.telemetry.tenant_names():
+            tt = self.telemetry.tenant(name)
+            lat = tt.histogram("latency_s")
+            arrived = tt.counter("requests_arrived").value
+            completed = tt.counter("requests_completed").value
+            missed = tt.counter("deadline_miss").value
+            in_slo = completed - missed
+            out[name] = {
+                "arrived": arrived,
+                "completed": completed,
+                "rejected": tt.counter("requests_rejected").value,
+                "rejected_overloaded": tt.counter(
+                    "requests_rejected_overloaded"
+                ).value,
+                "deadline_miss": missed,
+                "tokens_generated": tt.counter("tokens_generated").value,
+                "p50_latency_s": lat.percentile(50),
+                "p95_latency_s": lat.percentile(95),
+                "slo_attainment": in_slo / arrived if arrived else 0.0,
+                "pinned_share": self.store.pinned_share(name),
+            }
         return out

@@ -93,6 +93,11 @@ class Telemetry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        # per-tenant partitions (multi-tenant serving): child registries
+        # keyed by tenant name, surfaced as a "tenants" block in snapshots.
+        # Created lazily so single-tenant snapshots stay byte-identical to
+        # the pre-tenant schema (no empty "tenants" key).
+        self._tenants: Dict[str, "Telemetry"] = {}
         self._t0 = time.perf_counter()
 
     def counter(self, name: str) -> Counter:
@@ -103,6 +108,16 @@ class Telemetry:
 
     def histogram(self, name: str) -> Histogram:
         return self._histograms.setdefault(name, Histogram())
+
+    def tenant(self, name: str) -> "Telemetry":
+        """Get-or-create the per-tenant child registry. The server writes
+        each request's metrics to the global registry AND to its tenant's
+        partition, so per-tenant SLO attainment / throughput / shed counts
+        are first-class in every snapshot."""
+        return self._tenants.setdefault(name, Telemetry())
+
+    def tenant_names(self) -> List[str]:
+        return sorted(self._tenants)
 
     def wall_s(self) -> float:
         return time.perf_counter() - self._t0
@@ -128,7 +143,7 @@ class Telemetry:
             self.counter(name + "_total").inc(dt)
 
     def snapshot(self) -> dict:
-        return {
+        snap = {
             "wall_s": self.wall_s(),
             "counters": {k: c.value for k, c in self._counters.items()},
             "gauges": {
@@ -136,6 +151,11 @@ class Telemetry:
             },
             "histograms": {k: h.summary() for k, h in self._histograms.items()},
         }
+        if self._tenants:
+            snap["tenants"] = {
+                name: t.snapshot() for name, t in sorted(self._tenants.items())
+            }
+        return snap
 
     def to_json(self, indent: Optional[int] = 2) -> str:
         return json.dumps(self.snapshot(), indent=indent)

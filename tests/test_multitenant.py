@@ -1,0 +1,331 @@
+"""Multi-tenant serving front door: WFQ scheduling (deficit round robin
+over per-tenant queues), generated-token rate budgets, per-tenant
+expert-pinning quotas, the tenant-aware admission split, and the
+end-to-end two-tenant server path (per-tenant telemetry + summary).
+
+The load-bearing guarantees pinned here:
+  * weighted fairness — long-run prefill service tracks tenant weight, not
+    offered load;
+  * starvation-freedom — a weight-1 tenant still gets batches while a
+    weight-100 tenant floods the queue;
+  * rate budgets defer, never drop — a throttled tenant's requests wait for
+    refill and are served after, not rejected;
+  * pin quotas provably cap any tenant's pinned-slot share at
+    floor(quota x S) per layer, refusals counted not raised;
+  * shed isolation — one tenant's overload latch sheds only that tenant.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.hash_fn import init_hash_fn
+from repro.core.hash_table import HashTable
+from repro.core.offload import ExpertStore
+from repro.models.transformer import init_params, n_moe_layers
+from repro.serving import (
+    AdmissionController,
+    Request,
+    RequestServer,
+    ServingConfig,
+    TenantAdmission,
+    TenantConfig,
+    WFQScheduler,
+    poisson_requests,
+)
+
+
+def _req(rid, tenant, plen=8, new=4, arrival=0.0, slo=None):
+    r = Request(
+        rid=rid, prompt=np.arange(plen, dtype=np.int32),
+        max_new_tokens=new, arrival_s=arrival, slo_s=slo, tenant=tenant,
+    )
+    r.table = HashTable(rid, np.zeros((1, 1, plen, 1), np.int32),
+                        np.ones((1, 1, plen, 1), np.float32))
+    return r
+
+
+def _drain(sched, now=0.0, max_batch=4, rounds=200):
+    """Pop prefill batches until the queues drain; returns the tenant of
+    each batch in service order."""
+    served = []
+    for _ in range(rounds):
+        batch, _bucket = sched.next_prefill_batch(now, max_batch)
+        if not batch:
+            break
+        assert len({r.tenant for r in batch}) == 1  # batches are single-tenant
+        served.append(batch[0].tenant)
+    return served
+
+
+# ---------------------------------------------------------------------------
+# WFQ / DRR units
+# ---------------------------------------------------------------------------
+
+
+def test_wfq_service_tracks_weight_not_load():
+    """3:1 weights, equal offered load => batch count ratio approaches 3:1
+    over a long horizon (DRR's long-run fairness bound)."""
+    sched = WFQScheduler(
+        [TenantConfig("heavy", weight=3.0), TenantConfig("light", weight=1.0)],
+        quantum=4.0, buckets=(8,), use_affinity=False,
+    )
+    for i in range(120):
+        sched.enqueue(_req(2 * i, "heavy"))
+        sched.enqueue(_req(2 * i + 1, "light"))
+    served = _drain(sched, max_batch=1, rounds=400)
+    # look at the first 80 batches — both tenants still backlogged there,
+    # so the ratio reflects the scheduler, not queue exhaustion
+    window = served[:80]
+    h, li = window.count("heavy"), window.count("light")
+    assert li > 0, "light tenant starved"
+    assert 2.0 <= h / li <= 4.0, (h, li)
+
+
+def test_wfq_starvation_free_under_flood():
+    """One light request behind a 100x-weight tenant's 200-request flood
+    must still be served within a bounded number of batches."""
+    sched = WFQScheduler(
+        [TenantConfig("whale", weight=100.0), TenantConfig("minnow")],
+        quantum=8.0, buckets=(8,), use_affinity=False,
+    )
+    for i in range(200):
+        sched.enqueue(_req(i, "whale"))
+    sched.enqueue(_req(999, "minnow"))
+    served = _drain(sched, max_batch=1, rounds=300)
+    assert "minnow" in served
+    # every round credits quantum x weight to the minnow too, so its
+    # (bucket 8 + 4 decode) = 12-cost head is covered within ~2 rounds
+    assert served.index("minnow") < 10
+
+
+def test_wfq_unknown_tenant_gets_default_contract():
+    sched = WFQScheduler([TenantConfig("known")], quantum=8.0, buckets=(8,))
+    sched.enqueue(_req(0, "walk-in"))
+    batch, bucket = sched.next_prefill_batch(0.0, 4)
+    assert [r.rid for r in batch] == [0] and bucket == 8
+    assert sched.tenants["walk-in"].cfg.weight == 1.0
+
+
+def test_wfq_rate_budget_defers_and_resumes():
+    """token_rate exhausts -> tenant is skipped (requests KEPT queued);
+    after refill the same requests are served. Never dropped."""
+    sched = WFQScheduler(
+        [TenantConfig("capped", token_rate=10.0, burst=10.0),
+         TenantConfig("free")],
+        quantum=64.0, buckets=(8,),
+    )
+    sched.enqueue(_req(0, "capped"))
+    sched.enqueue(_req(1, "free"))
+    # burn the whole budget (and then some): 30 generated tokens vs cap 10
+    sched.debit("capped", 30, now=0.0)
+    served_at_0 = []
+    for _ in range(4):
+        batch, _ = sched.next_prefill_batch(0.0, 4)
+        if not batch:
+            break
+        served_at_0.extend(r.tenant for r in batch)
+    assert served_at_0 == ["free"]
+    assert sched.pending_tenant("capped") == 1  # deferred, not dropped
+    # 2 seconds of refill at 10 tok/s pays back the 20-token debt
+    batch, _ = sched.next_prefill_batch(2.5, 4)
+    assert [r.tenant for r in batch] == ["capped"]
+
+
+def test_wfq_empty_queue_forfeits_deficit():
+    """The DRR no-banking rule: a tenant whose queue drains loses its
+    accumulated deficit and cannot burst ahead when it returns."""
+    sched = WFQScheduler(
+        [TenantConfig("a"), TenantConfig("b")], quantum=8.0, buckets=(8,),
+    )
+    sched.enqueue(_req(0, "a"))
+    _drain(sched)
+    # rounds with only b in the queue must not bank credit for a
+    for i in range(5):
+        sched.enqueue(_req(10 + i, "b"))
+    _drain(sched)
+    assert sched.tenants["a"].deficit == 0.0
+
+
+def test_wfq_single_tenant_batch_fills_same_bucket():
+    sched = WFQScheduler([TenantConfig("a")], quantum=1000.0, buckets=(8, 16))
+    for i in range(3):
+        sched.enqueue(_req(i, "a", plen=8))
+    sched.enqueue(_req(3, "a", plen=16))
+    batch, bucket = sched.next_prefill_batch(0.0, 4)
+    assert bucket == 8 and len(batch) == 3  # 16-bucket request left behind
+    batch, bucket = sched.next_prefill_batch(0.0, 4)
+    assert bucket == 16 and [r.rid for r in batch] == [3]
+
+
+# ---------------------------------------------------------------------------
+# pin quotas (core/offload.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=2,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    return cfg, params, hp
+
+
+def test_pin_quota_caps_share(tiny):
+    cfg, params, _ = tiny
+    store = ExpertStore(cfg, params, slots_per_layer=4)
+    store.set_pin_quota("greedy", 0.5)  # cap = floor(0.5 x 4) = 2 per layer
+    granted = store.pin_experts(0, [0, 1, 2, 3], tenant="greedy")
+    assert granted == {0, 1}
+    assert store.pinned_count(0, "greedy") == 2
+    assert store.pinned_share("greedy") <= 0.5  # the provable bound
+    assert store.stats.pin_quota_refusals == 2
+    # an unconstrained tenant can still pin the remaining slots... minus
+    # one: the pool always keeps at least one unpinned victim slot
+    granted2 = store.pin_experts(0, [2, 3], tenant="other")
+    assert 2 in granted2
+    assert store.pinned_share("greedy") <= 0.5
+
+
+def test_pin_quota_same_expert_not_double_attributed(tiny):
+    cfg, params, _ = tiny
+    store = ExpertStore(cfg, params, slots_per_layer=4)
+    store.set_pin_quota("t", 0.5)
+    assert store.pin_experts(0, [5], tenant="t") == {5}
+    # re-pinning your own expert is free (no second slot consumed)
+    assert store.pin_experts(0, [5], tenant="t") == {5}
+    assert store.pinned_count(0, "t") == 1
+    # another tenant cannot claim (or unpin) an expert pinned by t
+    assert store.pin_experts(0, [5], tenant="u") == set()
+    store.unpin_experts(0, [5], tenant="u")
+    assert store.pinned_count(0, "t") == 1
+    store.unpin_experts(0, [5], tenant="t")
+    assert store.pinned_count(0, "t") == 0
+
+
+def test_pin_quota_rejects_bad_fraction(tiny):
+    cfg, params, _ = tiny
+    store = ExpertStore(cfg, params, slots_per_layer=2)
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            store.set_pin_quota("t", bad)
+
+
+def test_legacy_untenanted_pins_unchanged(tiny):
+    """tenant=None keeps the pre-PR semantics: unattributed, unquota'd."""
+    cfg, params, _ = tiny
+    store = ExpertStore(cfg, params, slots_per_layer=4)
+    store.set_pin_quota("t", 0.25)
+    granted = store.pin_experts(0, [0, 1, 2])
+    assert granted == {0, 1, 2}
+    assert store.stats.pin_quota_refusals == 0
+
+
+# ---------------------------------------------------------------------------
+# tenant-aware admission split
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_admission_isolates_shedding():
+    ta = TenantAdmission(
+        AdmissionController(margin=0.5),
+        [TenantConfig("busy", default_slo_s=1.0),
+         TenantConfig("idle", default_slo_s=1.0)],
+    )
+    # busy tenant has slow history + deep queue -> sheds
+    ta.observe("busy", 2.0)
+    assert ta.should_shed("busy", depth=8, slack_s=1.0)
+    # idle tenant's controller saw nothing: independent EMA, admits
+    assert not ta.should_shed("idle", depth=8, slack_s=1.0)
+    assert ta.shedding  # the aggregate latch reports any tenant shedding
+
+
+def test_tenant_admission_applies_contract_slo():
+    ta = TenantAdmission(
+        AdmissionController(margin=0.5), [TenantConfig("t", default_slo_s=1.0)]
+    )
+    ta.observe("t", 2.0)
+    # request carries no SLO: the tenant's contract deadline still protects
+    assert ta.should_shed("t", depth=8, slack_s=None)
+    # unknown tenants clone the template (no default SLO -> never shed)
+    ta.observe("walkin", 2.0)
+    assert not ta.should_shed("walkin", depth=8, slack_s=None)
+
+
+def test_admission_clone_is_independent():
+    base = AdmissionController(margin=0.7, default_slo_s=3.0)
+    base.observe(5.0)
+    c = base.clone()
+    assert c.margin == 0.7 and c.default_slo_s == 3.0
+    assert c.service_s == 0.0 and not c.shedding  # fresh state
+    c.observe(1.0)
+    assert base.service_s == 5.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: two-tenant server
+# ---------------------------------------------------------------------------
+
+
+def test_two_tenant_server_end_to_end(tiny):
+    """Two tenants through the full server: WFQ scheduler engaged, tokens
+    debited, per-tenant telemetry partitions and summaries populated, and
+    both tenants complete all requests."""
+    cfg, params, hp = tiny
+    config = ServingConfig.from_kwargs(
+        slots_per_layer=cfg.moe.num_experts, max_lanes=2, max_prefill_batch=2,
+        buckets=(8, 16), cache_len=32,
+        tenants=(TenantConfig("paid", weight=4.0, pin_quota=0.5),
+                 TenantConfig("free", weight=1.0)),
+    )
+    srv = RequestServer(cfg, params, hp, config)
+    assert isinstance(srv.scheduler, WFQScheduler)
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i, name in enumerate(("paid", "free")):
+        reqs.extend(poisson_requests(
+            rng, 4, rate_rps=50.0, vocab_size=cfg.vocab_size,
+            prompt_len_range=(4, 12), max_new_range=(2, 4),
+            tenant=name, rid_base=100 * i,
+        ))
+    srv.run(reqs, realtime=False)
+    summary = srv.tenant_summary()
+    assert set(summary) == {"paid", "free"}
+    for name in ("paid", "free"):
+        blk = summary[name]
+        assert blk["arrived"] == 4 and blk["completed"] == 4
+        assert blk["tokens_generated"] > 0
+        assert blk["slo_attainment"] == 1.0  # no SLOs -> nothing missed
+    snap = srv.telemetry.snapshot()
+    assert set(snap["tenants"]) == {"paid", "free"}
+    # generated tokens were debited against the WFQ rate buckets
+    total = sum(summary[n]["tokens_generated"] for n in summary)
+    assert total == snap["counters"]["tokens_generated"]
+    srv.close()
+
+
+def test_tenant_default_slo_stamped_at_admission(tiny):
+    cfg, params, hp = tiny
+    config = ServingConfig.from_kwargs(
+        slots_per_layer=cfg.moe.num_experts, max_lanes=1, max_prefill_batch=1,
+        buckets=(8,), cache_len=16,
+        tenants=(TenantConfig("slo", default_slo_s=60.0),),
+    )
+    srv = RequestServer(cfg, params, hp, config)
+    r = _req(0, "slo", plen=8, new=2)
+    r.table = None
+    srv.build_request_table(r)
+    srv.admit(r, 0.0)
+    assert r.slo_s == 60.0  # contract deadline stamped at admission
+    srv.run([], realtime=False)
+    assert len(srv.completed) == 1
+    srv.close()

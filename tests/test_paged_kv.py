@@ -19,7 +19,6 @@ Three layers of guarantees:
     against the gather-based oracle, including spilled (-1) entries and
     windowed masking.
 """
-import argparse
 import dataclasses
 
 import jax
@@ -621,41 +620,45 @@ def test_flash_decode_paged_matches_ref(window):
 # ---------------------------------------------------------------------------
 
 
-def _args(**over):
-    base = dict(engine="server", kv_pages=0, page_size=16, prefill_chunk=0,
-                max_seq=0, seq=32, new_tokens=8, spec_mode="off", spec_k=4,
-                ep_shards=1, replicate_hot=0, rebalance_interval=0.0,
-                quantized_slots=False, int4_slots=False, tier_split=0.5,
-                quant_group=64)
-    base.update(over)
-    return argparse.Namespace(**base)
+def _args(flags: str):
+    """Parse through the REAL serve parser (launch.serve.build_parser), so
+    this test can never drift from the flag surface the way a hand-rolled
+    Namespace did — new flags get their argparse defaults automatically."""
+    from repro.launch.serve import build_parser
+
+    return build_parser().parse_args(["--engine", "server", *flags.split()])
 
 
 def test_validate_serve_args():
-    validate_serve_args(_args())                       # ring mode: fine
-    validate_serve_args(_args(kv_pages=8))             # paged: fine
-    validate_serve_args(_args(kv_pages=8, prefill_chunk=8, max_seq=256))
-    validate_serve_args(_args(int4_slots=True, quantized_slots=True))
+    validate_serve_args(_args(""))                     # ring mode: fine
+    validate_serve_args(_args("--kv-pages 8"))         # paged: fine
+    validate_serve_args(_args("--kv-pages 8 --prefill-chunk 8 --max-seq 256"))
+    validate_serve_args(_args("--int4-slots --quantized-slots"))
 
     bad = [
-        _args(int4_slots=True),                        # needs quantized slots
-        _args(int4_slots=True, quantized_slots=True,   # excludes replication
-              replicate_hot=1, ep_shards=4),
-        _args(int4_slots=True, quantized_slots=True, tier_split=0.0),
-        _args(int4_slots=True, quantized_slots=True, tier_split=1.5),
-        _args(int4_slots=True, quantized_slots=True, quant_group=0),
-        _args(prefill_chunk=8),                        # chunk needs pages
-        _args(max_seq=64),                             # max_seq needs pages
-        _args(kv_pages=8, engine="sida"),              # server-only flags
-        _args(kv_pages=8, max_seq=64),                 # max_seq < resident
-        _args(kv_pages=2, seq=64),                     # seq > bucket, no chunk
-        _args(kv_pages=8, seq=128, new_tokens=64),     # beyond addressable
-        _args(kv_pages=8, spec_mode="draft", spec_k=200),
-        _args(replicate_hot=1),                        # needs ep_shards > 1
-        _args(rebalance_interval=0.5),                 # needs ep_shards > 1
-        _args(replicate_hot=-1, ep_shards=4),          # negative
-        _args(rebalance_interval=0.5, ep_shards=4, engine="sida"),
+        "--int4-slots",                                # needs quantized slots
+        # int4 tiering excludes replication
+        "--int4-slots --quantized-slots --replicate-hot 1 --ep-shards 4",
+        "--int4-slots --quantized-slots --tier-split 0.0",
+        "--int4-slots --quantized-slots --tier-split 1.5",
+        "--int4-slots --quantized-slots --quant-group 0",
+        "--prefill-chunk 8",                           # chunk needs pages
+        "--max-seq 64",                                # max_seq needs pages
+        "--kv-pages 8 --engine sida",                  # server-only flags
+        "--kv-pages 8 --max-seq 64",                   # max_seq < resident
+        "--kv-pages 2 --seq 64",                       # seq > bucket, no chunk
+        "--kv-pages 8 --seq 128 --new-tokens 64",      # beyond addressable
+        "--kv-pages 8 --spec-mode draft --spec-k 200",
+        "--replicate-hot 1",                           # needs ep_shards > 1
+        "--rebalance-interval 0.5",                    # needs ep_shards > 1
+        "--replicate-hot -1 --ep-shards 4",            # negative
+        "--rebalance-interval 0.5 --ep-shards 4 --engine sida",
+        "--shed-margin 0.5",                           # shed needs a deadline
+        "--tenants a:weight=0",                        # bad tenant contract
+        "--tenants a:pin=0",
+        "--tenants a,a",                               # duplicate tenants
+        "--wfq-quantum 0",
     ]
-    for ns in bad:
+    for flags in bad:
         with pytest.raises(SystemExit, match="serve: invalid flags"):
-            validate_serve_args(ns)
+            validate_serve_args(_args(flags))

@@ -1,0 +1,285 @@
+"""ServingConfig API: the consolidated config object must be a pure
+re-packaging of RequestServer's historical kwargs surface and of the CLI
+flag namespace — same validation, same behaviour, byte-identical serving.
+
+Three contracts are pinned here:
+  * flag -> config round-trip: every CLI flag that maps 1:1 onto a
+    ServingConfig field (SERVE_FLAGS' `path`) lands on that field through
+    `build_parser()` + `ServingConfig.from_args`;
+  * kwargs shim: `ServingConfig.from_kwargs` covers exactly the legacy
+    keyword names (KWARG_PATHS), rejects unknown names with TypeError like
+    a real signature, and mixing `config=` with kwargs is an error;
+  * equivalence differential: a server built from flat kwargs and one built
+    from the equivalent ServingConfig produce byte-identical token streams
+    and identical telemetry counters on the same workload.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.hash_fn import init_hash_fn
+from repro.models.transformer import init_params, n_moe_layers
+from repro.serving import (
+    RequestServer,
+    ServingConfig,
+    TenantConfig,
+    parse_tenants,
+    poisson_requests,
+)
+from repro.serving.config import (
+    KWARG_PATHS,
+    SERVE_FLAGS,
+    ServingConfigError,
+    resolve_path,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# flag -> config round-trip
+# ---------------------------------------------------------------------------
+
+# every 1:1 flag with a non-default sample value; extra flags satisfy
+# cross-field validation (e.g. --rebalance-interval needs --ep-shards > 1)
+FLAG_SAMPLES = {
+    "--slots": (["--slots", "3"], 3),
+    "--eviction": (["--eviction", "lru"], "lru"),
+    "--prefetch-depth": (["--prefetch-depth", "2"], 2),
+    "--staging-buffers": (["--staging-buffers", "3"], 3),
+    "--host-quant": (["--host-quant", "int8"], "int8"),
+    "--quantized-slots": (["--quantized-slots"], True),
+    "--scale-granularity": (["--scale-granularity", "tensor"], "tensor"),
+    "--spec-mode": (["--spec-mode", "draft"], "draft"),
+    "--spec-k": (["--spec-k", "2"], 2),
+    "--rebalance-interval": (
+        ["--ep-shards", "2", "--rebalance-interval", "1.5"], 1.5),
+    "--lanes": (["--lanes", "2"], 2),
+    "--prefill-batch": (["--prefill-batch", "2"], 2),
+    "--drop-expired": (["--drop-expired"], True),
+    "--wfq-quantum": (["--wfq-quantum", "32"], 32.0),
+}
+
+
+def _parse(extra):
+    from repro.launch.serve import build_parser
+
+    return build_parser().parse_args(["--engine", "server", *extra])
+
+
+def test_flag_roundtrip_full_matrix():
+    """Every SERVE_FLAGS entry with a dotted path round-trips a non-default
+    CLI value onto exactly that ServingConfig field — and the test fails if
+    a new 1:1 flag is added without a sample here."""
+    pathful = {s.flag for s in SERVE_FLAGS if s.path is not None}
+    assert pathful == set(FLAG_SAMPLES), (
+        "add a FLAG_SAMPLES entry for every pathful SERVE_FLAGS spec"
+    )
+    for spec in SERVE_FLAGS:
+        if spec.path is None:
+            continue
+        extra, want = FLAG_SAMPLES[spec.flag]
+        cfg = ServingConfig.from_args(_parse(extra))
+        assert resolve_path(cfg, spec.path) == want, spec.flag
+
+
+def test_flag_defaults_build_valid_config():
+    cfg = ServingConfig.from_args(_parse([]))
+    assert cfg.slots_per_layer == 2
+    assert cfg.eviction == "fifo"
+    assert cfg.batching.buckets == (8, 16, 32)  # ladder from --seq 32
+    assert not cfg.multitenant and cfg.tenants == ()
+
+
+def test_composite_flags_build_subobjects():
+    cfg = ServingConfig.from_args(_parse(
+        ["--kv-pages", "16", "--page-size", "8", "--prefill-chunk", "16",
+         "--quantized-slots", "--int4-slots", "--tier-split", "0.5",
+         "--fault-plan", "upload:fail@1", "--fence-timeout", "0.5"]))
+    assert cfg.paged is not None and cfg.paged.kv_pages == 16
+    assert cfg.quant.tier is not None and cfg.quant.tier.int4_slots
+    assert cfg.faults.plan is not None
+    assert cfg.prefetch.fence_timeout_s == 0.5
+
+
+def test_tenant_flag_parses_registry():
+    cfg = ServingConfig.from_args(_parse(
+        ["--tenants", "paid:weight=4:pin=0.5,free:rate=200:burst=50"]))
+    assert cfg.multitenant and len(cfg.tenants) == 2
+    paid, free = cfg.tenants
+    assert (paid.name, paid.weight, paid.pin_quota) == ("paid", 4.0, 0.5)
+    assert (free.token_rate, free.burst) == (200.0, 50.0)
+    assert cfg.tenant("paid") is paid
+    assert cfg.tenant("nobody") is None
+
+
+def test_parse_tenants_grammar_errors():
+    for bad in ["a:weight=0", "a:pin=1.5", "a,a", "a:bogus=1",
+                "a:weight=x", ":weight=1", "a:weight"]:
+        with pytest.raises(ServingConfigError):
+            parse_tenants(bad)
+    assert parse_tenants("") == ()  # empty spec = single-tenant
+    t = parse_tenants("solo")[0]
+    assert t == TenantConfig(name="solo")  # all budgets default to unlimited
+
+
+# ---------------------------------------------------------------------------
+# kwargs shim
+# ---------------------------------------------------------------------------
+
+
+def test_from_kwargs_covers_legacy_surface():
+    # every legacy name resolves to a real field on a default config
+    cfg = ServingConfig()
+    for name, path in KWARG_PATHS.items():
+        resolve_path(cfg, path)  # raises AttributeError on drift
+    got = ServingConfig.from_kwargs(
+        slots_per_layer=5, max_lanes=3, buckets=[16, 8], prefetch_depth=2,
+        quantized_slots=True, drop_expired=True,
+    )
+    assert got.slots_per_layer == 5
+    assert got.batching.max_lanes == 3
+    assert got.batching.buckets == (8, 16)  # normalised like the old server
+    assert got.prefetch.depth == 2
+    assert got.quant.quantized_slots and got.batching.drop_expired
+
+
+def test_from_kwargs_rejects_unknown_names():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServingConfig.from_kwargs(slotz_per_layer=2)
+
+
+def test_server_rejects_config_plus_kwargs(tiny):
+    cfg, params, hp = tiny
+    with pytest.raises(TypeError, match="either"):
+        RequestServer(cfg, params, hp, ServingConfig(), max_lanes=2)
+
+
+# ---------------------------------------------------------------------------
+# equivalence differential
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("switch-base-8").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=2,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=100.0),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    hp = init_hash_fn(
+        jax.random.PRNGKey(1), cfg.d_model, n_moe_layers(cfg),
+        cfg.moe.num_experts, d_h=16,
+    )
+    return cfg, params, hp
+
+
+def _workload(cfg, n=6):
+    rng = np.random.default_rng(7)
+    return poisson_requests(
+        rng, n, rate_rps=50.0, vocab_size=cfg.vocab_size,
+        prompt_len_range=(4, 16), max_new_range=(2, 6),
+    )
+
+
+# counters fully determined by the workload (cache/tick counters like
+# expert_hits or h2d_bytes legitimately vary with hash-ahead thread
+# interleaving even between two runs of the SAME config — the repo-wide
+# invariant is that token streams don't)
+STABLE_COUNTERS = (
+    "requests_admitted", "requests_completed", "requests_rejected",
+    "tokens_generated",
+)
+
+
+def _run(cfg, params, hp, *, config=None, **kw):
+    if config is not None:
+        srv = RequestServer(cfg, params, hp, config)
+    else:
+        srv = RequestServer(cfg, params, hp, **kw)
+    srv.run(_workload(cfg), realtime=False)
+    tokens = {r.rid: list(r.generated) for r in srv.completed}
+    all_counters = srv.telemetry.snapshot()["counters"]
+    counters = {k: all_counters.get(k, 0) for k in STABLE_COUNTERS}
+    srv.close()
+    return tokens, counters, srv
+
+
+def test_kwargs_vs_config_byte_identical(tiny):
+    """The acceptance bar for the API redesign: a server configured through
+    the legacy flat kwargs and one configured through the equivalent
+    ServingConfig produce byte-identical token streams and identical
+    (non-timing) telemetry counters on the same workload."""
+    cfg, params, hp = tiny
+    kwargs = dict(
+        slots_per_layer=2, eviction="lru", max_lanes=2, max_prefill_batch=2,
+        buckets=(8, 16), cache_len=32,
+    )
+    config = ServingConfig.from_kwargs(**kwargs)
+    tok_a, cnt_a, srv_a = _run(cfg, params, hp, **kwargs)
+    tok_b, cnt_b, srv_b = _run(cfg, params, hp, config=config)
+    assert tok_a == tok_b  # byte-identical generated tokens per request
+    assert cnt_a == cnt_b
+    # single-tenant structural identity: no tenant partitions materialise
+    assert "tenants" not in srv_a.telemetry.snapshot()
+    assert "tenants" not in srv_b.telemetry.snapshot()
+    assert not srv_b.multitenant and srv_b.tenant_summary() == {}
+
+
+def test_degenerate_single_tenant_config_is_identity(tiny):
+    """A ServingConfig that names no tenants must run the exact pre-tenant
+    scheduler (plain Scheduler, no WFQ layer, no per-tenant shed clones)."""
+    from repro.serving.scheduler import Scheduler, WFQScheduler
+
+    cfg, params, hp = tiny
+    srv = RequestServer(cfg, params, hp, ServingConfig(
+        batching=dataclasses.replace(
+            ServingConfig().batching, max_lanes=2, max_prefill_batch=2,
+            buckets=(8, 16), cache_len=32),
+    ))
+    assert type(srv.scheduler) is Scheduler
+    assert not isinstance(srv.scheduler, WFQScheduler)
+    assert srv._shed_mt is None
+    srv.close()
+
+
+def test_legacy_positional_slots_still_works(tiny):
+    cfg, params, hp = tiny
+    srv = RequestServer(cfg, params, hp, 3)  # historical 4th positional
+    assert srv.config.slots_per_layer == 3
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# the public surface itself is snapshot-checked
+# ---------------------------------------------------------------------------
+
+
+def test_api_snapshot_is_current():
+    """tools/check_api.py against the committed snapshot — the same gate CI
+    runs, so a local `pytest` catches API drift before push."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_api.py")],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+             "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_readme_flag_table_is_current():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "gen_flags.py"),
+         "--check"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+             "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Public-API snapshot check for `repro.serving` (CI step).
+
+The serving package's public surface — `repro.serving.__all__`, the kind of
+each exported symbol, every `ServingConfig`/`TenantConfig` field (sub-configs
+flattened to dotted paths), and the CLI flag -> config-path table
+(`SERVE_FLAGS`) — is snapshotted in tools/api_snapshot.json. CI diffs the
+live surface against the snapshot, so renaming/removing an export or config
+field, or silently changing a flag's destination, fails the build until the
+change is made deliberately:
+
+    python tools/check_api.py            # verify (exit 1 on drift)
+    python tools/check_api.py --update   # regenerate the snapshot
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import json
+import os
+import sys
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "api_snapshot.json")
+
+
+def symbol_kind(obj) -> str:
+    if dataclasses.is_dataclass(obj) and inspect.isclass(obj):
+        return "dataclass"
+    if inspect.isclass(obj):
+        return "class"
+    if inspect.isfunction(obj):
+        return "function"
+    return "constant"
+
+
+def config_fields(cls, prefix: str = "") -> list:
+    """Flatten a config dataclass's fields to dotted paths, recursing into
+    dataclass-typed sub-configs (BatchingConfig etc.) one level deep."""
+    paths = []
+    for f in dataclasses.fields(cls):
+        sub = f.default_factory if f.default_factory is not dataclasses.MISSING else None  # noqa: E501
+        if sub is not None and dataclasses.is_dataclass(sub):
+            paths += config_fields(sub, prefix=f"{prefix}{f.name}.")
+        else:
+            paths.append(f"{prefix}{f.name}")
+    return paths
+
+
+def current_surface() -> dict:
+    import repro.serving as serving
+    from repro.serving.config import SERVE_FLAGS, ServingConfig, TenantConfig
+
+    return {
+        "all": {name: symbol_kind(getattr(serving, name))
+                for name in sorted(serving.__all__)},
+        "serving_config_fields": sorted(config_fields(ServingConfig)),
+        "tenant_config_fields": sorted(config_fields(TenantConfig)),
+        "serve_flags": {spec.flag: spec.path for spec in SERVE_FLAGS},
+    }
+
+
+def main(argv: list) -> int:
+    surface = current_surface()
+    if "--update" in argv:
+        with open(SNAPSHOT, "w", encoding="utf-8") as f:
+            json.dump(surface, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {SNAPSHOT}")
+        return 0
+    if not os.path.exists(SNAPSHOT):
+        print(f"ERROR: {SNAPSHOT} missing — run `python tools/check_api.py "
+              "--update` and commit it")
+        return 1
+    with open(SNAPSHOT, encoding="utf-8") as f:
+        want = json.load(f)
+    errors = []
+    for section in sorted(set(want) | set(surface)):
+        got_s, want_s = surface.get(section), want.get(section)
+        if got_s == want_s:
+            continue
+        if isinstance(want_s, dict) and isinstance(got_s, dict):
+            for key in sorted(set(want_s) | set(got_s)):
+                if key not in got_s:
+                    errors.append(f"{section}: {key!r} removed from API")
+                elif key not in want_s:
+                    errors.append(f"{section}: {key!r} added (not in snapshot)")
+                elif got_s[key] != want_s[key]:
+                    errors.append(f"{section}: {key!r} changed "
+                                  f"{want_s[key]!r} -> {got_s[key]!r}")
+        else:
+            missing = sorted(set(want_s or []) - set(got_s or []))
+            added = sorted(set(got_s or []) - set(want_s or []))
+            for m in missing:
+                errors.append(f"{section}: {m!r} removed from API")
+            for a in added:
+                errors.append(f"{section}: {a!r} added (not in snapshot)")
+    for e in errors:
+        print(f"ERROR: {e}")
+    if errors:
+        print(f"API drift vs {SNAPSHOT} ({len(errors)} change(s)); if "
+              "intentional: python tools/check_api.py --update")
+        return 1
+    print(f"repro.serving API matches snapshot "
+          f"({len(surface['all'])} exports, "
+          f"{len(surface['serving_config_fields'])} config fields, "
+          f"{len(surface['serve_flags'])} flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Regenerate the README serve-flag table from the actual CLI (CI step).
+
+The table between `<!-- serve-flags:begin -->` and `<!-- serve-flags:end -->`
+in README.md is rendered from `repro.launch.serve.build_parser()` — which in
+turn registers every serving knob from `SERVE_FLAGS` (serving/config.py). One
+declaration drives argparse, `ServingConfig.from_args`, and the docs, so a
+flag added or changed in code cannot drift from the README:
+
+    PYTHONPATH=src python tools/gen_flags.py            # rewrite README.md
+    PYTHONPATH=src python tools/gen_flags.py --check    # CI: exit 1 on drift
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+README = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                      "README.md")
+BEGIN, END = "<!-- serve-flags:begin -->", "<!-- serve-flags:end -->"
+MARK_RE = re.compile(re.escape(BEGIN) + r".*?" + re.escape(END), re.DOTALL)
+
+
+def fmt_default(action: argparse.Action) -> str:
+    if isinstance(action, (argparse._StoreTrueAction, argparse._StoreFalseAction)):
+        return "off"
+    if action.default in (None, ""):
+        return "none"
+    return f"`{action.default}`"
+
+
+def render_table() -> str:
+    from repro.launch.serve import build_parser
+
+    rows = ["| flag | default | meaning |", "|---|---|---|"]
+    for action in build_parser()._actions:
+        if not action.option_strings or action.option_strings[0] in ("-h", "--help"):
+            continue
+        help_text = " ".join((action.help or "").split())
+        # escape the column separator so grammar strings with | survive
+        help_text = help_text.replace("|", "\\|")
+        rows.append(f"| `{action.option_strings[0]}` | "
+                    f"{fmt_default(action)} | {help_text} |")
+    return "\n".join(rows)
+
+
+def main(argv: list) -> int:
+    with open(README, encoding="utf-8") as f:
+        text = f.read()
+    if BEGIN not in text or END not in text:
+        print(f"ERROR: {README} is missing the {BEGIN} / {END} markers")
+        return 1
+    block = f"{BEGIN}\n{render_table()}\n{END}"
+    updated = MARK_RE.sub(lambda _: block, text)
+    if "--check" in argv:
+        if updated != text:
+            print("ERROR: README serve-flag table is stale — regenerate with "
+                  "`PYTHONPATH=src python tools/gen_flags.py`")
+            return 1
+        print("README serve-flag table matches build_parser()")
+        return 0
+    if updated == text:
+        print("README serve-flag table already up to date")
+        return 0
+    with open(README, "w", encoding="utf-8") as f:
+        f.write(updated)
+    print(f"rewrote serve-flag table in {README}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
